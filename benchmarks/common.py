@@ -1,0 +1,106 @@
+"""Shared harness for the paper-table benchmarks.
+
+The container is offline and CPU-only, so the paper's C4/SlimPajama LLaMA
+runs are reproduced at CPU scale: a reduced LLaMA on the synthetic bigram
+corpus (repro.data.synthetic), same optimizer matrix, same metrics.
+``final loss - entropy floor`` plays the role of validation PPL: optimizer
+orderings and gap-reductions are the claims under test (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import make_optimizer
+from repro.core.metrics import collect_projectors, subspace_overlap
+from repro.data.synthetic import SyntheticDataConfig, SyntheticDataset
+from repro.models import build_model
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def bench_model(d_model: int = 96, n_layers: int = 2, vocab: int = 512):
+    cfg = get_config("llama3-8b", smoke=True).with_(
+        dtype=jnp.float32, d_model=d_model, n_layers=n_layers,
+        n_heads=4, head_dim=d_model // 4, n_kv_heads=2,
+        d_ff=2 * d_model, vocab_size=vocab,
+    )
+    return cfg, build_model(cfg)
+
+
+def bench_data(cfg, seq=64, batch=8, seed=3, dist="bigram"):
+    return SyntheticDataset(
+        SyntheticDataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+            seed=seed, dist=dist,
+        )
+    )
+
+
+def train_once(
+    model,
+    data,
+    opt_name: str,
+    steps: int = 150,
+    lr: float = 2e-3,
+    rank: int = 8,
+    tau: int = 20,
+    seed: int = 0,
+    track_overlap: bool = False,
+    **opt_kw,
+) -> Dict:
+    params = model.init(jax.random.PRNGKey(seed))
+    kw = dict(lr=lr)
+    if opt_name != "adam":
+        kw.update(rank=rank, tau=tau, alpha=1.0)
+    kw.update(opt_kw)
+    opt = make_optimizer(opt_name, params, **kw)
+    state = TrainState(params, opt.init(params))
+    fns = make_train_step(model, opt, donate=False)
+    losses: List[float] = []
+    overlaps: List[float] = []
+    prev_proj = None
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = data.batch_at(step)
+        if opt_name != "adam" and step % tau == 0:
+            state, m = fns["jit_refresh_step"](state, batch)
+            if track_overlap:
+                projs = collect_projectors(state.opt_state, opt.specs)
+                cur = {k: np.asarray(v) for k, v in projs.items()}
+                if prev_proj is not None:
+                    vals = [
+                        float(np.mean(np.asarray(subspace_overlap(
+                            jnp.asarray(prev_proj[k]), jnp.asarray(cur[k])
+                        ))))
+                        for k in cur
+                    ]
+                    overlaps.append(float(np.mean(vals)))
+                prev_proj = cur
+        else:
+            state, m = fns["jit_step"](state, batch)
+        losses.append(float(m["loss"]))
+    wall = time.perf_counter() - t0
+    return {
+        "losses": losses,
+        "final_loss": float(np.mean(losses[-10:])),
+        "us_per_step": wall / steps * 1e6,
+        "overlaps": overlaps,
+        "state": state,
+        "optimizer": opt,
+    }
+
+
+def gap_reduction(full: float, base: float, ours: float) -> Optional[float]:
+    """Paper's 'PPL gap reduction': (base-ours)/(base-full) when base>full."""
+    if base <= full:
+        return None
+    return (base - ours) / (base - full) * 100.0

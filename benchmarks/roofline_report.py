@@ -1,0 +1,79 @@
+"""Assemble the §Roofline table from the dry-run artifacts
+(experiments/dryrun/*.json) and emit markdown for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+from repro.roofline import hw
+
+ART_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_reports(mesh: str = "single", variant: Optional[str] = None):
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            rep = json.load(f)
+        if rep.get("mesh") != mesh:
+            continue
+        v = rep.get("extra", {}).get("variant", "baseline")
+        if variant is not None and v != variant:
+            continue
+        if variant is None and v != "baseline":
+            continue
+        out.append(rep)
+    return out
+
+
+def roofline_fraction(rep: Dict) -> float:
+    useful_t = rep["model_flops"] / rep["n_chips"] / hw.PEAK_FLOPS_BF16
+    traffic_t = (
+        rep["extra"].get("model_bytes", 0.0) / rep["n_chips"] / hw.HBM_BW
+    )
+    bound = max(
+        rep["compute_term_s"], rep["memory_term_s"], rep["collective_term_s"]
+    )
+    return max(useful_t, traffic_t) / bound if bound > 0 else 0.0
+
+
+def markdown_table(reports: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "bottleneck | useful_ratio | roofline_frac | note |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in reports:
+        frac = roofline_fraction(r)
+        note = ""
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.4f} | "
+            f"{r['memory_term_s']:.4f} | {r['collective_term_s']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.3f} | {frac:.3f} | "
+            f"{note} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    reports = load_reports("single")
+    for r in reports:
+        frac = roofline_fraction(r)
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["compute_term_s"], r["memory_term_s"],
+                r["collective_term_s"]) * 1e6,
+            f"bottleneck={r['bottleneck']} frac={frac:.3f} "
+            f"useful={r['useful_ratio']:.3f}",
+        ))
+    multi = load_reports("multi")
+    rows.append((
+        "roofline/multi_pod_cells_compiled", 0.0,
+        f"{len(multi)} cells on 2x16x16",
+    ))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one function per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument(
+        "--only", default="",
+        help="comma list: table1,table2,table3,table4,fig2,fig3,fig4,"
+             "kernels,roofline",
+    )
+    args = parser.parse_args()
+
+    from benchmarks import figures, kernels_micro, roofline_report, tables
+
+    suites = {
+        "table1": tables.table1,
+        "table2": tables.table2,
+        "table3": tables.table3,
+        "table4": tables.table4,
+        "fig2": figures.fig2,
+        "fig3": figures.fig3,
+        "fig4": figures.fig4,
+        "kernels": kernels_micro.run,
+        "roofline": roofline_report.run,
+    }
+    selected = (
+        [s.strip() for s in args.only.split(",") if s.strip()]
+        if args.only else list(suites)
+    )
+    print("name,us_per_call,derived")
+    failed = []
+    for name in selected:
+        try:
+            for row_name, us, derived in suites[name]():
+                print(f"{row_name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    if failed:
+        for name, err in failed:
+            print(f"{name},nan,FAILED {err}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper tables 1-4 at CPU scale (see common.py for the methodology note).
+
+table1: optimizer matrix -- Full Adam vs GaLore(+SARA) x
+        {Adam, Adafactor, Adam-mini, 8-bit Adam} and Fira(+SARA).
+table2: 'scale-up' proxy -- a deeper/wider model, full vs galore vs sara.
+table3: additional baselines -- GoLore, online-PCA vs SARA.
+table4: second dataset (zipf 'SlimPajama' analog).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (
+    Row, bench_data, bench_model, gap_reduction, train_once
+)
+
+STEPS = 150
+
+
+def _matrix(names, steps=STEPS, d_model=96, n_layers=2, dist="bigram",
+            seq=64, batch=8) -> List[Row]:
+    cfg, model = bench_model(d_model=d_model, n_layers=n_layers)
+    data = bench_data(cfg, dist=dist, seq=seq, batch=batch)
+    floor = data.bigram_entropy() if dist == "bigram" else float("nan")
+    results = {}
+    rows: List[Row] = []
+    for name in names:
+        out = train_once(model, data, name, steps=steps)
+        results[name] = out
+        rows.append((
+            name, out["us_per_step"],
+            f"final_loss={out['final_loss']:.4f} floor={floor:.4f}",
+        ))
+    full = results.get("adam")
+    if full:
+        for base, ours in (
+            ("galore-adam", "galore-sara-adam"),
+            ("fira-adam", "fira-sara-adam"),
+            ("galore-adafactor", "galore-sara-adafactor"),
+            ("galore-adam-mini", "galore-sara-adam-mini"),
+            ("galore-adam8bit", "galore-sara-adam8bit"),
+            ("golore-adam", "galore-sara-adam"),
+            ("online-pca-adam", "galore-sara-adam"),
+        ):
+            if base in results and ours in results:
+                red = gap_reduction(
+                    full["final_loss"], results[base]["final_loss"],
+                    results[ours]["final_loss"],
+                )
+                rows.append((
+                    f"gap_reduction[{ours} vs {base}]", 0.0,
+                    f"{red:.1f}%" if red is not None else "base<=full",
+                ))
+    return rows
+
+
+def table1() -> List[Row]:
+    names = [
+        "adam",
+        "galore-adam", "galore-sara-adam",
+        "fira-adam", "fira-sara-adam",
+        "galore-adafactor", "galore-sara-adafactor",
+        "galore-adam-mini", "galore-sara-adam-mini",
+        "galore-adam8bit", "galore-sara-adam8bit",
+    ]
+    return [("table1/" + n, u, d) for n, u, d in _matrix(names)]
+
+
+def table2() -> List[Row]:
+    """Scale proxy: 4 layers, d=128 (the 1.1B row of the paper)."""
+    names = ["adam", "galore-adam", "galore-sara-adam"]
+    rows = _matrix(names, d_model=128, n_layers=4, steps=120)
+    return [("table2/" + n, u, d) for n, u, d in rows]
+
+
+def table3() -> List[Row]:
+    names = [
+        "adam", "golore-adam", "online-pca-adam", "galore-sara-adam",
+    ]
+    return [("table3/" + n, u, d) for n, u, d in _matrix(names)]
+
+
+def table4() -> List[Row]:
+    names = ["adam", "galore-adam", "galore-sara-adam"]
+    rows = _matrix(names, dist="zipf")
+    return [("table4/" + n, u, d) for n, u, d in rows]

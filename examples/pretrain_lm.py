@@ -1,0 +1,94 @@
+"""End-to-end pretraining driver.
+
+Presets:
+  cpu-small  (default) -- ~10M-param LLaMA, 200 steps; minutes on this CPU
+                          container.  Demonstrates the full production path:
+                          checkpoints, monitors, staggered SARA refresh.
+  llama-60m             -- the paper's LLaMA-60M configuration (Table 1 row):
+                          intended for a real accelerator; runs on CPU too,
+                          just slowly.
+
+    PYTHONPATH=src python examples/pretrain_lm.py --preset cpu-small \
+        --optimizer galore-sara-adam --steps 200
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import make_optimizer
+from repro.core.schedules import cosine_with_warmup
+from repro.data.synthetic import SyntheticDataConfig, SyntheticDataset
+from repro.models import build_model, count_params
+from repro.train.loop import train_loop
+from repro.train.step import make_train_step
+
+PRESETS = {
+    # ~10M params
+    "cpu-small": dict(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=688, vocab_size=2048, seq=128, batch=8, rank=32, tau=50,
+    ),
+    # the paper's LLaMA-60M (vocab reduced to the synthetic corpus size)
+    "llama-60m": dict(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+        d_ff=1376, vocab_size=32100, seq=256, batch=32, rank=128, tau=200,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="cpu-small", choices=list(PRESETS))
+    ap.add_argument("--optimizer", default="galore-sara-adam")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_pretrain")
+    ap.add_argument("--refresh-groups", type=int, default=1)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        arch_id=f"llama-{args.preset}", family="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], head_dim=p["head_dim"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"], dtype=jnp.float32,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[pretrain] {count_params(params) / 1e6:.1f}M params, "
+          f"optimizer={args.optimizer}")
+
+    kw = dict(
+        lr=args.lr,
+        lr_schedule=cosine_with_warmup(args.lr, args.warmup, args.steps),
+        grad_clip_norm=1.0,
+    )
+    if args.optimizer != "adam":
+        kw.update(rank=p["rank"], tau=p["tau"], alpha=0.25,
+                  refresh_groups=args.refresh_groups)
+    opt = make_optimizer(args.optimizer, params, **kw)
+
+    data = SyntheticDataset(SyntheticDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=p["seq"], global_batch=p["batch"]
+    ))
+    tc = TrainConfig(
+        total_steps=args.steps, checkpoint_every=max(args.steps // 4, 1),
+        checkpoint_dir=args.ckpt_dir, async_checkpoint=True,
+    )
+    fns = make_train_step(model, opt, donate=False)
+    res = train_loop(
+        model, opt, data, tc, fns, log_every=max(args.steps // 10, 1),
+        track_subspace=(args.optimizer != "adam"),
+    )
+    print(f"[pretrain] final loss {res.losses[-1]:.4f} "
+          f"(floor {data.bigram_entropy():.4f})")
+    if hasattr(res, "subspace"):
+        for name, vals in list(res.subspace.summary().items())[:3]:
+            print(f"[subspace] {name}: {vals}")
+
+
+if __name__ == "__main__":
+    main()

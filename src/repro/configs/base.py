@@ -1,0 +1,140 @@
+"""Config dataclasses shared by all architectures, shapes, and launchers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    mlp_kind: str = "swiglu"  # swiglu | squared_relu | none
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    router_aux_weight: float = 0.01
+    moe_capacity_factor: float = 1.25  # EP dispatch capacity (local path is dropless)
+
+    # --- SSM (mamba2 / hymba) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+
+    # --- hybrid (hymba) ---
+    attn_window: int = 0  # 0 = global attention; >0 = sliding window
+
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+
+    # --- VLM (llava) ---
+    n_patches: int = 0  # patch-embedding prefix length for train shape
+
+    # --- numerics / impl ---
+    dtype: Any = jnp.bfloat16  # activation/compute dtype
+    param_dtype: Any = jnp.float32
+    attn_impl: str = "auto"  # auto | exact | chunked | pallas
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 1024
+    loss_chunk: int = 2048  # tokens per chunked-xent block
+    remat: str = "block"  # none | block
+    scan_layers: bool = True
+    scan_unroll: int = 1  # lax.scan unroll for layer loops (dry-run cost probe)
+    seq_shard_activations: bool = False  # Megatron-SP boundary sharding
+    ssm_head_tp: bool = False  # shard SSD heads over `model` (perf iter)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the assigned shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh / runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # (pod, data, model) when multi_pod, else (data, model)
+    shape: Optional[Tuple[int, ...]] = None
+
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    def default_shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "galore-sara-adam"
+    rank: int = 128
+    tau: int = 200
+    alpha: float = 0.25
+    lr: float = 0.01
+    warmup_steps: int = 1000
+    total_steps: int = 10000
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 1.0
+    seed: int = 0
+    # distributed-optimization knobs
+    dp_gradient_compression: bool = False  # project-then-reduce (beyond paper)
+    refresh_groups: int = 1  # staggered projector refresh
+    momentum_carry: str = "keep"
+    svd_backend: str = "exact"
+    microbatch: int = 0  # 0 = no gradient accumulation
+    # fault tolerance
+    checkpoint_every: int = 500
+    keep_checkpoints: int = 3
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True

@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+``input_specs`` returns exactly what the dry-run lowers against: weak-type-
+correct ShapeDtypeStructs, no device allocation.  Token counts follow the
+assignment; for the VLM the patch prefix + text tokens sum to the assigned
+seq_len; for audio the encoder frames are the stubbed 1500-frame mel output
+and the assigned seq_len is the decoder length.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# VLM patch-prefix length per shape (anyres tiling: base 24x24 grid = 576;
+# prefill_32k uses the full 4-tile + base anyres grid = 2880).
+VLM_PATCHES = {"train_4k": 576, "prefill_32k": 2880}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        p = VLM_PATCHES.get(shape.name, 576)
+        return {
+            "tokens": _sds((b, s - p), jnp.int32),
+            "labels": _sds((b, s - p), jnp.int32),
+            "patch_embeds": _sds((b, p, cfg.d_model), jnp.bfloat16),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+            "frame_embeds": _sds((b, cfg.enc_frames, cfg.d_model),
+                                 jnp.bfloat16),
+        }
+    return {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    return {"token": _sds((shape.global_batch, 1), jnp.int32)}
+
+
+def decode_cache_specs(model, shape: ShapeConfig):
+    """ShapeDtypeStruct skeleton of the decode cache at ``seq_len`` capacity."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )
+
+
+def concrete_train_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Small *concrete* batch for smoke tests (reduced configs only)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    out = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        p = max(4, min(8, seq // 4))
+        out["tokens"] = tokens[:, : seq - p]
+        out["labels"] = tokens[:, : seq - p]
+        out["patch_embeds"] = (
+            jax.random.normal(k2, (batch, p, cfg.d_model)) * 0.1
+        ).astype(cfg.dtype)
+    if cfg.family == "audio":
+        out["frame_embeds"] = (
+            jax.random.normal(k2, (batch, cfg.enc_frames, cfg.d_model)) * 0.1
+        ).astype(cfg.dtype)
+    return out

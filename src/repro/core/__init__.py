@@ -1,0 +1,34 @@
+"""repro.core -- the paper's contribution: SARA low-rank optimization."""
+from repro.core.api import OptimizerConfig, make_optimizer, parse_name
+from repro.core.lowrank import (
+    LowRankOptimizer,
+    LowRankOptState,
+    apply_updates,
+    make_lowrank_optimizer,
+    optimizer_memory_report,
+    state_memory_bytes,
+)
+from repro.core.metrics import (
+    OverlapTracker,
+    collect_projectors,
+    effective_rank,
+    subspace_overlap,
+    update_singular_spectrum,
+)
+
+__all__ = [
+    "OptimizerConfig",
+    "make_optimizer",
+    "parse_name",
+    "LowRankOptimizer",
+    "LowRankOptState",
+    "apply_updates",
+    "make_lowrank_optimizer",
+    "optimizer_memory_report",
+    "state_memory_bytes",
+    "OverlapTracker",
+    "collect_projectors",
+    "effective_rank",
+    "subspace_overlap",
+    "update_singular_spectrum",
+]

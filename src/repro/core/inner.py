@@ -1,0 +1,286 @@
+"""Inner stateful optimizers that run *inside* the low-rank subspace.
+
+The paper stresses that low-rank projection composes with any stateful
+optimizer; Table 1 exercises Adam, Adafactor, Adam-mini, and 8-bit Adam, and
+the theory (Thm 3.4) is stated for momentum SGD.  We implement all five as
+pure-functional ``(init, update)`` pairs operating on a single tensor of any
+shape (the projected gradient ``R`` for low-rank leaves, or the raw gradient
+for full-rank leaves).  ``update`` returns an *ascent direction*; the wrapper
+applies sign, learning rate, and the GaLore ``alpha`` scale.
+
+``step`` is 1-indexed (first update sees step=1) for bias correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class InnerOptimizer(NamedTuple):
+    name: str
+    init: Callable[[jax.Array], Any]
+    update: Callable[[jax.Array, Any, jax.Array], Tuple[jax.Array, Any]]
+    # Rough per-element optimizer-state memory multiplier (for accounting).
+    state_bytes_per_param: float = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> InnerOptimizer:
+    def init(x):
+        z = jnp.zeros(x.shape, jnp.float32)
+        return AdamState(m=z, v=z)
+
+    def update(g, state, step):
+        g = g.astype(jnp.float32)
+        m = b1 * state.m + (1.0 - b1) * g
+        v = b2 * state.v + (1.0 - b2) * g * g
+        t = step.astype(jnp.float32)
+        mhat = m / (1.0 - b1**t)
+        vhat = v / (1.0 - b2**t)
+        direction = mhat / (jnp.sqrt(vhat) + eps)
+        return direction, AdamState(m=m, v=v)
+
+    return InnerOptimizer("adam", init, update, state_bytes_per_param=8.0)
+
+
+# ---------------------------------------------------------------------------
+# Momentum SGD (the optimizer of Theorem 3.4 / GoLore's analysis)
+# ---------------------------------------------------------------------------
+
+
+class MSGDState(NamedTuple):
+    m: jax.Array
+
+
+def msgd(b1: float = 0.9) -> InnerOptimizer:
+    """M_t = (1-b1) M_{t-1} + b1 G_t  (the paper/GoLore's convention)."""
+
+    def init(x):
+        return MSGDState(m=jnp.zeros(x.shape, jnp.float32))
+
+    def update(g, state, step):
+        del step
+        m = (1.0 - b1) * state.m + b1 * g.astype(jnp.float32)
+        return m, MSGDState(m=m)
+
+    return InnerOptimizer("msgd", init, update, state_bytes_per_param=4.0)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; paper's Table-1 variant)
+# ---------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    m: jax.Array  # first moment (paper runs Adafactor with b1=0.9)
+    vr: jax.Array  # row statistic  (..., rows)    [2-D+ leaves]
+    vc: jax.Array  # col statistic  (..., cols)
+    v: jax.Array  # unfactored fallback for 0/1-D leaves (shape of x or (1,))
+
+
+def adafactor(
+    b1: float = 0.9,
+    decay_pow: float = 0.8,
+    eps1: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> InnerOptimizer:
+    """Shazeer-Stern Adafactor with beta2(t) = 1 - t^-decay_pow."""
+
+    def init(x):
+        if x.ndim >= 2:
+            vr = jnp.zeros(x.shape[:-1], jnp.float32)
+            vc = jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)
+            v = jnp.zeros((1,), jnp.float32)
+        else:
+            vr = jnp.zeros((1,), jnp.float32)
+            vc = jnp.zeros((1,), jnp.float32)
+            v = jnp.zeros(x.shape, jnp.float32)
+        return AdafactorState(m=jnp.zeros(x.shape, jnp.float32), vr=vr, vc=vc, v=v)
+
+    def update(g, state, step):
+        g = g.astype(jnp.float32)
+        t = step.astype(jnp.float32)
+        b2t = 1.0 - t ** (-decay_pow)
+        g2 = g * g + eps1
+        if g.ndim >= 2:
+            vr = b2t * state.vr + (1.0 - b2t) * jnp.mean(g2, axis=-1)
+            vc = b2t * state.vc + (1.0 - b2t) * jnp.mean(g2, axis=-2)
+            # V-hat = outer(vr, vc) / mean(vr): rank-1 reconstruction.
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            vhat = (
+                vr[..., :, None] * vc[..., None, :] / (denom[..., None] + 1e-38)
+            )
+            u = g / (jnp.sqrt(vhat) + 1e-38)
+            v = state.v
+        else:
+            v = b2t * state.v + (1.0 - b2t) * g2
+            u = g / (jnp.sqrt(v) + 1e-38)
+            vr, vc = state.vr, state.vc
+        # Update clipping by RMS (Shazeer-Stern eq. 5).
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-38)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        m = b1 * state.m + (1.0 - b1) * u
+        return m, AdafactorState(m=m, vr=vr, vc=vc, v=v)
+
+    return InnerOptimizer("adafactor", init, update, state_bytes_per_param=4.0)
+
+
+# ---------------------------------------------------------------------------
+# Adam-mini (per-row shared second moment)
+# ---------------------------------------------------------------------------
+
+
+class AdamMiniState(NamedTuple):
+    m: jax.Array
+    v: jax.Array  # one scalar per output row (or per tensor for <2-D)
+
+
+def adam_mini(
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8
+) -> InnerOptimizer:
+    """Adam-mini [ZCL+24]: one effective learning rate per parameter block.
+
+    For the projected gradient R (r x n) the natural blocks are the r basis
+    rows; for full-rank 2-D leaves, the output rows.  >99% of second-moment
+    entries are removed, matching the paper's memory claim.
+    """
+
+    def init(x):
+        if x.ndim >= 2:
+            v = jnp.zeros(x.shape[:-1], jnp.float32)
+        else:
+            v = jnp.zeros((1,), jnp.float32)
+        return AdamMiniState(m=jnp.zeros(x.shape, jnp.float32), v=v)
+
+    def update(g, state, step):
+        g = g.astype(jnp.float32)
+        t = step.astype(jnp.float32)
+        m = b1 * state.m + (1.0 - b1) * g
+        if g.ndim >= 2:
+            blk = jnp.mean(g * g, axis=-1)
+            v = b2 * state.v + (1.0 - b2) * blk
+            vb = v[..., None]
+        else:
+            v = b2 * state.v + (1.0 - b2) * jnp.mean(g * g)
+            vb = v
+        mhat = m / (1.0 - b1**t)
+        vhat = vb / (1.0 - b2**t)
+        direction = mhat / (jnp.sqrt(vhat) + eps)
+        return direction, AdamMiniState(m=m, v=v)
+
+    return InnerOptimizer("adam_mini", init, update, state_bytes_per_param=4.0)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam (blockwise-quantized moments, after Dettmers et al.)
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _QBLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _QBLOCK), pad
+
+
+def quantize_blockwise(x: jax.Array, signed: bool) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise 8-bit quantization with per-block absmax scale.
+
+    Signed values (first moment) use linear codes.  Unsigned values (second
+    moment) use SQRT-mapped codes -- code = round(sqrt(v/s)*255) -- because
+    Adam divides by sqrt(v): linear codes round small v to 0 and the
+    denominator collapses (observed divergence); the sqrt map allocates
+    resolution near zero like Dettmers' dynamic code.
+    Returns (codes (nb, B) uint8, scales (nb,) f32).
+    """
+    blocks, _ = _pad_to_block(x.astype(jnp.float32))
+    absmax = jnp.max(jnp.abs(blocks), axis=-1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    if signed:
+        q = jnp.clip(jnp.round(blocks / scale[:, None] * 127.0), -127, 127)
+        codes = (q + 127).astype(jnp.uint8)
+    else:
+        rel = jnp.sqrt(jnp.clip(blocks / scale[:, None], 0.0, 1.0))
+        codes = jnp.clip(jnp.round(rel * 255.0), 0, 255).astype(jnp.uint8)
+    return codes, scale
+
+
+def dequantize_blockwise(
+    codes: jax.Array, scale: jax.Array, shape, signed: bool
+) -> jax.Array:
+    if signed:
+        vals = (codes.astype(jnp.float32) - 127.0) / 127.0 * scale[:, None]
+    else:
+        rel = codes.astype(jnp.float32) / 255.0
+        vals = rel * rel * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+class Adam8bitState(NamedTuple):
+    m_codes: jax.Array
+    m_scale: jax.Array
+    v_codes: jax.Array
+    v_scale: jax.Array
+
+
+def adam8bit(
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> InnerOptimizer:
+    def init(x):
+        z = jnp.zeros(x.shape, jnp.float32)
+        mc, ms = quantize_blockwise(z, signed=True)
+        vc, vs = quantize_blockwise(z, signed=False)
+        return Adam8bitState(m_codes=mc, m_scale=ms, v_codes=vc, v_scale=vs)
+
+    def update(g, state, step):
+        g = g.astype(jnp.float32)
+        m = dequantize_blockwise(state.m_codes, state.m_scale, g.shape, True)
+        v = dequantize_blockwise(state.v_codes, state.v_scale, g.shape, False)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        t = step.astype(jnp.float32)
+        mhat = m / (1.0 - b1**t)
+        vhat = v / (1.0 - b2**t)
+        direction = mhat / (jnp.sqrt(vhat) + eps)
+        mc, ms = quantize_blockwise(m, signed=True)
+        vc, vs = quantize_blockwise(v, signed=False)
+        return direction, Adam8bitState(m_codes=mc, m_scale=ms, v_codes=vc, v_scale=vs)
+
+    return InnerOptimizer("adam8bit", init, update, state_bytes_per_param=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES = {
+    "adam": adam,
+    "msgd": msgd,
+    "adafactor": adafactor,
+    "adam_mini": adam_mini,
+    "adam8bit": adam8bit,
+}
+
+
+def make_inner(name: str, **kwargs: Any) -> InnerOptimizer:
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown inner optimizer {name!r}; have {list(_FACTORIES)}")
+    return _FACTORIES[name](**kwargs)

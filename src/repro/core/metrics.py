@@ -1,0 +1,91 @@
+"""Subspace diagnostics used throughout the paper's empirical sections.
+
+* ``subspace_overlap`` -- the GARD18 metric of Section 4.3:
+      overlap(U, V) = (1/r) * sum_i ||U^T V[:, i]||_2^2 = ||U^T V||_F^2 / r
+  in [0, 1]; 1 iff span(U) == span(V) (for orthonormal U, V of equal rank).
+* ``adjacent_overlap_trace``   -- Fig. 2 / Fig. 3(a) / Appendix F.3.
+* ``anchor_overlap_trace``     -- Fig. 3(b) / Appendix F.2.
+* ``update_singular_spectrum`` -- Fig. 4 / Appendix F.1: normalized singular
+  values of a weight-difference checkpoint delta.
+* ``effective_rank``           -- entropy-based effective rank of a spectrum.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def subspace_overlap(u: jax.Array, v: jax.Array) -> jax.Array:
+    """GARD18 overlap between orthonormal bases u (m,r) and v (m,r')."""
+    r = v.shape[-1]
+    c = jnp.einsum("...mr,...ms->...rs", u.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    return jnp.sum(c * c, axis=(-2, -1)) / r
+
+
+def update_singular_spectrum(w_before: jax.Array, w_after: jax.Array) -> jax.Array:
+    """Normalized singular values of the weight delta (Fig. 4)."""
+    delta = (w_after - w_before).astype(jnp.float32)
+    s = jnp.linalg.svd(delta, compute_uv=False)
+    return s / (s[..., :1] + 1e-12)
+
+
+def effective_rank(s: jax.Array) -> jax.Array:
+    """exp(entropy) of the normalized spectrum -- scalar rank proxy."""
+    p = s / (jnp.sum(s, axis=-1, keepdims=True) + 1e-12)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(p + 1e-12), 0.0), axis=-1)
+    return jnp.exp(h)
+
+
+class OverlapTracker:
+    """Host-side tracker of adjacent/anchor projector overlaps during
+    training (drives the Fig. 2/3 benchmarks).  Stores per-layer series."""
+
+    def __init__(self) -> None:
+        self._prev: Dict[str, jax.Array] = {}
+        self._anchor: Dict[str, jax.Array] = {}
+        self.adjacent: Dict[str, List[float]] = {}
+        self.anchored: Dict[str, List[float]] = {}
+
+    def set_anchor(self, projectors: Dict[str, jax.Array]) -> None:
+        self._anchor = {k: jnp.asarray(v) for k, v in projectors.items()}
+
+    def observe(self, projectors: Dict[str, jax.Array]) -> None:
+        for name, p in projectors.items():
+            p = jnp.asarray(p)
+            if p.ndim > 2:  # stacked layers: average overlap over the stack
+                pass
+            if name in self._prev:
+                ov = float(jnp.mean(subspace_overlap(self._prev[name], p)))
+                self.adjacent.setdefault(name, []).append(ov)
+            if name in self._anchor:
+                ov = float(jnp.mean(subspace_overlap(self._anchor[name], p)))
+                self.anchored.setdefault(name, []).append(ov)
+            self._prev[name] = p
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for name, series in self.adjacent.items():
+            if series:
+                out.setdefault(name, {})["adjacent_mean"] = float(
+                    sum(series) / len(series)
+                )
+                out[name]["adjacent_last"] = float(series[-1])
+        for name, series in self.anchored.items():
+            if series:
+                out.setdefault(name, {})["anchor_last"] = float(series[-1])
+        return out
+
+
+def collect_projectors(opt_state, specs) -> Dict[str, jax.Array]:
+    """Extract {path: P} for all low-rank leaves from an optimizer state."""
+    is_spec = lambda x: hasattr(x, "lowrank")  # noqa: E731
+    flat_specs, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    flat_states = treedef.flatten_up_to(opt_state.leaves)
+    out = {}
+    for spec, st in zip(flat_specs, flat_states):
+        if spec.lowrank:
+            out[spec.path] = st.projector
+    return out

@@ -1,0 +1,44 @@
+"""Learning-rate schedules (pure jnp functions of the int step)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def constant(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def cosine_with_warmup(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_fraction: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    """The paper's schedule: linear warmup then cosine decay."""
+
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = (step - warmup_steps) / max(total_steps - warmup_steps, 1)
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (
+            1 + jnp.cos(math.pi * progress)
+        )
+        decay = peak_lr * cos
+        return jnp.where(step < warmup_steps, warm, decay).astype(jnp.float32)
+
+    return fn
+
+
+def linear_warmup_constant(
+    peak_lr: float, warmup_steps: int
+) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        return jnp.minimum(peak_lr * step / max(warmup_steps, 1), peak_lr)
+
+    return fn

@@ -1,0 +1,33 @@
+"""Backend dispatch for flash attention (models/attention.py 'pallas' impl).
+
+On TPU: the Pallas kernel.  On CPU (this container): the chunked-jnp exact
+attention, so configs that request ``attn_impl='pallas'`` still run/lower
+everywhere.  The positions arguments keep the models' signature; the kernel
+path requires contiguous positions (self-attention), which is the only
+call-site pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _fa_kernel
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    if jax.default_backend() == "tpu":
+        return _fa_kernel(q, k, v, causal, window, 0, False)
+    from repro.models.attention import chunked_attention
+
+    return chunked_attention(
+        q, k, v, q_positions, kv_positions, causal=causal, window=window
+    )

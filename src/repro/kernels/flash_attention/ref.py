@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-attention kernel (exact softmax attention,
+GQA, causal/window masking by absolute position)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KVH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = 1.0 / (d**0.5)
+    qg = q.reshape(b, sq, kvh, g, d)
+    logits = (
+        jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    )
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    allow = jnp.ones((sq, sk), bool)
+    if causal:
+        allow &= kpos[None, :] <= qpos[:, None]
+    if window:
+        allow &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(allow[None, None, None], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)

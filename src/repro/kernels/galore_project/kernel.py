@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused gradient projection + Adam moment update.
+
+The other half of the optimizer hot loop (lowrank_update handles the
+back-projection side): unfused, XLA writes R = P^T G to HBM, then reads R
+three more times for the M/V updates.  Fused, R lives in a VMEM scratch
+accumulated over d-blocks; at the last d-block the moment updates read/write
+M and V once and R is emitted once.
+
+Grid: (n_blocks, d_blocks), d innermost ("arbitrary": the (r, bn) accumulator
+scratch carries across d-blocks of one n-block).  r <= 512 stays whole.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    g_ref,  # (bd, bn)
+    p_ref,  # (bd, r)
+    m_ref,  # (r, bn)
+    v_ref,  # (r, bn)
+    r_out,  # (r, bn)
+    m_out,  # (r, bn)
+    v_out,  # (r, bn)
+    acc,  # VMEM scratch (r, bn) f32
+    *,
+    b1: float,
+    b2: float,
+    nd: int,
+):
+    i_d = pl.program_id(1)
+
+    @pl.when(i_d == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        p_ref[...].astype(jnp.float32),
+        g_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())),  # contract the d (block) dim
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i_d == nd - 1)
+    def _finalize():
+        r = acc[...]
+        m_new = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * r
+        v_new = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * r * r
+        r_out[...] = r.astype(r_out.dtype)
+        m_out[...] = m_new.astype(m_out.dtype)
+        v_out[...] = v_new.astype(v_out.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b1", "b2", "block_d", "block_n", "interpret")
+)
+def galore_project(
+    g: jax.Array,  # (d, n)
+    p: jax.Array,  # (d, r)
+    m: jax.Array,  # (r, n)
+    v: jax.Array,  # (r, n)
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    d, n = g.shape
+    _, r = p.shape
+    bd = min(block_d, d)
+    bn = min(block_n, n)
+    if d % bd or n % bn:
+        bd, bn = d, n
+    nd = d // bd
+    grid = (n // bn, nd)
+    kernel = functools.partial(_kernel, b1=b1, b2=b2, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bn), lambda i, j: (j, i)),  # G
+            pl.BlockSpec((bd, r), lambda i, j: (j, 0)),  # P
+            pl.BlockSpec((r, bn), lambda i, j: (0, i)),  # M
+            pl.BlockSpec((r, bn), lambda i, j: (0, i)),  # V
+        ],
+        out_specs=[
+            pl.BlockSpec((r, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+            jax.ShapeDtypeStruct((r, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(g, p, m, v)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused gradient-projection + moment-update kernel.
+
+Semantics (side='left', d = m <= n):
+
+    R  = P^T G                      # (r, n) projected gradient
+    M' = b1 M + (1-b1) R
+    V' = b2 V + (1-b2) R*R
+
+Returns (R, M', V').
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def galore_project_ref(
+    g: jax.Array,  # (d, n)
+    p: jax.Array,  # (d, r)
+    m: jax.Array,  # (r, n)
+    v: jax.Array,  # (r, n)
+    *,
+    b1: float,
+    b2: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    r = (p.astype(jnp.float32).T @ g.astype(jnp.float32))
+    m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * r
+    v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * r * r
+    return r, m_new, v_new

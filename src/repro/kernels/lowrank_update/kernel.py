@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: fused low-rank Adam update + back-projection.
+
+The torch GaLore update runs four separate passes over HBM per layer:
+moment update (read M,V,R / write M,V), Adam direction (read M,V / write N),
+back-projection GEMM (read P,N / write dW), weight update (read W,dW/write W).
+This kernel fuses all four: per (n-block, d-block) grid step it
+
+  * at d==0: updates the (r, bn) moment slabs in VMEM, writes M',V', and
+    stashes the bias-corrected Adam direction N in a VMEM scratch;
+  * for every d: computes  W'[d-blk, n-blk] = W - lr_alpha * P[d-blk] @ N
+    straight out of the scratch -- the full-space direction (d x n) is never
+    materialized in HBM.
+
+Grid: (n_blocks, d_blocks), d innermost so the N scratch computed at d==0 is
+reused by all d-blocks of the same n-block (TPU grid steps run sequentially,
+scratch persists).  r (<= 512) is kept whole in VMEM: P block (bd, r) and N
+scratch (r, bn) are both 128-aligned MXU operands.
+
+Scalar operands (step, lr_alpha) arrive via scalar prefetch so no retrace
+happens when the learning-rate schedule moves.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    scalars,  # SMEM: (2,) f32 [step, lr_alpha]
+    w_ref,  # (bd, bn) in
+    p_ref,  # (bd, r)
+    r_ref,  # (r, bn)
+    m_ref,  # (r, bn)
+    v_ref,  # (r, bn)
+    w_out,  # (bd, bn)
+    m_out,  # (r, bn)
+    v_out,  # (r, bn)
+    n_scr,  # VMEM scratch (r, bn) f32
+    *,
+    b1: float,
+    b2: float,
+    eps: float,
+):
+    i_d = pl.program_id(1)
+
+    @pl.when(i_d == 0)
+    def _update_moments():
+        r32 = r_ref[...].astype(jnp.float32)
+        m_new = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * r32
+        v_new = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * r32 * r32
+        t = scalars[0]
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        n_scr[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        m_out[...] = m_new.astype(m_out.dtype)
+        v_out[...] = v_new.astype(v_out.dtype)
+
+    lr_alpha = scalars[1]
+    delta = jnp.dot(
+        p_ref[...].astype(jnp.float32),
+        n_scr[...],
+        preferred_element_type=jnp.float32,
+    )
+    w_out[...] = (
+        w_ref[...].astype(jnp.float32) - lr_alpha * delta
+    ).astype(w_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "block_d", "block_n", "interpret"),
+)
+def lowrank_adam_update(
+    w: jax.Array,  # (d, n)
+    p: jax.Array,  # (d, r)
+    r_g: jax.Array,  # (r, n)
+    m: jax.Array,  # (r, n)
+    v: jax.Array,  # (r, n)
+    step: jax.Array,  # int32 scalar
+    lr_alpha: jax.Array,  # f32 scalar
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    d, r = p.shape
+    rr, n = r_g.shape
+    assert rr == r and w.shape == (d, n) and m.shape == (r, n)
+    bd = min(block_d, d)
+    bn = min(block_n, n)
+    # TPU wants the last dim 128-aligned; fall back to whole-dim blocks for
+    # ragged small shapes (tests) rather than padding logic in the kernel.
+    if d % bd or n % bn:
+        bd, bn = d, n
+    grid = (n // bn, d // bd)
+
+    scalars = jnp.stack(
+        [step.astype(jnp.float32), lr_alpha.astype(jnp.float32)]
+    )
+
+    kernel = functools.partial(_kernel, b1=b1, b2=b2, eps=eps)
+    w_new, m_new, v_new = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bd, bn), lambda i, j, s: (j, i)),  # W
+                pl.BlockSpec((bd, r), lambda i, j, s: (j, 0)),  # P
+                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),  # R
+                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),  # M
+                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),  # V
+            ],
+            out_specs=[
+                pl.BlockSpec((bd, bn), lambda i, j, s: (j, i)),
+                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),
+                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),
+            ],
+            scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v.shape, jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scalars, w, p, r_g, m, v)
+    return w_new, m_new, v_new

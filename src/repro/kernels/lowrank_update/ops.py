@@ -1,0 +1,51 @@
+"""Backend dispatch for the fused low-rank Adam update.
+
+* TPU backend: the Pallas kernel (kernel.py).
+* everywhere else: the pure-jnp reference (ref.py) -- identical math; XLA
+  fuses the elementwise part but materializes the back-projection GEMM
+  operand, which is exactly the HBM round-trip the kernel removes.
+
+Covers side='left' 2-D leaves (d <= n, the dominant case: every attention/MLP
+projection in the assigned archs).  side='right' and stacked (batched) leaves
+fall back to the reference path (vmap of the kernel is a later optimization;
+see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lowrank_update import ref as ref_lib
+from repro.kernels.lowrank_update.kernel import lowrank_adam_update
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_lowrank_adam_update(
+    w: jax.Array,
+    p: jax.Array,
+    r_g: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    step: jax.Array,
+    lr_alpha: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    use_kernel = force_pallas or _on_tpu()
+    if use_kernel and w.ndim == 2:
+        return lowrank_adam_update(
+            w, p, r_g, m, v, step, lr_alpha,
+            b1=b1, b2=b2, eps=eps, interpret=interpret or not _on_tpu(),
+        )
+    return ref_lib.lowrank_adam_update_ref(
+        w, p, r_g, m, v, b1=b1, b2=b2, eps=eps, step=step, lr_alpha=lr_alpha
+    )

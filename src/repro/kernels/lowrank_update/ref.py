@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused GaLore/SARA-Adam update kernel.
+
+Semantics (side='left', the kernel-covered case; d = m <= n):
+
+    M' = b1 M + (1-b1) R
+    V' = b2 V + (1-b2) R*R
+    N  = (M'/bc1) / (sqrt(V'/bc2) + eps)        # bias-corrected Adam dir
+    W' = W - lr_alpha * (P @ N)                 # fused back-projection
+
+with bc1 = 1-b1^t, bc2 = 1-b2^t.  Returns (W', M', V').
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_adam_update_ref(
+    w: jax.Array,  # (d, n)
+    p: jax.Array,  # (d, r)
+    r_g: jax.Array,  # (r, n) projected gradient
+    m: jax.Array,  # (r, n)
+    v: jax.Array,  # (r, n)
+    *,
+    b1: float,
+    b2: float,
+    eps: float,
+    step: jax.Array,  # int32 scalar (1-indexed)
+    lr_alpha: jax.Array,  # f32 scalar: lr * galore_alpha
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    r32 = r_g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * r32
+    v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * r32 * r32
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    n_dir = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    w_new = w.astype(jnp.float32) - lr_alpha * (
+        p.astype(jnp.float32) @ n_dir
+    )
+    return w_new.astype(w.dtype), m_new, v_new

@@ -1,0 +1,183 @@
+"""Name-based sharding rules: param/state/batch/cache pytrees -> NamedSharding.
+
+The MaxText-style approach: parameter *path names* select a logical rule;
+shape-aware guards then keep only mesh axes that divide the dim and leave a
+healthy per-shard extent.  This gives Megatron tensor parallelism over
+``model``, FSDP over ``data``, DP over ``pod`` (+``data``), and graceful
+fallback to replication for small/ragged dims (e.g. qwen2's 12 heads on a
+16-way model axis).
+
+Rules (applied to the last two dims; leading stack dims -- layers, experts --
+stay unsharded):
+
+  column-parallel (out-dim on ``model``): q/k/v_proj, gate/up_proj, in_proj,
+      cross_{q,k,v}_proj, lm_head, router_w, patch_in_proj
+  row-parallel (in-dim on ``model``):    o_proj, down_proj, out_proj,
+      cross_o_proj
+  embed: vocab on ``model``, d_model on ``data``
+  1-D / norms / biases / conv / ssm vectors: replicated
+
+Optimizer-state leaves reuse the same rules (their paths embed the param
+path), with the guards preventing nonsense like sharding the rank dim.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+PyTree = Any
+
+# (regex on path, (second_to_last_axis, last_axis)) in priority order.
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], Optional[str]]], ...] = (
+    (r"embed", ("model", "data")),  # (vocab, d)
+    (r"lm_head", ("data", "model")),  # (d, vocab)
+    (r"(o_proj|down_proj|out_proj|cross_o_proj)", ("model", "data")),
+    (
+        r"(q_proj|k_proj|v_proj|gate_proj|up_proj|in_proj|cross_[qkv]_proj"
+        r"|patch_in_proj)",
+        ("data", "model"),
+    ),
+)
+
+# Minimum per-shard extent: don't shard a dim below this (keeps MXU tiles
+# healthy and skips tiny dims like rank/kv_heads).
+MIN_SHARD_EXTENT = 64
+
+# Experiment overrides (perf iterations): {regex: (ax_m2, ax_m1)} checked
+# before _RULES.  e.g. {"(q|k|v|o)_proj": ("data", None)} disables attention
+# TP for archs whose head count doesn't divide the model axis.
+RULE_OVERRIDES: dict = {}
+
+
+def _guard(dim: int, axis: Optional[str], mesh: Mesh) -> Optional[str]:
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    n = mesh.shape[axis]
+    if dim % n != 0 or dim // n < MIN_SHARD_EXTENT:
+        return None
+    return axis
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    if len(shape) < 2:
+        return P()
+    low = path.lower()
+    for pat, axes in RULE_OVERRIDES.items():
+        if re.search(pat, low):
+            a2 = _guard(shape[-2], axes[0], mesh)
+            a1 = _guard(shape[-1], axes[1], mesh)
+            return P(*([None] * (len(shape) - 2) + [a2, a1]))
+    if "experts" in low and len(shape) >= 3:
+        # (L, E, d, ff): EP -- experts over `model`, expert d_ff FSDP over
+        # `data` (gathered on use inside the MoE shard_map region).  The E
+        # dim is a *stack* dim (not a matmul operand), so divisibility is the
+        # only guard -- without this, expert low-rank optimizer states
+        # (P / M / V per expert) replicate and blow the HBM budget.
+        def _div(dim, axis):
+            n = mesh.shape.get(axis, 0)
+            return axis if n and dim % n == 0 and dim >= n else None
+
+        e_ax = _div(shape[-3], "model")
+        if "down_proj" in low:
+            ff_ax = _div(shape[-2], "data")
+            return P(*([None] * (len(shape) - 3) + [e_ax, ff_ax, None]))
+        ff_ax = _div(shape[-1], "data")
+        return P(*([None] * (len(shape) - 3) + [e_ax, None, ff_ax]))
+    if "router_w" in low:
+        return P()  # replicated: every rank routes identically (EP dispatch)
+    for pat, (ax_m2, ax_m1) in _RULES:
+        if re.search(pat, low):
+            a2 = _guard(shape[-2], ax_m2, mesh)
+            a1 = _guard(shape[-1], ax_m1, mesh)
+            return P(*([None] * (len(shape) - 2) + [a2, a1]))
+    return P()  # norms, biases, conv, ssm vectors: replicated
+
+
+def tree_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
+    """NamedSharding for every leaf of a param/opt-state pytree by path."""
+
+    def leaf_spec(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, param_spec(ps, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard dim0 (global batch) over pod+data when divisible."""
+    axes = batch_axes(mesh)
+    if not axes:
+        return P()
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if shape[0] % total == 0 and shape[0] >= total:
+        first = axes if len(axes) > 1 else axes[0]
+        return P(first, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)), batch
+    )
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """KV/SSM cache leaves: batch dim over pod+data; else seq over data."""
+    low = path.lower()
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    spec = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    # Identify the batch dim: leaf layouts are (L, B, ...) for stacked cache
+    # leaves, (B, ...) for pos/next_pos.
+    bdim = 1 if (len(shape) >= 2 and "k" != low) else 0
+    # Heuristic: stacked 5-D kv (L,B,C,KVH,D) & 4-D ssm states (L?,B,..)
+    if len(shape) >= 3:
+        bdim = 1
+    elif len(shape) <= 2:
+        bdim = 0
+    if axes and shape[bdim] % total == 0 and shape[bdim] >= total:
+        spec[bdim] = axes if len(axes) > 1 else axes[0]
+    elif len(shape) >= 3 and "data" in mesh.axis_names:
+        # batch unshardable (e.g. global_batch=1 long-context): shard the
+        # capacity/sequence dim over data instead.
+        seq_dim = 2
+        n = mesh.shape["data"]
+        if shape[seq_dim] % n == 0 and shape[seq_dim] // n >= 128:
+            spec[seq_dim] = "data"
+    # Additionally shard the KV capacity dim over `model`: GQA kv_heads
+    # rarely divide a 16-way TP axis, but the 32k+ cache length does --
+    # flash-decode style sharded attention (XLA synthesizes the per-token
+    # softmax-stat reduction).
+    if (
+        len(shape) >= 5
+        and spec[2] is None
+        and "model" in mesh.axis_names
+    ):
+        n = mesh.shape["model"]
+        if shape[2] % n == 0 and shape[2] // n >= 128:
+            spec[2] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
+    def leaf_spec(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, cache_spec(ps, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

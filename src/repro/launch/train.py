@@ -1,0 +1,132 @@
+"""Production training launcher.
+
+Single-host CPU (this container) or multi-host TPU (via
+``jax.distributed.initialize``, auto-detected from TPU env vars / --coordinator).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --optimizer galore-sara-adam --steps 100 --smoke
+
+``--smoke`` selects the reduced config (CPU-feasible); without it the full
+assigned architecture is built (real accelerators).  All fault-tolerance
+machinery is live either way: atomic checkpoints, deterministic resume,
+straggler monitor, SIGTERM-safe preemption.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def maybe_init_distributed(args) -> None:
+    if args.coordinator:
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id,
+        )
+    elif os.environ.get("TPU_WORKER_HOSTNAMES"):
+        jax.distributed.initialize()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--optimizer", default="galore-sara-adam")
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--lr", type=float, default=0.01)
+    ap.add_argument("--warmup", type=int, default=100)
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--tau", type=int, default=200)
+    ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--mesh", default="",
+                    help="'data,model' e.g. '16,16'; default single device")
+    ap.add_argument("--compressed-dp", action="store_true",
+                    help="project-then-reduce DP gradient compression")
+    ap.add_argument("--refresh-groups", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--coordinator", default="")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+    maybe_init_distributed(args)
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_config
+    from repro.core import make_optimizer
+    from repro.core.schedules import cosine_with_warmup
+    from repro.data.synthetic import SyntheticDataConfig, SyntheticDataset
+    from repro.launch import sharding as shd
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model, count_params
+    from repro.train.loop import train_loop
+    from repro.train.state import TrainState
+    from repro.train.step import make_train_step, shard_train_state
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = cfg.with_(dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[train] {args.arch} {count_params(params) / 1e6:.1f}M params "
+          f"on {jax.device_count()} device(s)")
+
+    rank = args.rank or min(512, max(8, cfg.d_model // 4))
+    kw = dict(
+        lr=args.lr,
+        lr_schedule=cosine_with_warmup(args.lr, args.warmup, args.steps),
+        grad_clip_norm=1.0,
+    )
+    if args.optimizer != "adam":
+        kw.update(rank=rank, tau=args.tau, alpha=args.alpha,
+                  refresh_groups=args.refresh_groups)
+    opt = make_optimizer(args.optimizer, params, **kw)
+
+    seq = args.seq or (64 if args.smoke else 512)
+    batch = args.batch or (8 if args.smoke else 512)
+    data = SyntheticDataset(SyntheticDataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch
+    ))
+
+    mesh = None
+    shardings = None
+    state = TrainState(params, opt.init(params))
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape)
+        state, shardings = shard_train_state(state, mesh)
+    tc = TrainConfig(
+        total_steps=args.steps, checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir, microbatch=args.microbatch,
+    )
+    fns = make_train_step(
+        model, opt, mesh=mesh, train_cfg=tc,
+        compressed=args.compressed_dp,
+    )
+
+    def run():
+        return train_loop(
+            model, opt, data, tc, fns, state=state, shardings=shardings,
+            log_every=max(args.steps // 20, 1),
+        )
+
+    if mesh is not None:
+        with mesh:
+            res = run()
+    else:
+        res = run()
+    print(f"[train] done: step {res.final_step}, "
+          f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro.models -- architecture zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)."""
+from repro.models.model_zoo import Model, build_model, count_params
+
+__all__ = ["Model", "build_model", "count_params"]

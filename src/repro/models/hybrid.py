@@ -1,0 +1,214 @@
+"""Hymba-style hybrid blocks: attention heads and SSM heads run in PARALLEL
+on the same (normed) input; their outputs are averaged (the paper's
+mean-fusion), then a SwiGLU MLP follows.
+
+Attention is sliding-window (``cfg.attn_window``), which is what makes the
+``long_500k`` decode shape tractable: the KV ring buffer is window-sized, and
+the SSM path carries unbounded context in O(1) state.  (Hymba interleaves a
+few global-attention layers; we use windowed everywhere -- noted in
+DESIGN.md §Arch-applicability.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+
+class HybridCache(NamedTuple):
+    k: jax.Array  # (L, B, W, KVH, D) ring buffer
+    v: jax.Array
+    pos: jax.Array  # (B, W)
+    ssm: ssm_lib.SSMLayerCache  # stacked (L, ...) leaves
+    next_pos: jax.Array  # (B,)
+
+
+def init_block(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    k_attn, k_ssm, k_mlp = jax.random.split(key, 3)
+    p = tfm.init_block(k_attn, cfg)
+    p["ssm_mixer"] = ssm_lib.init_ssm_mixer(k_ssm, cfg)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model,
+                              cfg.param_dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            k_head, cfg.d_model, cfg.vocab_size, scale=0.02,
+            dtype=cfg.param_dtype,
+        )
+    return params
+
+
+def _hybrid_mix(p, h, cfg, positions, collect_state=False):
+    """Parallel attention + SSM over normed input h; returns mean fusion."""
+    attn_out, kv = tfm.attn_sublayer(
+        p, h, cfg, positions, positions, window=cfg.attn_window
+    )
+    if collect_state:
+        ssm_out, state = ssm_lib.apply_ssm_mixer(
+            p["ssm_mixer"], h, cfg, return_state=True
+        )
+        return 0.5 * (attn_out + ssm_out), kv, state
+    ssm_out = ssm_lib.apply_ssm_mixer(p["ssm_mixer"], h, cfg)
+    return 0.5 * (attn_out + ssm_out), kv, None
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, collect_cache=False):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    h = L.shard_activations(h, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, p):
+        x = carry
+        hn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+        mix, kv, state = _hybrid_mix(p, hn, cfg, positions, collect_cache)
+        x = x + mix
+        hn = L.rmsnorm(x, p["mlp_norm"], cfg.rms_eps)
+        x = x + L.apply_mlp(p["mlp"], hn, cfg)
+        x = L.shard_activations(x, cfg)
+        if collect_cache:
+            dt_ = hn.dtype
+            zxbcdt = (
+                L.rmsnorm(carry, p["attn_norm"], cfg.rms_eps)[
+                    :, -(ssm_lib._CONV_K - 1):
+                ]
+                @ p["ssm_mixer"]["in_proj"].astype(dt_)
+            )
+            _, xc, b_mat, c_mat, _ = ssm_lib._split_in_proj(zxbcdt, cfg)
+            conv_tail = jnp.concatenate([xc, b_mat, c_mat], axis=-1)
+            return x, (kv, ssm_lib.SSMLayerCache(conv=conv_tail, state=state))
+        return x, None
+
+    if cfg.remat == "block" and not collect_cache:
+        body = jax.checkpoint(body)
+    h, caches = tfm.scan_or_loop(body, h, params["blocks"],
+                                 scan=cfg.scan_layers, unroll=cfg.scan_unroll)
+    h = L.rmsnorm(h, params["final_norm"], cfg.rms_eps)
+    return h, caches
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    h, _ = forward_hidden(params, cfg, batch["tokens"])
+    lm_head = tfm.lm_head_matrix(params, cfg)
+    loss, n_tok = L.chunked_cross_entropy(
+        h, lm_head, batch["labels"], cfg.loss_chunk
+    )
+    return loss, {"loss": loss, "tokens": n_tok}
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int = 0) -> HybridCache:
+    w = cfg.attn_window or capacity
+    shape = (cfg.n_layers, batch, w, cfg.n_kv_heads, cfg.head_dim)
+    single = ssm_lib.init_layer_cache(cfg, batch)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape).copy(),
+        single,
+    )
+    return HybridCache(
+        k=jnp.zeros(shape, cfg.dtype),
+        v=jnp.zeros(shape, cfg.dtype),
+        pos=jnp.full((batch, w), -1, jnp.int32),
+        ssm=stacked,
+        next_pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(params, cfg: ModelConfig, tokens, capacity: int = 0):
+    b, s = tokens.shape
+    h, caches = forward_hidden(params, cfg, tokens, collect_cache=True)
+    kvs, ssm_caches = caches
+    cache = init_cache(cfg, b, capacity)
+    w = cache.k.shape[2]
+    k_all, v_all = kvs  # (L, B, S, KVH, D)
+    keep = min(s, w)
+    k_tail = k_all[:, :, -keep:]
+    v_tail = v_all[:, :, -keep:]
+    positions = jnp.broadcast_to(
+        jnp.arange(s - keep, s, dtype=jnp.int32)[None], (b, keep)
+    )
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_tail, 0, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_tail, 0, axis=2)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache.pos, positions, 0, axis=1)
+    lm_head = tfm.lm_head_matrix(params, cfg)
+    logits = h[:, -1].astype(jnp.float32) @ lm_head.astype(jnp.float32)
+    return logits, HybridCache(
+        k=k, v=v, pos=pos, ssm=ssm_caches,
+        next_pos=jnp.full((b,), s, jnp.int32),
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache: HybridCache, token):
+    b = token.shape[0]
+    h = jnp.take(params["embed"], token, axis=0).astype(cfg.dtype)
+    q_pos = cache.next_pos[:, None]
+    cap = cache.k.shape[2]
+    slot = cache.next_pos % cap
+    new_pos = jax.vmap(lambda row, s_, p_: row.at[s_].set(p_))(
+        cache.pos, slot, cache.next_pos
+    )
+
+    def body(carry, xs):
+        x = carry
+        p, k_l, v_l, ssm_lc = xs
+        dt = x.dtype
+        hn = L.rmsnorm(x, p["attn_norm"], cfg.rms_eps)
+        # attention path (ring-buffer window)
+        q = (hn @ p["q_proj"].astype(dt)).reshape(b, 1, cfg.n_heads,
+                                                  cfg.head_dim)
+        k_new = (hn @ p["k_proj"].astype(dt)).reshape(b, 1, cfg.n_kv_heads,
+                                                      cfg.head_dim)
+        v_new = (hn @ p["v_proj"].astype(dt)).reshape(b, 1, cfg.n_kv_heads,
+                                                      cfg.head_dim)
+        q = L.apply_rope(q, q_pos, cfg.rope_theta)
+        k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
+        # where-mask ring write: elementwise, so a capacity-dim-sharded
+        # cache updates WITHOUT the all-gather a dynamic scatter would force
+        wmask = (
+            jax.lax.broadcasted_iota(jnp.int32, (b, k_l.shape[1]), 1)
+            == slot[:, None]
+        )[:, :, None, None]
+        k_upd = jnp.where(wmask, k_new, k_l)
+        v_upd = jnp.where(wmask, v_new, v_l)
+        attn_out = attn_lib.attention(
+            q, k_upd, v_upd, q_pos, new_pos,
+            causal=True, window=cfg.attn_window, impl="exact",
+        ).reshape(b, 1, cfg.q_dim) @ p["o_proj"].astype(dt)
+        # ssm path
+        ssm_out, new_lc = ssm_lib.decode_ssm_mixer(p["ssm_mixer"], hn, ssm_lc,
+                                                   cfg)
+        x = x + 0.5 * (attn_out + ssm_out)
+        hn = L.rmsnorm(x, p["mlp_norm"], cfg.rms_eps)
+        x = x + L.apply_mlp(p["mlp"], hn, cfg)
+        return x, (k_upd, v_upd, new_lc)
+
+    h, (k_all, v_all, new_ssm) = tfm.scan_or_loop(
+        body, h, (params["blocks"], cache.k, cache.v, cache.ssm),
+        scan=cfg.scan_layers, unroll=cfg.scan_unroll,
+    )
+    h = L.rmsnorm(h, params["final_norm"], cfg.rms_eps)
+    lm_head = tfm.lm_head_matrix(params, cfg)
+    logits = h[:, 0].astype(jnp.float32) @ lm_head.astype(jnp.float32)
+    new_cache = HybridCache(
+        k=k_all, v=v_all, pos=new_pos, ssm=new_ssm,
+        next_pos=cache.next_pos + 1,
+    )
+    return logits, new_cache

@@ -1,0 +1,136 @@
+"""Unified model interface over all architecture families.
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    loss, metrics = model.loss(params, {"tokens": ..., "labels": ...})
+    logits, cache = model.prefill(params, {"tokens": ...})
+    logits, cache = model.decode(params, cache, {"token": ...})
+
+``init_cache(batch, capacity)`` builds the family-appropriate decode cache
+(ring-buffer KV / SSM state / enc-dec cross KV) -- the dry-run lowers
+``decode`` against its ShapeDtypeStruct skeleton.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import hybrid as hybrid_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models import vlm as vlm_lib
+
+PyTree = Any
+Batch = Dict[str, jax.Array]
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[[PyTree, Batch], Any]
+    prefill: Callable[..., Any]  # (params, batch, capacity=None)
+    decode: Callable[[PyTree, Any, Batch], Any]
+    init_cache: Callable[[int, int], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense",):
+        return Model(
+            cfg=cfg,
+            init=lambda key: tfm.init_params(key, cfg),
+            loss=lambda p, b: tfm.loss_fn(p, cfg, b),
+            prefill=lambda p, b, capacity=None: tfm.prefill(
+                p, cfg, b["tokens"],
+                capacity=capacity or b["tokens"].shape[1],
+            ),
+            decode=lambda p, c, b: tfm.decode_step(p, cfg, c, b["token"]),
+            init_cache=lambda batch, cap: tfm.init_kv_cache(cfg, batch, cap),
+        )
+    if fam == "moe":
+        return Model(
+            cfg=cfg,
+            init=lambda key: moe_lib.init_params(key, cfg),
+            loss=lambda p, b: moe_lib.loss_fn(p, cfg, b),
+            prefill=lambda p, b, capacity=None: moe_lib.prefill(
+                p, cfg, b["tokens"],
+                capacity=capacity or b["tokens"].shape[1],
+            ),
+            decode=lambda p, c, b: moe_lib.decode_step(p, cfg, c, b["token"]),
+            init_cache=lambda batch, cap: tfm.init_kv_cache(cfg, batch, cap),
+        )
+    if fam == "vlm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: vlm_lib.init_params(key, cfg),
+            loss=lambda p, b: vlm_lib.loss_fn(p, cfg, b),
+            prefill=lambda p, b, capacity=None: vlm_lib.prefill(
+                p, cfg, b["tokens"], b["patch_embeds"],
+                capacity=capacity
+                or (b["tokens"].shape[1] + b["patch_embeds"].shape[1]),
+            ),
+            decode=lambda p, c, b: vlm_lib.decode_step(p, cfg, c, b["token"]),
+            init_cache=lambda batch, cap: tfm.init_kv_cache(cfg, batch, cap),
+        )
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec_lib.init_params(key, cfg),
+            loss=lambda p, b: encdec_lib.loss_fn(p, cfg, b),
+            prefill=lambda p, b, capacity=None: encdec_lib.prefill(
+                p, cfg, b["tokens"], b["frame_embeds"],
+                capacity=capacity or b["tokens"].shape[1],
+            ),
+            decode=lambda p, c, b: encdec_lib.decode_step(
+                p, cfg, c, b["token"]
+            ),
+            init_cache=lambda batch, cap: _encdec_cache(cfg, batch, cap),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid_lib.init_params(key, cfg),
+            loss=lambda p, b: hybrid_lib.loss_fn(p, cfg, b),
+            prefill=lambda p, b, capacity=None: hybrid_lib.prefill(
+                p, cfg, b["tokens"],
+                capacity=capacity or b["tokens"].shape[1],
+            ),
+            decode=lambda p, c, b: hybrid_lib.decode_step(
+                p, cfg, c, b["token"]
+            ),
+            init_cache=lambda batch, cap: hybrid_lib.init_cache(
+                cfg, batch, cap
+            ),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm_lib.init_params(key, cfg),
+            loss=lambda p, b: ssm_lib.loss_fn(p, cfg, b),
+            prefill=lambda p, b, capacity=None: ssm_lib.prefill(
+                p, cfg, b["tokens"]
+            ),
+            decode=lambda p, c, b: ssm_lib.decode_step(p, cfg, c, b["token"]),
+            init_cache=lambda batch, cap: ssm_lib.init_cache(cfg, batch, cap),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def _encdec_cache(cfg: ModelConfig, batch: int, cap: int):
+    base = tfm.init_kv_cache(cfg, batch, cap)
+    shape = (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv_heads, cfg.head_dim)
+    return encdec_lib.EncDecCache(
+        k=base.k, v=base.v, pos=base.pos,
+        cross_k=jnp.zeros(shape, cfg.dtype),
+        cross_v=jnp.zeros(shape, cfg.dtype),
+        next_pos=base.next_pos,
+    )
+
+
+def count_params(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

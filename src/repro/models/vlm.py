@@ -1,0 +1,53 @@
+"""LLaVA-NeXT backbone (llava-next-34b): the 34B decoder LM consuming a
+prefix of precomputed anyres patch embeddings (the vision tower is a STUB per
+the assignment -- ``input_specs`` supplies (B, n_patches, d_model) directly).
+
+A small learned ``patch_in_proj`` adapter (the multimodal projector's last
+linear) maps stub embeddings into the LM residual stream, then everything is
+the dense transformer.  Loss is next-token on text positions only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    k_lm, k_adapter = jax.random.split(key)
+    params = tfm.init_params(k_lm, cfg)
+    params["patch_in_proj"] = L.dense_init(
+        k_adapter, cfg.d_model, cfg.d_model, dtype=cfg.param_dtype
+    )
+    return params
+
+
+def _adapt(params, patch_embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return patch_embeds.astype(cfg.dtype) @ params["patch_in_proj"].astype(
+        cfg.dtype
+    )
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    adapted = _adapt(params, batch["patch_embeds"], cfg)
+    b2 = dict(batch)
+    b2["patch_embeds"] = adapted
+    return tfm.loss_fn(params, cfg, b2)
+
+
+def prefill(params, cfg: ModelConfig, tokens, patch_embeds, capacity=None):
+    adapted = _adapt(params, patch_embeds, cfg)
+    return tfm.prefill(
+        params, cfg, tokens, prefix_embeds=adapted, capacity=capacity
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache, token):
+    return tfm.decode_step(params, cfg, cache, token)

@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill + autoregressive decode over the
+family-appropriate cache (ring-buffer KV / SSM state / enc-dec cross-KV).
+
+``generate`` runs a static batch of prompts to ``max_new_tokens`` with greedy
+or temperature sampling; decode steps are jitted once and reused (cache
+shapes static).  On a mesh, params/cache are placed by the sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: jax.Array  # (B, max_new_tokens)
+    logits_last: jax.Array
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: PyTree, capacity: int = 0):
+        self.model = model
+        self.params = params
+        self.capacity = capacity
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, capacity or None)
+            if model.cfg.family != "ssm"
+            else model.prefill(p, b)
+        )
+        self._decode = jax.jit(model.decode)
+        self._sample = jax.jit(self._sample_fn, static_argnames=("greedy",))
+
+    @staticmethod
+    def _sample_fn(logits, key, temperature=1.0, *, greedy: bool = True):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(
+        self,
+        batch: Dict[str, jax.Array],
+        max_new_tokens: int,
+        *,
+        greedy: bool = True,
+        temperature: float = 1.0,
+        key: Optional[jax.Array] = None,
+    ) -> GenerateResult:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        tok = None
+        for i in range(max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub, temperature, greedy=greedy)
+            outs.append(tok)
+            logits, cache = self._decode(
+                self.params, cache, {"token": tok[:, None]}
+            )
+        tokens = jnp.stack(outs, axis=1)
+        return GenerateResult(
+            tokens=tokens, logits_last=logits, steps=max_new_tokens
+        )

@@ -1,0 +1,193 @@
+"""Fault-tolerant checkpointing.
+
+Properties required at cluster scale, all implemented and tested:
+
+  * **atomicity** -- writes land in ``step_XXXXXXXX.tmp/`` and are renamed
+    only after the manifest (with per-leaf SHA-256) is fsynced; a crash
+    mid-write can never produce a loadable-but-corrupt checkpoint.
+  * **integrity** -- every leaf file is checksummed; load verifies.
+  * **retention** -- keep the newest ``keep`` checkpoints, delete older.
+  * **async save** -- ``save(..., blocking=False)`` snapshots to host memory
+    (device_get) on the caller thread, then writes on a background thread so
+    the train loop overlaps checkpoint I/O with compute.
+  * **elastic restore** -- leaves are stored logically unsharded with their
+    tree *paths* as keys; ``load`` fills a caller-provided state skeleton and
+    ``device_put``s each leaf with shardings derived from the *current* mesh,
+    so a job checkpointed on N devices restarts on M devices (tested 1<->4).
+
+Format: one ``.npy`` per leaf + ``manifest.json``.  No tensorstore available
+offline; per-shard streaming writes are a documented production follow-up.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree: PyTree) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in flat]
+
+
+def _sanitize(path: str) -> str:
+    return (
+        path.replace("[", "_").replace("]", "").replace("'", "")
+        .replace(".", "_").replace("/", "_")
+    ) or "root"
+
+
+def _sha256(fn: str) -> str:
+    h = hashlib.sha256()
+    with open(fn, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def checkpoint_dirs(base: str) -> List[int]:
+    if not os.path.isdir(base):
+        return []
+    out = []
+    for name in os.listdir(base):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(base: str) -> Optional[int]:
+    steps = checkpoint_dirs(base)
+    return steps[-1] if steps else None
+
+
+def _write_checkpoint(base: str, step: int, host_leaves, paths, keep: int):
+    os.makedirs(base, exist_ok=True)
+    final = os.path.join(base, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    for path, arr in zip(paths, host_leaves):
+        fname = _sanitize(path) + ".npy"
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr, allow_pickle=False)
+        manifest["leaves"][path] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sha256": _sha256(fpath),
+        }
+    mpath = os.path.join(tmp, _MANIFEST)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    # retention
+    steps = checkpoint_dirs(base)
+    for old in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(base, f"step_{old:08d}"),
+                      ignore_errors=True)
+
+
+class CheckpointManager:
+    def __init__(self, base_dir: str, keep: int = 3):
+        self.base_dir = base_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---- save ----
+
+    def save(self, state: PyTree, step: int, blocking: bool = True) -> None:
+        self.wait()  # only one in-flight async save
+        flat, _ = jax.tree_util.tree_flatten(state)
+        paths = _leaf_paths(state)
+        # Snapshot on the caller thread: device_get of (possibly sharded)
+        # arrays -- gathers to host, logically unsharded.
+        host = [np.asarray(jax.device_get(x)) for x in flat]
+
+        def work():
+            try:
+                _write_checkpoint(self.base_dir, step, host, paths, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint failed: {err!r}") from err
+
+    # ---- load ----
+
+    def load(
+        self,
+        state_like: PyTree,
+        step: Optional[int] = None,
+        mesh=None,
+        shardings: Optional[PyTree] = None,
+        verify: bool = True,
+    ) -> PyTree:
+        """Fill ``state_like``'s structure from disk (elastic reshard)."""
+        step = step if step is not None else latest_step(self.base_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.base_dir}")
+        cdir = os.path.join(self.base_dir, f"step_{step:08d}")
+        with open(os.path.join(cdir, _MANIFEST)) as f:
+            manifest = json.load(f)
+        flat, treedef = jax.tree_util.tree_flatten(state_like)
+        paths = _leaf_paths(state_like)
+        if shardings is not None:
+            flat_sh = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec")
+            )
+        else:
+            flat_sh = [None] * len(flat)
+        out = []
+        for path, like, sh in zip(paths, flat, flat_sh):
+            entry = manifest["leaves"].get(path)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {path}")
+            fpath = os.path.join(cdir, entry["file"])
+            if verify and _sha256(fpath) != entry["sha256"]:
+                raise IOError(f"checksum mismatch for {path} in {cdir}")
+            arr = np.load(fpath, allow_pickle=False)
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                    f"state {like.shape}"
+                )
+            if sh is not None:
+                out.append(jax.device_put(arr.astype(like.dtype), sh))
+            else:
+                out.append(jax.numpy.asarray(arr.astype(like.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out)

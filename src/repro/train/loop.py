@@ -1,0 +1,152 @@
+"""The training loop: checkpoint/restart, preemption handling, straggler
+monitoring, staggered projector refresh, and subspace diagnostics.
+
+Deterministic resume: data batches are pure functions of the step index and
+optimizer RNG lives in the checkpointed state, so a killed-and-restarted run
+re-produces the uninterrupted run bit-for-bit (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import lowrank as lowrank_lib
+from repro.core import metrics as metrics_lib
+from repro.train import checkpoint as ckpt_lib
+from repro.train.monitor import StepMonitor
+from repro.train.state import TrainState
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: TrainState
+    history: List[Dict[str, float]]
+    final_step: int
+    losses: List[float]
+
+
+class _PreemptionGuard:
+    """SIGTERM/SIGINT -> finish the current step, checkpoint, exit cleanly."""
+
+    def __init__(self, enable: bool):
+        self.requested = False
+        self._installed = False
+        if enable:
+            try:
+                self._prev_term = signal.signal(signal.SIGTERM, self._handler)
+                self._installed = True
+            except ValueError:
+                pass  # not on main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore(self):
+        if self._installed:
+            signal.signal(signal.SIGTERM, self._prev_term)
+
+
+def train_loop(
+    model,
+    optimizer: lowrank_lib.LowRankOptimizer,
+    data,
+    train_cfg: TrainConfig,
+    step_fns: Dict[str, Callable],
+    *,
+    state: Optional[TrainState] = None,
+    mesh=None,
+    shardings: Optional[PyTree] = None,
+    log_every: int = 50,
+    eval_fn: Optional[Callable[[TrainState, int], Dict[str, float]]] = None,
+    track_subspace: bool = False,
+    handle_signals: bool = True,
+    batch_hook: Optional[Callable] = None,
+) -> TrainResult:
+    tau = max(optimizer.config.tau, 1)
+    groups = max(optimizer.config.refresh_groups, 1)
+    manager = ckpt_lib.CheckpointManager(
+        train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints
+    )
+    monitor = StepMonitor()
+    guard = _PreemptionGuard(handle_signals)
+    tracker = metrics_lib.OverlapTracker() if track_subspace else None
+
+    # ---- init / restore ----
+    if state is None:
+        params = model.init(jax.random.PRNGKey(train_cfg.seed))
+        state = TrainState(params, optimizer.init(params))
+    start_step = 0
+    latest = ckpt_lib.latest_step(train_cfg.checkpoint_dir)
+    if latest is not None:
+        state = manager.load(state, step=latest, shardings=shardings)
+        start_step = latest
+    history: List[Dict[str, float]] = []
+    losses: List[float] = []
+
+    step = start_step
+    try:
+        for step in range(start_step, train_cfg.total_steps):
+            batch = data.batch_at(step)
+            if batch_hook is not None:
+                batch = batch_hook(batch)
+            monitor.start_step()
+            # Staggered refresh: group g refreshes at steps where
+            # step % (tau/groups) == 0, cycling groups (DESIGN.md §2).
+            sub_tau = max(tau // groups, 1)
+            if step % sub_tau == 0:
+                group = (step // sub_tau) % groups
+                state, m = step_fns["jit_refresh_step"](
+                    state, batch, group=group
+                )
+            else:
+                state, m = step_fns["jit_step"](state, batch)
+            loss = float(m["loss"])
+            losses.append(loss)
+            health = monitor.end_step(step, loss)
+            if tracker is not None and step % sub_tau == 0:
+                projs = metrics_lib.collect_projectors(
+                    state.opt_state, optimizer.specs
+                )
+                tracker.observe(
+                    {k: np.asarray(v) for k, v in projs.items()}
+                )
+            if step % log_every == 0 or step == train_cfg.total_steps - 1:
+                rec = {
+                    "step": float(step),
+                    "loss": loss,
+                    "grad_norm": float(m.get("grad_norm", np.nan)),
+                    **{k: float(v) for k, v in health.items()},
+                }
+                if eval_fn is not None:
+                    rec.update(eval_fn(state, step))
+                history.append(rec)
+            if (
+                train_cfg.checkpoint_every > 0
+                and (step + 1) % train_cfg.checkpoint_every == 0
+            ):
+                manager.save(
+                    state, step + 1, blocking=not train_cfg.async_checkpoint
+                )
+            if guard.requested:
+                manager.save(state, step + 1, blocking=True)
+                break
+        else:
+            step = train_cfg.total_steps - 1
+    finally:
+        manager.wait()
+        guard.restore()
+
+    result = TrainResult(
+        state=state, history=history, final_step=step + 1, losses=losses
+    )
+    if tracker is not None:
+        result.subspace = tracker  # type: ignore[attr-defined]
+    return result

@@ -1,0 +1,89 @@
+"""Runtime health monitoring: straggler detection, NaN sentinels, heartbeats.
+
+On a real multi-host pod these feed the coordination service; here they are
+host-local but fully functional (and unit-tested with a fake clock):
+
+  * ``StepMonitor``     -- per-step wall time EMA + median; flags steps slower
+    than ``straggler_factor`` x median (straggler mitigation hook: the train
+    loop logs and can re-shard/skip input hosts); NaN/Inf loss sentinel with
+    configurable tolerance before abort.
+  * ``HeartbeatRegistry`` -- worker liveness bookkeeping with stale-detection,
+    the restart-decision input for the launcher.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class StepMonitor:
+    def __init__(
+        self,
+        straggler_factor: float = 3.0,
+        window: int = 50,
+        max_bad_losses: int = 5,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.straggler_factor = straggler_factor
+        self.window = window
+        self.max_bad_losses = max_bad_losses
+        self._clock = clock
+        self._times: List[float] = []
+        self._t_start: Optional[float] = None
+        self.stragglers: List[int] = []
+        self.bad_loss_count = 0
+        self.step_count = 0
+
+    def start_step(self) -> None:
+        self._t_start = self._clock()
+
+    def end_step(self, step: int, loss: float) -> Dict[str, float]:
+        dt = self._clock() - (self._t_start or self._clock())
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        self.step_count += 1
+        med = sorted(self._times)[len(self._times) // 2]
+        is_straggler = (
+            len(self._times) >= 5 and dt > self.straggler_factor * med
+        )
+        if is_straggler:
+            self.stragglers.append(step)
+        if not math.isfinite(loss):
+            self.bad_loss_count += 1
+            if self.bad_loss_count > self.max_bad_losses:
+                raise FloatingPointError(
+                    f"{self.bad_loss_count} non-finite losses; aborting "
+                    f"(last at step {step})"
+                )
+        else:
+            self.bad_loss_count = 0
+        return {
+            "step_time_s": dt,
+            "median_step_time_s": med,
+            "straggler": float(is_straggler),
+        }
+
+
+class HeartbeatRegistry:
+    def __init__(
+        self,
+        timeout_s: float = 60.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last: Dict[str, float] = {}
+
+    def beat(self, worker: str) -> None:
+        self._last[worker] = self._clock()
+
+    def stale(self) -> List[str]:
+        now = self._clock()
+        return [
+            w for w, t in self._last.items() if now - t > self.timeout_s
+        ]
+
+    def healthy(self) -> bool:
+        return not self.stale()

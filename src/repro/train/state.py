@@ -1,0 +1,17 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from repro.core.lowrank import LowRankOptState
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: LowRankOptState
+
+    @property
+    def step(self):
+        return self.opt_state.step

@@ -1,0 +1,224 @@
+"""Train/serve step builders: model + optimizer + mesh -> compiled callables.
+
+Two training-step flavors:
+
+* ``standard``  -- one ``jit`` over the global batch.  XLA SPMD inserts the
+  DP gradient reduction implied by the param shardings (FSDP over ``data``,
+  TP over ``model``, DP over ``pod``+``data``).
+
+* ``compressed`` -- the beyond-paper *project-then-reduce* schedule: the step
+  is a ``shard_map`` manual over the DP axes (``model`` stays auto/SPMD).
+  Per-shard gradients of low-rank leaves are projected to R-space (r x n)
+  BEFORE the cross-replica mean, shrinking DP gradient traffic by ~d/r on
+  every non-refresh step (exact by linearity; P is replicated).  Refresh
+  steps (1/tau of steps) reduce full-rank and recompute projectors.
+  In this mode params are NOT FSDP-sharded over the DP axes (they must be
+  replica-identical inside the manual region); memory-for-bandwidth trade
+  documented in EXPERIMENTS.md §Perf.
+
+Both flavors build TWO executables -- (refresh=False) hot path and
+(refresh=True) projector-refresh path -- selected by the caller on
+``step % tau == 0``.  Keeping the SVD out of the hot executable keeps its HLO
+clean (DESIGN.md §2).
+
+Microbatching (gradient accumulation) wraps the loss-grad in a ``lax.scan``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.core import lowrank as lowrank_lib
+from repro.launch import sharding as shd
+from repro.launch.mesh import batch_axes
+from repro.models.model_zoo import Model
+from repro.train.state import TrainState
+
+PyTree = Any
+
+
+def _value_and_grad(model: Model, microbatch: int):
+    """(params, batch) -> ((loss, metrics), grads), with optional accum."""
+
+    def single(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    if microbatch <= 0:
+        return single
+
+    def accumulated(params, batch):
+        gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        n_micro = max(gb // microbatch, 1)
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            batch,
+        )
+
+        def body(carry, micro):
+            (loss_sum, grads_sum) = carry
+            (loss, metrics), grads = single(params, micro)
+            grads_sum = jax.tree_util.tree_map(jnp.add, grads_sum, grads)
+            return (loss_sum + loss, grads_sum), metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        # rolled scan: the point of accumulation is the activation-memory
+        # saving; the dry-run corrects the while-body cost undercount with
+        # an n_micro multiplier (launch/dryrun.py).
+        (loss_sum, grads_sum), metrics = jax.lax.scan(
+            body, (jnp.zeros(()), zeros), mb
+        )
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads_sum)
+        last_metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        return (loss_sum / n_micro, last_metrics), grads
+
+    return accumulated
+
+
+def make_train_step(
+    model: Model,
+    optimizer: lowrank_lib.LowRankOptimizer,
+    *,
+    mesh=None,
+    train_cfg: Optional[TrainConfig] = None,
+    compressed="",  # False/'' | True/'flat' | 'pod' 
+    donate: bool = True,
+) -> Dict[str, Callable]:
+    """Returns {'step': f(state, batch), 'refresh_step': f, 'jit_*': jitted}.
+
+    The jitted versions carry in/out shardings when a mesh is given.
+    """
+    micro = train_cfg.microbatch if train_cfg else 0
+    vg = _value_and_grad(model, micro)
+
+    def step_fn(state: TrainState, batch, *, refresh: bool, group: int = 0):
+        (loss, metrics), grads = vg(state.params, batch)
+        updates, opt_state, aux = optimizer.update(
+            grads, state.opt_state, state.params, refresh=refresh, group=group
+        )
+        params = lowrank_lib.apply_updates(state.params, updates)
+        out_metrics = {
+            **metrics,
+            "grad_norm": aux.grad_norm,
+            "update_norm": aux.update_norm,
+            "refresh_overlap": aux.mean_refresh_overlap,
+        }
+        return TrainState(params, opt_state), out_metrics
+
+    def compressed_step_fn(
+        state: TrainState, batch, *, refresh: bool, group: int = 0
+    ):
+        # 'pod' compression mode: only the slow INTER-POD axis goes manual --
+        # gradients are projected to R-space before crossing pods, while
+        # FSDP/TP over (data, model) stay fully auto inside each pod.  This
+        # is the hierarchical schedule the flat-compressed experiments showed
+        # is needed at scale (EXPERIMENTS.md §Perf cell 3).
+        if compressed == "pod":
+            dp = tuple(a for a in ("pod",) if a in mesh.axis_names)
+            if not dp:
+                raise ValueError("'pod' compression needs a pod axis")
+        else:
+            dp = batch_axes(mesh)
+        nrep = 1
+        for a in dp:
+            nrep *= mesh.shape[a]
+
+        if compressed == "pod":
+            # manual only over 'pod': dim0 splits across pods; the intra-pod
+            # data sharding of the per-pod view stays auto.
+            batch_specs = jax.tree_util.tree_map(
+                lambda x: P("pod", *([None] * (x.ndim - 1)))
+                if x.shape[0] % mesh.shape["pod"] == 0 else P(),
+                batch,
+            )
+        else:
+            batch_specs = jax.tree_util.tree_map(
+                lambda x: shd.batch_spec(x.shape, mesh), batch
+            )
+
+        def shard_body(state, batch):
+            (loss, metrics), grads = vg(state.params, batch)
+            if refresh:
+                grads = jax.lax.pmean(grads, dp)
+                updates, opt_state, aux = optimizer.update(
+                    grads, state.opt_state, state.params,
+                    refresh=True, group=group,
+                )
+            else:
+                rgrads = lowrank_lib.project_grads(
+                    optimizer, grads, state.opt_state
+                )
+                rgrads = jax.lax.pmean(rgrads, dp)
+                updates, opt_state, aux = optimizer.update(
+                    rgrads, state.opt_state, state.params,
+                    refresh=False, projected=True,
+                )
+            params = lowrank_lib.apply_updates(state.params, updates)
+            metrics = jax.lax.pmean(metrics, dp)
+            out_metrics = {
+                **metrics,
+                "grad_norm": aux.grad_norm,
+                "update_norm": aux.update_norm,
+                "refresh_overlap": aux.mean_refresh_overlap,
+            }
+            return TrainState(params, opt_state), out_metrics
+
+        return jax.shard_map(
+            shard_body,
+            mesh=mesh,
+            in_specs=(P(), batch_specs),
+            out_specs=(P(), P()),
+            axis_names=set(dp),
+            check_vma=False,
+        )(state, batch)
+
+    base = compressed_step_fn if compressed else step_fn
+    # normalize legacy bool
+
+    fns = {
+        "step": functools.partial(base, refresh=False),
+        "refresh_step": functools.partial(base, refresh=True),
+    }
+
+    donate_args = (0,) if donate else ()
+    fns["jit_step"] = jax.jit(fns["step"], donate_argnums=donate_args)
+    refresh_groups = optimizer.config.refresh_groups
+    fns["jit_refresh_step"] = jax.jit(
+        functools.partial(base, refresh=True),
+        static_argnames=("group",),
+        donate_argnums=donate_args,
+    )
+    fns["refresh_groups"] = refresh_groups
+    return fns
+
+
+def shard_train_state(state: TrainState, mesh) -> Tuple[TrainState, PyTree]:
+    """Device-put a train state according to the sharding rules."""
+    shardings = shd.tree_shardings(state, mesh)
+    placed = jax.tree_util.tree_map(jax.device_put, state, shardings)
+    return placed, shardings
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_fn(model: Model):
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_fn
+
+
+def make_decode_fn(model: Model):
+    def decode_fn(params, cache, batch):
+        return model.decode(params, cache, batch)
+
+    return decode_fn

@@ -1,0 +1,29 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- tests see 1 device; the
+multi-device tests spawn subprocesses with their own device counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    return ModelConfig(
+        arch_id="tiny-dense", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, dtype=jnp.float32,
+        loss_chunk=32, attn_chunk_q=16, attn_chunk_kv=16,
+    )
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_params(key, shapes):
+    return {
+        name: jax.random.normal(jax.random.fold_in(key, i), shape) * 0.02
+        for i, (name, shape) in enumerate(shapes.items())
+    }

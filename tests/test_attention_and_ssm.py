@@ -1,0 +1,145 @@
+"""Exactness of the scalable implementations against naive oracles:
+chunked online-softmax attention and chunked SSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import attention, chunked_attention, exact_attention
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, Sq, Sk, H, KVH, D, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KVH, D))
+    v = jax.random.normal(ks[2], (B, Sk, KVH, D))
+    pos_q = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq)).astype(jnp.int32)
+    pos_k = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk)).astype(jnp.int32)
+    return q, k, v, pos_q, pos_k
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 13])
+@pytest.mark.parametrize("cq,ck", [(16, 16), (16, 24), (7, 11)])
+def test_chunked_equals_exact(causal, window, cq, ck):
+    q, k, v, pq, pk = _qkv(2, 50, 50, 4, 2, 16)
+    a = exact_attention(q, k, v, pq, pk, causal=causal, window=window)
+    b = chunked_attention(
+        q, k, v, pq, pk, causal=causal, window=window, chunk_q=cq, chunk_kv=ck
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_block_skip_correctness():
+    """Causal block skipping must not change results."""
+    q, k, v, pq, pk = _qkv(1, 64, 64, 2, 2, 16)
+    with_skip = chunked_attention(
+        q, k, v, pq, pk, causal=True, chunk_q=16, chunk_kv=16,
+        skip_masked_blocks=True,
+    )
+    without = chunked_attention(
+        q, k, v, pq, pk, causal=True, chunk_q=16, chunk_kv=16,
+        skip_masked_blocks=False,
+    )
+    np.testing.assert_allclose(
+        np.asarray(with_skip), np.asarray(without), atol=1e-5
+    )
+
+
+def test_invalid_positions_masked():
+    """kv slots with pos=-1 (unwritten cache) contribute nothing."""
+    q, k, v, pq, pk = _qkv(1, 4, 16, 2, 2, 16)
+    pk_masked = pk.at[:, 8:].set(-1)
+    a = exact_attention(q, k[:, :8], v[:, :8], pq, pk[:, :8], causal=False)
+    b = exact_attention(q, k, v, pq, pk_masked, causal=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_decode_single_query():
+    q, k, v, pq, pk = _qkv(2, 1, 33, 4, 2, 16)
+    pq = jnp.full((2, 1), 32, jnp.int32)
+    a = attention(q, k, v, pq, pk, causal=True, impl="exact")
+    b = attention(q, k, v, pq, pk, causal=True, impl="chunked", chunk_kv=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@given(
+    s=st.integers(4, 40),
+    h=st.sampled_from([1, 2, 4]),
+    kvh_div=st.sampled_from([1, 2]),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=15, deadline=None)
+def test_property_softmax_rows_sum_preserved(s, h, kvh_div, seed):
+    """Attention output is a convex combination of V rows (bounded)."""
+    kvh = max(1, h // kvh_div)
+    q, k, v, pq, pk = _qkv(1, s, s, h, kvh, 8, seed)
+    out = exact_attention(q, k, v, pq, pk, causal=True)
+    vmax = float(jnp.max(jnp.abs(v))) + 1e-5
+    assert float(jnp.max(jnp.abs(out))) <= vmax + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+def _naive_ssd(x, dt, a, bm, cm):
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+    state = np.zeros((B, H, N, P))
+    ys = np.zeros((B, S, H, P))
+    xn, dtn, bn, cn, an = map(np.asarray, (x, dt, bm, cm, a))
+    for t in range(S):
+        decay = np.exp(dtn[:, t, :] * an[None, :])
+        state = state * decay[:, :, None, None] + np.einsum(
+            "bn,bhp->bhnp", bn[:, t], xn[:, t] * dtn[:, t][..., None]
+        )
+        ys[:, t] = np.einsum("bn,bhnp->bhp", cn[:, t], state)
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 33])
+@pytest.mark.parametrize("s", [16, 33, 64])
+def test_ssd_chunked_equals_recurrence(chunk, s):
+    B, H, P, N = 2, 4, 8, 6
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, s, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, s, N)) * 0.5
+    cm = jax.random.normal(ks[4], (B, s, N)) * 0.5
+    y, st_ = ssd_chunked(x, dt, a, bm, cm, chunk=chunk)
+    y_ref, st_ref = _naive_ssd(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_), st_ref, atol=1e-3)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence across two ssd calls == one call (prefill/decode
+    state handoff correctness)."""
+    B, S, H, P, N = 1, 32, 2, 8, 4
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    cm = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    y_full, st_full = ssd_chunked(x, dt, a, bm, cm, chunk=8)
+    half = S // 2
+    y1, st1 = ssd_chunked(
+        x[:, :half], dt[:, :half], a, bm[:, :half], cm[:, :half], chunk=8
+    )
+    y2, st2 = ssd_chunked(
+        x[:, half:], dt[:, half:], a, bm[:, half:], cm[:, half:], chunk=8,
+        init_state=st1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)),
+        np.asarray(y_full), atol=1e-3,
+    )
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full), atol=1e-3)

@@ -1,0 +1,209 @@
+"""Distributed behavior on 8 fake CPU devices.
+
+Each test runs in a SUBPROCESS with --xla_force_host_platform_device_count=8
+so the main pytest process keeps its single-device view (the dry-run rule:
+only dryrun.py forces device counts).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, timeout=420):
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_config
+        from repro.configs.specs import concrete_train_batch
+        from repro.models import build_model
+        from repro.core import make_optimizer
+        from repro.launch.mesh import make_mesh
+        from repro.launch import sharding as shd
+        from repro.train.state import TrainState
+        from repro.train.step import make_train_step, shard_train_state
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    out = run_sub("""
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("galore-sara-adam", params, rank=8, tau=5, lr=1e-3)
+    state = TrainState(params, opt.init(params))
+    batch = concrete_train_batch(cfg, 8, 32)
+    # single-device result
+    fns0 = make_train_step(model, opt, donate=False)
+    s0, m0 = fns0["jit_step"](state, batch)
+    mesh = make_mesh((4, 2))
+    with mesh:
+        st, _ = shard_train_state(state, mesh)
+        bsh = jax.device_put(batch, shd.batch_shardings(batch, mesh))
+        fns = make_train_step(model, opt, mesh=mesh, donate=False)
+        s1, m1 = fns["jit_step"](st, bsh)
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(s0.params),
+        jax.tree_util.tree_leaves(s1.params)))
+    assert d < 1e-4, d
+    print("OK", d)
+    """)
+    assert "OK" in out
+
+
+def test_compressed_dp_equals_standard():
+    out = run_sub("""
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32,
+                                                    n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("galore-sara-adam", params, rank=8, tau=5, lr=1e-3)
+    state = TrainState(params, opt.init(params))
+    batch = concrete_train_batch(cfg, 8, 32)
+    mesh = make_mesh((4, 2))
+    with mesh:
+        st, _ = shard_train_state(state, mesh)
+        bsh = jax.device_put(batch, shd.batch_shardings(batch, mesh))
+        s1, _ = make_train_step(model, opt, mesh=mesh,
+                                donate=False)["jit_step"](st, bsh)
+        s2, _ = make_train_step(model, opt, mesh=mesh, compressed=True,
+                                donate=False)["jit_step"](st, bsh)
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(s1.params),
+        jax.tree_util.tree_leaves(s2.params)))
+    assert d < 1e-5, d
+    print("OK", d)
+    """)
+    assert "OK" in out
+
+
+def test_compression_reduces_dp_allreduce_bytes():
+    """project-then-reduce must shrink the DP gradient collectives in HLO."""
+    out = run_sub("""
+    from repro.roofline.analysis import collective_stats
+    cfg = get_config("llama3-8b", smoke=True).with_(
+        dtype=jnp.float32, n_layers=2, d_model=256, n_heads=4, head_dim=64,
+        n_kv_heads=2, d_ff=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("galore-sara-adam", params, rank=8, tau=5, lr=1e-3,
+                         min_dim=64)
+    state = TrainState(params, opt.init(params))
+    batch = concrete_train_batch(cfg, 8, 32)
+    mesh = make_mesh((8, 1))  # pure DP so all collectives are grad syncs
+    sizes = {}
+    with mesh:
+        ssh = shd.tree_shardings(state, mesh)
+        bsh = shd.batch_shardings(batch, mesh)
+        for name, comp in (("std", False), ("cmp", True)):
+            fns = make_train_step(model, opt, mesh=mesh, compressed=comp,
+                                  donate=False)
+            c = jax.jit(fns["step"], in_shardings=(ssh, bsh)).lower(
+                state, batch).compile()
+            sizes[name] = collective_stats(c.as_text())["total_bytes"]
+    print("std", sizes["std"], "cmp", sizes["cmp"])
+    assert sizes["cmp"] < 0.8 * sizes["std"], sizes
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_moe_ep_equals_local_on_mesh():
+    out = run_sub("""
+    from repro.models import moe as moe_lib
+    cfg = get_config("deepseek-moe-16b", smoke=True).with_(
+        dtype=jnp.float32, moe_capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.init_moe_mlp(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (4, 16, cfg.d_model)) * 0.5
+    out_local, _ = moe_lib._apply_moe_local(p, x, cfg)
+    mesh = make_mesh((2, 4))
+    with mesh:
+        out_ep, _ = jax.jit(lambda p_, x_: moe_lib.apply_moe_mlp(
+            p_, x_, cfg))(p, x)
+    err = float(jnp.max(jnp.abs(out_local - out_ep)))
+    assert err < 1e-4, err
+    print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_elastic_restore_1_to_8_devices(tmp_path):
+    """Checkpoint saved unsharded on 1 device restores sharded on 8."""
+    ckpt = str(tmp_path / "elastic")
+    # save on a single device (subprocess without forced device count)
+    code_save = f"""
+import jax, jax.numpy as jnp
+from repro.configs.registry import get_config
+from repro.models import build_model
+from repro.core import make_optimizer
+from repro.train.state import TrainState
+from repro.train.checkpoint import CheckpointManager
+cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt = make_optimizer("galore-sara-adam", params, rank=8)
+state = TrainState(params, opt.init(params))
+CheckpointManager({ckpt!r}, keep=1).save(state, 5)
+print("SAVED")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code_save], capture_output=True, text=True,
+        timeout=300, env=env,
+    )
+    assert out.returncode == 0, out.stderr
+    out = run_sub(f"""
+    from repro.train.checkpoint import CheckpointManager
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("galore-sara-adam", params, rank=8)
+    skeleton = TrainState(params, opt.init(params))
+    mesh = make_mesh((4, 2))
+    with mesh:
+        sh = shd.tree_shardings(skeleton, mesh)
+        restored = CheckpointManager({ckpt!r}, keep=1).load(
+            skeleton, shardings=sh)
+    for a, b in zip(jax.tree_util.tree_leaves(skeleton.params),
+                    jax.tree_util.tree_leaves(restored.params)):
+        assert a.shape == b.shape
+    # restored params match the originals bit-for-bit
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(restored.params)))
+    assert d == 0.0, d
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_production_mesh_shapes():
+    out = run_sub("""
+    # can't build 512 devices here; validate the mesh spec logic instead
+    from repro.launch.mesh import make_mesh, batch_axes
+    m = make_mesh((4, 2))
+    assert m.axis_names == ("data", "model")
+    assert batch_axes(m) == ("data",)
+    m3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    assert batch_axes(m3) == ("pod", "data")
+    print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,158 @@
+"""Inner stateful optimizers: Adam reference math, factored/quantized
+variants, memory footprints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import inner as inner_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run(opt, g_seq, shape):
+    st_ = opt.init(jnp.zeros(shape))
+    outs = []
+    for t, g in enumerate(g_seq, start=1):
+        d, st_ = opt.update(g, st_, jnp.asarray(t))
+        outs.append(d)
+    return outs, st_
+
+
+def test_adam_matches_reference():
+    opt = inner_lib.adam(b1=0.9, b2=0.999, eps=1e-8)
+    shape = (8, 16)
+    gs = [
+        jax.random.normal(jax.random.fold_in(KEY, t), shape) for t in range(5)
+    ]
+    outs, _ = _run(opt, gs, shape)
+    # numpy reference
+    m = np.zeros(shape)
+    v = np.zeros(shape)
+    for t, g in enumerate(gs, start=1):
+        g = np.asarray(g)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        ref = mh / (np.sqrt(vh) + 1e-8)
+        # fp32 (jax) vs fp64 (numpy reference) accumulation
+        np.testing.assert_allclose(np.asarray(outs[t - 1]), ref, atol=2e-4)
+
+
+def test_adam_first_step_is_sign_like():
+    opt = inner_lib.adam()
+    g = jax.random.normal(KEY, (16,))
+    d, _ = opt.update(g, opt.init(g), jnp.asarray(1))
+    np.testing.assert_allclose(
+        np.asarray(d), np.sign(np.asarray(g)), atol=1e-3
+    )
+
+
+def test_adafactor_factored_second_moment_shapes():
+    opt = inner_lib.adafactor()
+    x = jnp.zeros((4, 8, 16))
+    st_ = opt.init(x)
+    assert st_.vr.shape == (4, 8)
+    assert st_.vc.shape == (4, 16)
+    g = jax.random.normal(KEY, x.shape)
+    d, st_ = opt.update(g, st_, jnp.asarray(1))
+    assert d.shape == x.shape and np.isfinite(np.asarray(d)).all()
+
+
+def test_adafactor_memory_sublinear():
+    shape = (64, 128)
+    full = inner_lib.adam().init(jnp.zeros(shape))
+    fact = inner_lib.adafactor().init(jnp.zeros(shape))
+    bytes_full = sum(x.size * 4 for x in jax.tree_util.tree_leaves(full))
+    bytes_fact = sum(x.size * 4 for x in jax.tree_util.tree_leaves(fact))
+    # adafactor keeps m (same) but v is rows+cols instead of rows*cols
+    assert bytes_fact < 0.6 * bytes_full
+
+
+def test_adam_mini_rowwise_v():
+    opt = inner_lib.adam_mini()
+    x = jnp.zeros((8, 32))
+    st_ = opt.init(x)
+    assert st_.v.shape == (8,)
+    g = jnp.ones((8, 32))
+    d, st_ = opt.update(g, st_, jnp.asarray(1))
+    # uniform gradient => direction ~ sign
+    np.testing.assert_allclose(np.asarray(d), np.ones((8, 32)), atol=1e-2)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(KEY, (1000,)) * 3.0
+    codes, scale = inner_lib.quantize_blockwise(x, signed=True)
+    x2 = inner_lib.dequantize_blockwise(codes, scale, x.shape, signed=True)
+    err = np.abs(np.asarray(x - x2))
+    # linear 8-bit: error < absmax/127 per block
+    assert err.max() < float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+def test_quantize_unsigned_nonneg():
+    x = jnp.abs(jax.random.normal(KEY, (512,)))
+    codes, scale = inner_lib.quantize_blockwise(x, signed=False)
+    x2 = inner_lib.dequantize_blockwise(codes, scale, x.shape, signed=False)
+    assert (np.asarray(x2) >= 0).all()
+    # sqrt-mapped codes: |err| <= 2*sqrt(v*max)/255 + max/255^2
+    mx = float(jnp.max(x))
+    bound = 2 * np.sqrt(np.asarray(x) * mx) / 255 + mx / 255**2 + 1e-6
+    assert (np.abs(np.asarray(x - x2)) <= bound).all()
+
+
+def test_quantize_unsigned_preserves_small_values():
+    """The reason for sqrt codes: tiny v must not collapse to zero."""
+    x = jnp.array([1e-6, 1e-4, 1e-2, 1.0])
+    codes, scale = inner_lib.quantize_blockwise(x, signed=False)
+    x2 = inner_lib.dequantize_blockwise(codes, scale, x.shape, signed=False)
+    assert float(x2[1]) > 0  # linear codes would round 1e-4/1.0 to 0
+
+
+def test_adam8bit_tracks_adam():
+    """8-bit Adam direction stays close to fp32 Adam over steps."""
+    shape = (32, 64)
+    opt32 = inner_lib.adam()
+    opt8 = inner_lib.adam8bit()
+    s32, s8 = opt32.init(jnp.zeros(shape)), opt8.init(jnp.zeros(shape))
+    cos = []
+    for t in range(1, 8):
+        g = jax.random.normal(jax.random.fold_in(KEY, t), shape) * 0.1
+        d32, s32 = opt32.update(g, s32, jnp.asarray(t))
+        d8, s8 = opt8.update(g, s8, jnp.asarray(t))
+        c = float(
+            jnp.sum(d32 * d8)
+            / (jnp.linalg.norm(d32) * jnp.linalg.norm(d8) + 1e-9)
+        )
+        cos.append(c)
+    assert min(cos) > 0.98, cos
+
+
+def test_msgd_convention():
+    """Paper/GoLore convention: M = (1-b1) M + b1 G."""
+    opt = inner_lib.msgd(b1=0.25)
+    g = jnp.ones((4,))
+    st_ = opt.init(g)
+    d1, st_ = opt.update(g, st_, jnp.asarray(1))
+    np.testing.assert_allclose(np.asarray(d1), 0.25 * np.ones(4), atol=1e-6)
+    d2, st_ = opt.update(g, st_, jnp.asarray(2))
+    np.testing.assert_allclose(
+        np.asarray(d2), (0.75 * 0.25 + 0.25) * np.ones(4), atol=1e-6
+    )
+
+
+@given(
+    shape=st.sampled_from([(7,), (5, 9), (3, 4, 8)]),
+    seed=st.integers(0, 100),
+    name=st.sampled_from(
+        ["adam", "msgd", "adafactor", "adam_mini", "adam8bit"]
+    ),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_direction_descends(shape, seed, name):
+    """Every inner optimizer's direction positively correlates with g."""
+    opt = inner_lib.make_inner(name)
+    g = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    d, _ = opt.update(g, opt.init(g), jnp.asarray(1))
+    assert float(jnp.sum(d * g)) > 0

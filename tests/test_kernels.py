@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lowrank_update.kernel import lowrank_adam_update
+from repro.kernels.lowrank_update.ops import fused_lowrank_adam_update
+from repro.kernels.lowrank_update.ref import lowrank_adam_update_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# fused low-rank Adam update
+# ---------------------------------------------------------------------------
+
+LOWRANK_SHAPES = [
+    (256, 512, 128),
+    (512, 1024, 64),
+    (128, 384, 32),
+    (100, 200, 16),  # ragged -> whole-array blocks
+    (384, 640, 256),
+]
+
+
+@pytest.mark.parametrize("d,n,r", LOWRANK_SHAPES)
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_update_matches_ref(d, n, r, wdtype):
+    ks = jax.random.split(KEY, 5)
+    w = (jax.random.normal(ks[0], (d, n)) * 0.1).astype(wdtype)
+    p, _ = jnp.linalg.qr(jax.random.normal(ks[1], (d, r)))
+    rg = jax.random.normal(ks[2], (r, n)) * 0.01
+    m = jax.random.normal(ks[3], (r, n)) * 0.01
+    v = jnp.abs(jax.random.normal(ks[4], (r, n))) * 1e-4
+    step = jnp.asarray(7, jnp.int32)
+    lr = jnp.asarray(3e-3, jnp.float32)
+    w1, m1, v1 = lowrank_adam_update(
+        w, p, rg, m, v, step, lr, interpret=True
+    )
+    w2, m2, v2 = lowrank_adam_update_ref(
+        w, p, rg, m, v, b1=0.9, b2=0.999, eps=1e-8, step=step, lr_alpha=lr
+    )
+    tol = 1e-5 if wdtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(w1, np.float32), np.asarray(w2, np.float32), atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+
+
+def test_lowrank_update_step_dependence():
+    """Bias correction: step=1 vs step=1000 must differ."""
+    d, n, r = 128, 256, 32
+    ks = jax.random.split(KEY, 5)
+    w = jax.random.normal(ks[0], (d, n)) * 0.1
+    p, _ = jnp.linalg.qr(jax.random.normal(ks[1], (d, r)))
+    rg = jax.random.normal(ks[2], (r, n)) * 0.01
+    m = jnp.zeros((r, n))
+    v = jnp.zeros((r, n))
+    lr = jnp.asarray(1e-3, jnp.float32)
+    w1, _, _ = lowrank_adam_update(
+        w, p, rg, m, v, jnp.asarray(1, jnp.int32), lr, interpret=True
+    )
+    w2, _, _ = lowrank_adam_update(
+        w, p, rg, m, v, jnp.asarray(1000, jnp.int32), lr, interpret=True
+    )
+    assert float(jnp.max(jnp.abs(w1 - w2))) > 1e-6
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    d, n, r = 64, 128, 16
+    ks = jax.random.split(KEY, 5)
+    w = jax.random.normal(ks[0], (d, n))
+    p, _ = jnp.linalg.qr(jax.random.normal(ks[1], (d, r)))
+    rg = jax.random.normal(ks[2], (r, n))
+    m = jnp.zeros((r, n))
+    v = jnp.zeros((r, n))
+    out = fused_lowrank_adam_update(
+        w, p, rg, m, v, jnp.asarray(1, jnp.int32),
+        jnp.asarray(1e-3, jnp.float32),
+    )
+    assert out[0].shape == (d, n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    dict(B=2, S=128, H=4, KVH=2, D=64, causal=True, window=0, bq=32, bk=32),
+    dict(B=1, S=256, H=8, KVH=8, D=128, causal=True, window=0, bq=64, bk=64),
+    dict(B=2, S=128, H=4, KVH=1, D=64, causal=False, window=0, bq=32, bk=64),
+    dict(B=1, S=128, H=2, KVH=2, D=64, causal=True, window=40, bq=32, bk=32),
+    dict(B=1, S=96, H=2, KVH=2, D=64, causal=True, window=0, bq=33, bk=31),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    c = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (c["B"], c["S"], c["H"], c["D"])).astype(dtype)
+    k = jax.random.normal(ks[1], (c["B"], c["S"], c["KVH"], c["D"])).astype(
+        dtype
+    )
+    v = jax.random.normal(ks[2], (c["B"], c["S"], c["KVH"], c["D"])).astype(
+        dtype
+    )
+    out = flash_attention_fwd(
+        q, k, v, causal=c["causal"], window=c["window"],
+        block_q=c["bq"], block_kv=c["bk"], interpret=True,
+    )
+    ref = flash_attention_ref(q, k, v, causal=c["causal"], window=c["window"])
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_flash_attention_q_offset():
+    """Prefill continuation: absolute-position causal mask with offset."""
+    ks = jax.random.split(KEY, 3)
+    S, off = 64, 32
+    q = jax.random.normal(ks[0], (1, 32, 2, 64))
+    k = jax.random.normal(ks[1], (1, S, 2, 64))
+    v = jax.random.normal(ks[2], (1, S, 2, 64))
+    out = flash_attention_fwd(
+        q, k, v, causal=True, q_offset=off, block_q=16, block_kv=16,
+        interpret=True,
+    )
+    ref = flash_attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_gradients_flow():
+    from repro.kernels.flash_attention.kernel import flash_attention
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 64))
+    k = jax.random.normal(ks[1], (1, 64, 2, 64))
+    v = jax.random.normal(ks[2], (1, 64, 2, 64))
+
+    def f(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, 0, 0, True) ** 2)
+
+    gq, gk, gv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    # backward is the reference recompute: compare against pure-ref grads
+    def fr(q, k, v):
+        return jnp.sum(flash_attention_ref(q, k, v, causal=True) ** 2)
+
+    rq, rk, rv = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(np.asarray(gq), np.asarray(rq), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(rv), atol=1e-3)

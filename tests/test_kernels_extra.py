@@ -1,0 +1,65 @@
+"""RMSNorm + galore_project Pallas kernels vs oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.galore_project.kernel import galore_project
+from repro.kernels.galore_project.ref import galore_project_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (4, 16, 256), (100, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 2.0).astype(dtype)
+    scale = jax.random.normal(jax.random.fold_in(KEY, 1), (shape[-1],))
+    out = rmsnorm(x, scale, interpret=True, block_rows=4)
+    ref = rmsnorm_ref(x, scale)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_rmsnorm_unit_variance_rows():
+    x = jax.random.normal(KEY, (16, 128)) * 5.0
+    out = rmsnorm(x, jnp.ones((128,)), interpret=True)
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, np.ones(16), atol=1e-3)
+
+
+@pytest.mark.parametrize("d,n,r", [
+    (256, 512, 128), (512, 1024, 64), (100, 200, 16), (384, 768, 256),
+])
+@pytest.mark.parametrize("gdtype", [jnp.float32, jnp.bfloat16])
+def test_galore_project_matches_ref(d, n, r, gdtype):
+    ks = jax.random.split(KEY, 4)
+    g = (jax.random.normal(ks[0], (d, n)) * 0.1).astype(gdtype)
+    p, _ = jnp.linalg.qr(jax.random.normal(ks[1], (d, r)))
+    m = jax.random.normal(ks[2], (r, n)) * 0.01
+    v = jnp.abs(jax.random.normal(ks[3], (r, n))) * 1e-4
+    r1, m1, v1 = galore_project(g, p, m, v, interpret=True)
+    r2, m2, v2 = galore_project_ref(g, p, m, v, b1=0.9, b2=0.999)
+    tol = 1e-4 if gdtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=tol)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=tol)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=tol)
+
+
+def test_galore_project_accumulates_over_d_blocks():
+    """Multi-d-block grid must equal single-block (accumulator scratch)."""
+    d, n, r = 512, 256, 32
+    ks = jax.random.split(KEY, 4)
+    g = jax.random.normal(ks[0], (d, n))
+    p, _ = jnp.linalg.qr(jax.random.normal(ks[1], (d, r)))
+    m = jnp.zeros((r, n))
+    v = jnp.zeros((r, n))
+    r_multi, _, _ = galore_project(g, p, m, v, block_d=128, interpret=True)
+    r_single, _, _ = galore_project(g, p, m, v, block_d=512, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(r_multi), np.asarray(r_single), atol=1e-4
+    )

@@ -1,0 +1,226 @@
+"""The low-rank optimizer wrapper (Algorithm 1) end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    OptimizerConfig,
+    apply_updates,
+    make_lowrank_optimizer,
+    make_optimizer,
+    optimizer_memory_report,
+    parse_name,
+)
+from repro.core.lowrank import project_grads
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params():
+    return {
+        "blocks": {
+            "q_proj": jax.random.normal(KEY, (4, 32, 64)) * 0.02,
+            "down_proj": jax.random.normal(
+                jax.random.fold_in(KEY, 1), (4, 96, 32)
+            ) * 0.02,
+        },
+        "embed": jax.random.normal(jax.random.fold_in(KEY, 2), (128, 32)),
+        "norm_scale": jnp.ones((32,)),
+    }
+
+
+def _grads(params, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(k, p.size % 97), p.shape
+        ) * 0.01,
+        params,
+    )
+
+
+def test_parse_name():
+    assert parse_name("adam") == {"method": "full", "inner": "adam"}
+    assert parse_name("galore-adam") == {"method": "dominant", "inner": "adam"}
+    assert parse_name("galore-sara-adam")["method"] == "sara"
+    assert parse_name("fira-adam") == {
+        "method": "dominant", "inner": "adam", "fira": True
+    }
+    f = parse_name("fira-sara-adam8bit")
+    assert f["fira"] and f["method"] == "sara" and f["inner"] == "adam8bit"
+    assert parse_name("golore-msgd")["inner"] == "msgd"
+    with pytest.raises(ValueError):
+        parse_name("nonsense-foo")
+
+
+def test_identity_projector_equals_full_adam():
+    """With P=I (identity method, full rank) low-rank Adam == full Adam."""
+    params = _params()
+    full = make_optimizer("adam", params, lr=1e-3)
+    ident = make_optimizer(
+        "identity-adam", params, lr=1e-3, alpha=1.0,
+        rank=10**9, min_dim=1,
+    )
+    sf, si = full.init(params), ident.init(params)
+    pf, pi = params, params
+    for step in range(3):
+        g = _grads(params, step)
+        uf, sf, _ = full.update(g, sf, pf, refresh=False)
+        ui, si, _ = ident.update(
+            g, si, pi, refresh=(step == 0)
+        )
+        pf, pi = apply_updates(pf, uf), apply_updates(pi, ui)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(pf), jax.tree_util.tree_leaves(pi)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_memory_savings_vs_full_adam():
+    params = _params()
+    full = make_optimizer("adam", params)
+    low = make_optimizer("galore-sara-adam", params, rank=8)
+    rep_f = optimizer_memory_report(params, full.init(params))
+    rep_l = optimizer_memory_report(params, low.init(params))
+    assert rep_l["opt_state_bytes"] < rep_f["opt_state_bytes"]
+    # projected leaves: moments are r x n instead of m x n
+    assert rep_f["state_to_param_ratio"] > 1.9  # ~2 for Adam
+
+
+def test_projected_state_shapes():
+    params = _params()
+    opt = make_optimizer("galore-sara-adam", params, rank=8)
+    st = opt.init(params)
+    q_state = st.leaves["blocks"]["q_proj"]
+    assert q_state.projector.shape == (4, 32, 8)  # side=left, d=32
+    assert q_state.inner.m.shape == (4, 8, 64)
+    d_state = st.leaves["blocks"]["down_proj"]
+    assert d_state.projector.shape == (4, 32, 8)  # side=right, d=32
+    assert d_state.inner.m.shape == (4, 96, 8)
+    # excluded leaves stay full-rank
+    assert st.leaves["embed"].inner.m.shape == (128, 32)
+
+
+def test_refresh_changes_projector_and_tau_reuse():
+    params = _params()
+    opt = make_optimizer("galore-sara-adam", params, rank=8, tau=5)
+    st = opt.init(params)
+    g = _grads(params)
+    _, st1, _ = opt.update(g, st, params, refresh=True)
+    p1 = st1.leaves["blocks"]["q_proj"].projector
+    _, st2, _ = opt.update(g, st1, params, refresh=False)
+    p2 = st2.leaves["blocks"]["q_proj"].projector
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    _, st3, _ = opt.update(g, st2, params, refresh=True)
+    p3 = st3.leaves["blocks"]["q_proj"].projector
+    assert not np.allclose(np.asarray(p1), np.asarray(p3))
+
+
+def test_momentum_carry_modes():
+    params = _params()
+    g = _grads(params)
+    for carry in ("keep", "reset", "reproject"):
+        opt = make_optimizer(
+            "galore-sara-adam", params, rank=8, momentum_carry=carry
+        )
+        st = opt.init(params)
+        _, st, _ = opt.update(g, st, params, refresh=True)
+        _, st, _ = opt.update(g, st, params, refresh=False)
+        _, st, _ = opt.update(g, st, params, refresh=True)
+        m = st.leaves["blocks"]["q_proj"].inner.m
+        assert np.isfinite(np.asarray(m)).all(), carry
+
+
+def test_fira_adds_residual():
+    params = _params()
+    g = _grads(params)
+    plain = make_optimizer("galore-adam", params, rank=4, alpha=1.0, lr=1e-2)
+    fira = make_optimizer("fira-adam", params, rank=4, alpha=1.0, lr=1e-2)
+    sp, sf = plain.init(params), fira.init(params)
+    up, sp, _ = plain.update(g, sp, params, refresh=True)
+    uf, sf, _ = fira.update(g, sf, params, refresh=True)
+    dq = float(jnp.linalg.norm(
+        uf["blocks"]["q_proj"] - up["blocks"]["q_proj"]
+    ))
+    assert dq > 1e-8  # residual term engaged
+
+
+def test_projected_update_path_matches_internal_projection():
+    params = _params()
+    g = _grads(params)
+    opt = make_optimizer("galore-sara-adam", params, rank=8)
+    st = opt.init(params)
+    _, st, _ = opt.update(g, st, params, refresh=True)
+    u_int, st_int, _ = opt.update(g, st, params, refresh=False)
+    rg = project_grads(opt, g, st)
+    u_ext, st_ext, _ = opt.update(
+        rg, st, params, refresh=False, projected=True
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(u_int), jax.tree_util.tree_leaves(u_ext)
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_projected_refresh_rejected():
+    params = _params()
+    opt = make_optimizer("galore-sara-adam", params, rank=8)
+    st = opt.init(params)
+    with pytest.raises(ValueError):
+        opt.update(_grads(params), st, params, refresh=True, projected=True)
+
+
+def test_refresh_groups_stagger():
+    params = _params()
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=8, refresh_groups=2
+    )
+    st = opt.init(params)
+    g = _grads(params)
+    _, st1, _ = opt.update(g, st, params, refresh=True, group=0)
+    # group 0 refreshed, group 1 kept its placeholder
+    specs = jax.tree_util.tree_leaves(
+        opt.specs, is_leaf=lambda x: hasattr(x, "lowrank")
+    )
+    groups = [s.group for s in specs if s.lowrank]
+    assert set(groups) == {0, 1}
+
+
+def test_grad_clipping():
+    params = _params()
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=8, grad_clip_norm=1e-6, lr=1.0
+    )
+    st = opt.init(params)
+    g = _grads(params)
+    u, st, aux = opt.update(g, st, params, refresh=True)
+    # clipped: update magnitudes bounded by lr * alpha * O(1) despite lr=1
+    assert float(aux.grad_norm) > 1e-6  # pre-clip norm reported
+
+
+@pytest.mark.parametrize("name", [
+    "galore-adam", "galore-sara-adam", "golore-adam", "grass-adam",
+    "online-pca-adam", "fira-sara-adam", "galore-sara-adafactor",
+    "galore-sara-adam-mini", "galore-sara-adam8bit", "galore-sara-msgd",
+])
+def test_all_variants_step_and_descend(name):
+    """Every optimizer variant reduces a convex quadratic."""
+    key = jax.random.PRNGKey(3)
+    target = jax.random.normal(key, (24, 48))
+    params = {"w_proj": jnp.zeros((24, 48))}
+
+    def loss(p):
+        return jnp.sum((p["w_proj"] - target) ** 2)
+
+    opt = make_optimizer(name, params, rank=8, lr=3e-2, alpha=1.0, tau=10)
+    st = opt.init(params)
+    l0 = float(loss(params))
+    for step in range(80):
+        g = jax.grad(loss)(params)
+        u, st, _ = opt.update(g, st, params, refresh=(step % 10 == 0))
+        params = apply_updates(params, u)
+    l1 = float(loss(params))
+    # thresholds differ: random/row projections and clipped/quantized inner
+    # optimizers descend slower than dominant/SARA with Adam
+    assert l1 < 0.85 * l0, (name, l0, l1)

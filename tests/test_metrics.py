@@ -1,0 +1,85 @@
+"""Subspace metrics (GARD18 overlap, update spectra, effective rank)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (
+    OverlapTracker,
+    effective_rank,
+    subspace_overlap,
+    update_singular_spectrum,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _orth(m, r, seed=0):
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed), (m, r)))
+    return q
+
+
+def test_overlap_identity():
+    u = _orth(16, 4)
+    assert abs(float(subspace_overlap(u, u)) - 1.0) < 1e-5
+
+
+def test_overlap_orthogonal_subspaces():
+    q = _orth(16, 8)
+    u, v = q[:, :4], q[:, 4:]
+    assert float(subspace_overlap(u, v)) < 1e-6
+
+
+def test_overlap_invariant_to_basis_rotation():
+    u = _orth(16, 4, 0)
+    v = _orth(16, 4, 1)
+    rot = _orth(4, 4, 2)
+    o1 = float(subspace_overlap(u, v))
+    o2 = float(subspace_overlap(u, v @ rot))
+    assert abs(o1 - o2) < 1e-5
+
+
+@given(m=st.integers(6, 24), r=st.integers(1, 6), seed=st.integers(0, 99))
+@settings(max_examples=25, deadline=None)
+def test_property_overlap_in_unit_interval(m, r, seed):
+    r = min(r, m)
+    u = _orth(m, r, seed)
+    v = _orth(m, r, seed + 1)
+    o = float(subspace_overlap(u, v))
+    assert -1e-6 <= o <= 1.0 + 1e-6
+
+
+def test_update_spectrum_normalized_descending():
+    w0 = jax.random.normal(KEY, (24, 32))
+    w1 = w0 + 0.1 * jax.random.normal(jax.random.fold_in(KEY, 1), (24, 32))
+    s = np.asarray(update_singular_spectrum(w0, w1))
+    assert abs(s[0] - 1.0) < 1e-5
+    assert (np.diff(s) <= 1e-6).all()
+
+
+def test_effective_rank_extremes():
+    flat = jnp.ones(16)
+    spike = jnp.zeros(16).at[0].set(1.0)
+    assert float(effective_rank(flat)) > 15.0
+    assert float(effective_rank(spike)) < 1.1
+
+
+def test_lowrank_update_has_low_effective_rank():
+    """A rank-r update's spectrum has ~r effective rank (Fig. 4 mechanics)."""
+    p = _orth(32, 4)
+    delta = p @ jax.random.normal(KEY, (4, 48))
+    s = update_singular_spectrum(jnp.zeros((32, 48)), delta)
+    assert float(effective_rank(s)) < 6.0
+
+
+def test_tracker_series():
+    tr = OverlapTracker()
+    p0 = {"layer0": _orth(16, 4, 0)}
+    tr.set_anchor(p0)
+    tr.observe(p0)
+    tr.observe({"layer0": _orth(16, 4, 1)})
+    tr.observe({"layer0": _orth(16, 4, 2)})
+    s = tr.summary()
+    assert "layer0" in s
+    assert 0 <= s["layer0"]["adjacent_mean"] <= 1
+    assert 0 <= s["layer0"]["anchor_last"] <= 1

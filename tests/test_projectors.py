@@ -1,0 +1,123 @@
+"""Projector constructors: orthonormality, method semantics, batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.projectors import (
+    ProjectorConfig,
+    backproject,
+    project,
+    projection_side,
+    refresh_projector,
+    residual,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _grad(m, n, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, n)) * 0.1
+
+
+@pytest.mark.parametrize(
+    "method", ["dominant", "sara", "golore", "grass", "online_pca"]
+)
+def test_orthonormal_columns(method):
+    cfg = ProjectorConfig(method=method, rank=8)
+    g = _grad(32, 64)
+    p = refresh_projector(g, KEY, None, cfg)
+    assert p.shape == (32, 8)
+    np.testing.assert_allclose(
+        np.asarray(p.T @ p), np.eye(8), atol=1e-5
+    )
+
+
+def test_side_selection():
+    assert projection_side((32, 64)) == "left"
+    assert projection_side((64, 32)) == "right"
+    assert projection_side((4, 64, 32)) == "right"
+
+
+def test_dominant_is_topk_svd():
+    g = _grad(24, 48)
+    cfg = ProjectorConfig(method="dominant", rank=6)
+    p = refresh_projector(g, KEY, None, cfg)
+    u, _, _ = jnp.linalg.svd(g, full_matrices=False)
+    # span match: |<p_i, u_i>| == 1 column-wise (up to sign)
+    dots = jnp.abs(jnp.sum(p * u[:, :6], axis=0))
+    np.testing.assert_allclose(np.asarray(dots), np.ones(6), atol=1e-4)
+
+
+def test_dominant_beats_random_at_capture():
+    """Dominant captures more gradient energy than GoLore (sanity)."""
+    g = _grad(32, 64, seed=3)
+    cap = {}
+    for method in ("dominant", "golore"):
+        cfg = ProjectorConfig(method=method, rank=4)
+        p = refresh_projector(g, KEY, None, cfg)
+        r = project(g, p, "left")
+        cap[method] = float(jnp.linalg.norm(r))
+    assert cap["dominant"] > cap["golore"]
+
+
+def test_grass_rows_are_selections():
+    g = _grad(16, 32)
+    cfg = ProjectorConfig(method="grass", rank=4)
+    p = refresh_projector(g, KEY, None, cfg)
+    cols = np.asarray(p)
+    # every column is a one-hot basis vector
+    assert ((cols == 0) | (cols == 1)).all()
+    assert (cols.sum(axis=0) == 1).all()
+
+
+def test_online_pca_improves_capture():
+    """Power-iteration updates should increase captured energy over steps."""
+    g = _grad(32, 64, seed=5)
+    cfg = ProjectorConfig(method="online_pca", rank=4, online_pca_lr=1.0)
+    p = refresh_projector(g, KEY, None, cfg)  # random init
+    first = float(jnp.linalg.norm(project(g, p, "left")))
+    for i in range(20):
+        p = refresh_projector(g, jax.random.fold_in(KEY, i), p, cfg)
+    last = float(jnp.linalg.norm(project(g, p, "left")))
+    assert last > first
+
+
+def test_batched_refresh():
+    g = jax.random.normal(KEY, (3, 2, 16, 32)) * 0.1  # stacked layers/experts
+    cfg = ProjectorConfig(method="sara", rank=4)
+    p = refresh_projector(g, KEY, None, cfg)
+    assert p.shape == (3, 2, 16, 4)
+    for i in range(3):
+        for j in range(2):
+            np.testing.assert_allclose(
+                np.asarray(p[i, j].T @ p[i, j]), np.eye(4), atol=1e-5
+            )
+
+
+def test_project_backproject_roundtrip_right_side():
+    g = _grad(64, 32)  # m > n -> right
+    cfg = ProjectorConfig(method="dominant", rank=32)  # full rank
+    p = refresh_projector(g, KEY, None, cfg, side="right")
+    r = project(g, p, "right")
+    g2 = backproject(r, p, "right")
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g), atol=1e-4)
+
+
+@given(
+    m=st.integers(8, 32), n=st.integers(8, 32),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_residual_orthogonal_to_projection(m, n, seed):
+    """(I-PP^T)G must be orthogonal to P P^T G (Pythagoras/Fira split)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    side = projection_side(g.shape)
+    r = min(4, min(m, n))
+    cfg = ProjectorConfig(method="sara", rank=r)
+    p = refresh_projector(g, jax.random.PRNGKey(seed + 1), None, cfg)
+    low = backproject(project(g, p, side), p, side)
+    res = residual(g, p, side)
+    inner = float(jnp.sum(low * res))
+    assert abs(inner) < 1e-3 * float(jnp.linalg.norm(g)) ** 2 + 1e-5

@@ -1,0 +1,100 @@
+"""SARA sampler (Algorithm 2): the Gumbel top-k implementation must realize
+the paper's sequential weighted-sampling-without-replacement law."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (
+    gumbel_topk_indices,
+    inclusion_probabilities_mc,
+    sara_select,
+    sequential_sample_reference,
+)
+
+
+def test_indices_distinct_and_sorted():
+    w = jnp.array([5.0, 1.0, 3.0, 0.5, 2.0, 4.0])
+    for seed in range(20):
+        idx = gumbel_topk_indices(w, 3, jax.random.PRNGKey(seed))
+        arr = np.asarray(idx)
+        assert len(set(arr.tolist())) == 3
+        assert (np.diff(arr) > 0).all()
+
+
+def test_zero_weights_never_selected():
+    w = jnp.array([1.0, 0.0, 2.0, 0.0, 3.0])
+    for seed in range(50):
+        idx = np.asarray(
+            gumbel_topk_indices(w, 3, jax.random.PRNGKey(seed))
+        )
+        assert 1 not in idx and 3 not in idx
+
+
+def test_all_zero_weights_fallback_uniform():
+    w = jnp.zeros(8)
+    seen = set()
+    for seed in range(60):
+        idx = np.asarray(gumbel_topk_indices(w, 2, jax.random.PRNGKey(seed)))
+        seen.update(idx.tolist())
+    assert len(seen) == 8  # every index reachable
+
+
+def test_inclusion_probabilities_match_sequential_law():
+    """Gumbel top-k inclusion probs == paper's sequential law (MC, 3 sigma)."""
+    w = jnp.array([8.0, 4.0, 2.0, 1.0, 1.0, 0.5])
+    r = 3
+    n_mc = 20000
+    est = np.asarray(
+        inclusion_probabilities_mc(w, r, jax.random.PRNGKey(42), n_mc)
+    )
+    # reference via numpy simulation of Alg.2's sequential law
+    rng = np.random.default_rng(7)
+    counts = np.zeros(len(w))
+    n_ref = 20000
+    for _ in range(n_ref):
+        for i in sequential_sample_reference(np.asarray(w), r, rng):
+            counts[i] += 1
+    ref = counts / n_ref
+    se = np.sqrt(ref * (1 - ref) * (1 / n_mc + 1 / n_ref))
+    assert np.all(np.abs(est - ref) < 4 * se + 0.015), (est, ref)
+
+
+def test_higher_weight_higher_inclusion():
+    w = jnp.array([10.0, 5.0, 2.5, 1.25, 0.6, 0.3, 0.15, 0.075])
+    est = np.asarray(
+        inclusion_probabilities_mc(w, 3, jax.random.PRNGKey(0), 8000)
+    )
+    assert (np.diff(est) < 0.02).all()  # monotone non-increasing (noise tol)
+
+
+def test_sara_select_orthonormal_columns():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (32, 48))
+    u, s, _ = jnp.linalg.svd(g, full_matrices=False)
+    p, idx = sara_select(u, s, 8, jax.random.PRNGKey(1))
+    ident = p.T @ p
+    np.testing.assert_allclose(np.asarray(ident), np.eye(8), atol=1e-5)
+    assert (np.diff(np.asarray(idx)) > 0).all()
+
+
+@given(
+    m=st.integers(4, 24),
+    r_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_valid_sample(m, r_frac, seed):
+    r = max(1, int(m * r_frac))
+    key = jax.random.PRNGKey(seed)
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (m,))) + 1e-3
+    idx = np.asarray(gumbel_topk_indices(w, r, key))
+    assert idx.shape == (r,)
+    assert len(set(idx.tolist())) == r
+    assert (idx >= 0).all() and (idx < m).all()
+
+
+def test_r_greater_than_m_raises():
+    with pytest.raises(ValueError):
+        gumbel_topk_indices(jnp.ones(4), 5, jax.random.PRNGKey(0))

@@ -1,0 +1,92 @@
+"""Property tests for the paper's theory.
+
+Lemma 3.3 (SARA projection error): for P built by SARA from the (noisy)
+gradient, E||(I-PP^T) grad||_F^2 <= (1-delta) E||grad||_F^2, with delta the
+minimum inclusion probability of any singular direction.  We verify the
+bound empirically by Monte-Carlo over the sampler's randomness.
+
+Also: GaLore (dominant) has NO such guarantee -- we exhibit the adversarial
+regime (gradient noise dominating) where dominant projection loses the true
+gradient directions but SARA retains them in expectation, the motivation for
+Theorem 3.4.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.projectors import ProjectorConfig, refresh_projector, residual
+from repro.core.sampling import inclusion_probabilities_mc
+
+
+def _mc_residual_ratio(g, method, r, n_mc=64):
+    cfg = ProjectorConfig(method=method, rank=r)
+    tot = 0.0
+    for i in range(n_mc):
+        p = refresh_projector(g, jax.random.PRNGKey(i), None, cfg)
+        tot += float(jnp.sum(residual(g, p, "left") ** 2))
+    return tot / n_mc / float(jnp.sum(g**2))
+
+
+@given(
+    m=st.integers(6, 16),
+    n=st.integers(16, 32),
+    r_frac=st.floats(0.25, 0.9),
+    seed=st.integers(0, 500),
+)
+@settings(max_examples=15, deadline=None)
+def test_lemma_3_3_projection_error_bound(m, n, r_frac, seed):
+    r = max(1, int(m * r_frac))
+    g = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    u, s, _ = jnp.linalg.svd(g, full_matrices=False)
+    # delta = min inclusion probability (MC estimate over the sampler)
+    incl = np.asarray(
+        inclusion_probabilities_mc(s, r, jax.random.PRNGKey(seed + 1), 4000)
+    )
+    delta = max(float(incl.min()) - 0.03, 0.0)  # MC tolerance
+    ratio = _mc_residual_ratio(g, "sara", r, n_mc=48)
+    assert ratio <= (1 - delta) + 0.05, (ratio, delta)
+
+
+def test_golore_matches_r_over_m_in_expectation():
+    """GoLore's delta_bar = r/m: residual ratio ~ 1 - r/m for random P."""
+    m, n, r = 16, 64, 4
+    g = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    ratio = _mc_residual_ratio(g, "golore", r, n_mc=200)
+    assert abs(ratio - (1 - r / m)) < 0.08, ratio
+
+
+def test_dominant_zero_residual_on_lowrank_gradient():
+    """If rank(G) <= r, dominant projection is lossless."""
+    key = jax.random.PRNGKey(1)
+    a = jax.random.normal(key, (16, 3))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (3, 40))
+    g = a @ b
+    ratio = _mc_residual_ratio(g, "dominant", 4, n_mc=1)
+    assert ratio < 1e-6
+
+
+def test_sara_retains_weak_directions_dominant_drops_them():
+    """The frozen-subspace failure mode: a persistent weak direction is
+    *never* captured by dominant selection but has positive probability
+    under SARA -- the crux of the convergence gap."""
+    m, n, r = 8, 32, 2
+    key = jax.random.PRNGKey(2)
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (m, m)))
+    # two strong noise directions + one weak signal direction
+    s = jnp.array([10.0, 9.0, 1.0, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3])
+    v = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    g = u @ (s[:, None] * v)
+    weak_dir = u[:, 2]
+
+    def captured(method, n_mc):
+        cfg = ProjectorConfig(method=method, rank=r)
+        hits = 0
+        for i in range(n_mc):
+            p = refresh_projector(g, jax.random.PRNGKey(100 + i), None, cfg)
+            overlap = float(jnp.sum((p.T @ weak_dir) ** 2))
+            hits += overlap > 0.5
+        return hits / n_mc
+
+    assert captured("dominant", 20) == 0.0
+    assert captured("sara", 200) > 0.02

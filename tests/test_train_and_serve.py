@@ -1,0 +1,137 @@
+"""Training-loop integration: loss descends, resume is deterministic,
+preemption checkpointing, subspace tracking; serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.core import make_optimizer
+from repro.data.synthetic import SyntheticDataConfig, SyntheticDataset
+from repro.models import build_model
+from repro.serve.engine import ServeEngine
+from repro.train.loop import train_loop
+from repro.train.state import TrainState
+from repro.train.step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=8, tau=10, lr=2e-3
+    )
+    data = SyntheticDataset(
+        SyntheticDataConfig(
+            vocab_size=cfg.vocab_size, seq_len=64, global_batch=8
+        )
+    )
+    return cfg, model, opt, data
+
+
+def test_loss_descends_toward_entropy_floor(setup, tmp_path):
+    cfg, model, opt, data = setup
+    tc = TrainConfig(
+        total_steps=40, checkpoint_every=0, lr=2e-3,
+        checkpoint_dir=str(tmp_path / "c1"),
+    )
+    fns = make_train_step(model, opt, donate=False)
+    res = train_loop(
+        model, opt, data, tc, fns, log_every=20, handle_signals=False
+    )
+    assert res.losses[-1] < res.losses[0] - 0.5
+    floor = data.bigram_entropy()
+    assert res.losses[-1] > floor - 0.5  # sanity: can't beat the floor
+
+
+def test_deterministic_resume(setup, tmp_path):
+    cfg, model, opt, data = setup
+    ckpt = str(tmp_path / "c2")
+    tc = TrainConfig(
+        total_steps=24, checkpoint_every=8, checkpoint_dir=ckpt, lr=2e-3,
+        async_checkpoint=False,
+    )
+    fns = make_train_step(model, opt, donate=False)
+    res1 = train_loop(
+        model, opt, data, tc, fns, log_every=100, handle_signals=False
+    )
+    # re-run: restores from step 24... but 24 was the end; drop last ckpt to
+    # force a mid-run resume instead
+    import shutil
+
+    shutil.rmtree(os.path.join(ckpt, "step_00000024"))
+    res2 = train_loop(
+        model, opt, data, tc, fns, log_every=100, handle_signals=False
+    )
+    # steps 16..23 rerun; losses must match the first run exactly
+    np.testing.assert_allclose(
+        np.asarray(res1.losses[16:]), np.asarray(res2.losses), atol=1e-6
+    )
+
+
+def test_subspace_tracking(setup, tmp_path):
+    cfg, model, opt, data = setup
+    tc = TrainConfig(
+        total_steps=21, checkpoint_every=0,
+        checkpoint_dir=str(tmp_path / "c3"),
+    )
+    fns = make_train_step(model, opt, donate=False)
+    res = train_loop(
+        model, opt, data, tc, fns, log_every=100, handle_signals=False,
+        track_subspace=True,
+    )
+    summary = res.subspace.summary()
+    assert summary, "no overlap series collected"
+    for name, vals in summary.items():
+        if "adjacent_mean" in vals:
+            assert 0.0 <= vals["adjacent_mean"] <= 1.0 + 1e-6
+
+
+def test_serving_greedy_deterministic(setup):
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, capacity=96)
+    batch = {"tokens": data.batch_at(0)["tokens"][:, :16]}
+    out1 = eng.generate(batch, max_new_tokens=6)
+    out2 = eng.generate(batch, max_new_tokens=6)
+    np.testing.assert_array_equal(
+        np.asarray(out1.tokens), np.asarray(out2.tokens)
+    )
+    assert out1.tokens.shape == (8, 6)
+
+
+def test_serving_sampled(setup):
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, capacity=96)
+    batch = {"tokens": data.batch_at(0)["tokens"][:, :16]}
+    out = eng.generate(
+        batch, max_new_tokens=4, greedy=False, temperature=1.0,
+        key=jax.random.PRNGKey(7),
+    )
+    assert np.asarray(out.tokens).max() < cfg.vocab_size
+
+
+def test_microbatched_step_equals_full_batch(setup):
+    """Gradient accumulation: 2 microbatches == single batch (fp32)."""
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    st = TrainState(params, opt.init(params))
+    batch = data.batch_at(0)
+    full = make_train_step(model, opt, donate=False)
+    micro = make_train_step(
+        model, opt, donate=False,
+        train_cfg=TrainConfig(microbatch=4),
+    )
+    s1, m1 = full["jit_step"](st, batch)
+    s2, m2 = micro["jit_step"](st, batch)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(s1.params),
+        jax.tree_util.tree_leaves(s2.params),
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
