@@ -26,6 +26,28 @@ from repro.train.step import make_train_step
 
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
 
+# Machine-readable sidecar records (benchmarks/run.py dumps these to
+# BENCH_kernels.json so the perf trajectory is diffable across PRs).
+JSON_RECORDS: List[Dict] = []
+
+
+def record(
+    op: str,
+    wall_us: float,
+    roofline_us: Optional[float] = None,
+    engine: str = "reference",
+    **extra,
+) -> None:
+    JSON_RECORDS.append({
+        "op": op,
+        "wall_us": round(float(wall_us), 2),
+        "roofline_us": (
+            round(float(roofline_us), 2) if roofline_us is not None else None
+        ),
+        "engine": engine,
+        **extra,
+    })
+
 
 def bench_model(d_model: int = 96, n_layers: int = 2, vocab: int = 512):
     cfg = get_config("llama3-8b", smoke=True).with_(

@@ -1,8 +1,13 @@
 """Benchmark orchestrator: one function per paper table/figure + kernels +
-roofline.  Prints ``name,us_per_call,derived`` CSV."""
+roofline.  Prints ``name,us_per_call,derived`` CSV and, when the kernel
+suite runs, dumps the machine-readable ``BENCH_kernels.json`` sidecar
+(op, wall_us, roofline_us, engine, ...) so the perf trajectory is diffable
+across PRs."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -14,9 +19,14 @@ def main() -> None:
         help="comma list: table1,table2,table3,table4,fig2,fig3,fig4,"
              "kernels,roofline",
     )
+    parser.add_argument(
+        "--json-out", default="BENCH_kernels.json",
+        help="where to write the machine-readable kernel records "
+             "('' disables)",
+    )
     args = parser.parse_args()
 
-    from benchmarks import figures, kernels_micro, roofline_report, tables
+    from benchmarks import common, figures, kernels_micro, roofline_report, tables
 
     suites = {
         "table1": tables.table1,
@@ -43,6 +53,14 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append((name, repr(e)))
+    if common.JSON_RECORDS and args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(common.JSON_RECORDS, f, indent=2)
+        print(
+            f"# wrote {len(common.JSON_RECORDS)} records to "
+            f"{os.path.abspath(args.json_out)}",
+            file=sys.stderr,
+        )
     if failed:
         for name, err in failed:
             print(f"{name},nan,FAILED {err}")

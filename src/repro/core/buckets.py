@@ -1,0 +1,255 @@
+"""The bucketed fused update engine (DESIGN.md §2.3).
+
+``engine="reference"`` (lowrank.py's per-leaf loop) runs a separate
+project -> inner-update -> back-project einsum chain per low-rank leaf and
+then a *second* full pass over params in ``apply_updates``, materializing
+every full-space direction in HBM.  This module is the
+``engine="bucketed"`` hot path:
+
+  * at build time, ``build_bucket_plan`` groups low-rank leaves by their
+    canonical (d, n, rank, dtype) -- the side='right' leaves enter
+    transposed, so e.g. a (96, 32) down-projection and a (32, 96)
+    up-projection land in the SAME bucket;
+  * per step, each bucket's leaves are stacked into (B, d, n) operands
+    (stacked scan/expert leaves reshape in for free -- a (L, d, n) leaf is
+    L batch slices, no copy on its own) and ONE batched fused kernel per
+    bucket computes
+
+        R  = P^T G                      (skipped when grads arrive projected)
+        W' = (1 - lr*wd) W - lr*alpha * P @ N(inner(R))
+
+    directly -- the full-space direction never touches HBM and params are
+    read/written exactly once (kernels/lowrank_update).  On non-TPU
+    backends the same bucketed shape runs as batched einsums (ops.py), so
+    the dispatch-count win and the numerics are identical everywhere.
+
+The engine covers the hot path (refresh=False) for the fused-eligible inner
+optimizers (adam, msgd) without Fira; everything else stays on the
+reference path -- correctness first, selected per leaf, per step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import inner as inner_lib
+from repro.kernels.lowrank_update import ops as update_ops
+
+PyTree = Any
+
+# Inner optimizers with a fused kernel (kernels/lowrank_update/kernel.py).
+FUSED_INNERS = ("adam", "msgd")
+
+
+class BucketEntry(NamedTuple):
+    """One low-rank leaf's slot inside a bucket (static)."""
+
+    leaf_idx: int  # index into the flattened spec/param lists
+    side: str  # 'left' | 'right' (right enters the stack transposed)
+    batch: int  # stacked slices contributed (prod of leading dims, >= 1)
+
+
+class Bucket(NamedTuple):
+    """Leaves sharing canonical oriented dims -- one fused dispatch."""
+
+    d: int  # projected dim (= min(m, n) of every member)
+    n: int  # free dim after orientation
+    rank: int
+    entries: Tuple[BucketEntry, ...]
+
+    @property
+    def batch(self) -> int:
+        return sum(e.batch for e in self.entries)
+
+
+class BucketPlan(NamedTuple):
+    buckets: Tuple[Bucket, ...]
+    bucketed: frozenset  # leaf indices the buckets cover
+
+    def num_dispatches(self, projected: bool = False) -> int:
+        """Fused ops per hot step (project + update, or update only)."""
+        return len(self.buckets) * (1 if projected else 2)
+
+
+def build_bucket_plan(flat_specs: Sequence, flat_params: Sequence) -> BucketPlan:
+    """Static bucketing: group low-rank leaves by (d, n, rank, dtype)."""
+    groups: Dict[Tuple, List[BucketEntry]] = {}
+    for i, (spec, leaf) in enumerate(zip(flat_specs, flat_params)):
+        if not spec.lowrank:
+            continue
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        d_c, n_c = (m, n) if spec.side == "left" else (n, m)
+        b = 1
+        for s in leaf.shape[:-2]:
+            b *= s
+        key = (d_c, n_c, spec.rank, jnp.dtype(leaf.dtype).name)
+        groups.setdefault(key, []).append(BucketEntry(i, spec.side, b))
+    buckets = tuple(
+        Bucket(d=k[0], n=k[1], rank=k[2], entries=tuple(es))
+        for k, es in sorted(groups.items(), key=lambda kv: kv[0][:3])
+    )
+    covered = frozenset(e.leaf_idx for bk in buckets for e in bk.entries)
+    return BucketPlan(buckets=buckets, bucketed=covered)
+
+
+# ---------------------------------------------------------------------------
+# stack / unstack
+# ---------------------------------------------------------------------------
+
+
+def _orient_in(x: jax.Array, side: str) -> jax.Array:
+    """Leaf -> (b, a, b') canonical stack slices (side='right' transposed)."""
+    x2 = x.reshape((-1,) + x.shape[-2:])
+    if side == "right":
+        x2 = jnp.swapaxes(x2, -1, -2)
+    return x2
+
+
+def _gather(bucket: Bucket, leaves: Sequence[jax.Array]) -> jax.Array:
+    parts = [_orient_in(leaves[e.leaf_idx], e.side) for e in bucket.entries]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _gather_proj(bucket: Bucket, projs: Sequence[jax.Array]) -> jax.Array:
+    """Projectors are (.., d, r) for BOTH sides -- never transposed."""
+    parts = [
+        projs[e.leaf_idx].reshape((-1,) + projs[e.leaf_idx].shape[-2:])
+        for e in bucket.entries
+    ]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _scatter(
+    bucket: Bucket, stacked: jax.Array, likes: Sequence[jax.Array]
+) -> Dict[int, jax.Array]:
+    """Split a (B, ...) result back into per-leaf arrays shaped like
+    ``likes[leaf_idx]`` (orientation and dtype restored)."""
+    out: Dict[int, jax.Array] = {}
+    off = 0
+    for e in bucket.entries:
+        part = stacked[off : off + e.batch]
+        off += e.batch
+        if e.side == "right":
+            part = jnp.swapaxes(part, -1, -2)
+        like = likes[e.leaf_idx]
+        out[e.leaf_idx] = part.reshape(like.shape).astype(like.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the fused hot-path update
+# ---------------------------------------------------------------------------
+
+
+def bucketed_update(
+    plan: BucketPlan,
+    cfg,  # OptimizerConfig
+    flat_states: Sequence,  # LeafState per leaf
+    flat_grads: Sequence[jax.Array],
+    flat_params: Sequence[jax.Array],
+    step: jax.Array,
+    lr: jax.Array,
+    *,
+    projected: bool,
+    apply: bool,
+) -> Dict[int, Tuple[jax.Array, Any]]:
+    """Run every bucket; returns {leaf_idx: (new_param_or_update, LeafState)}.
+
+    ``apply=True`` returns the new parameter leaf (the kernel's W' output);
+    ``apply=False`` returns the additive update W' - W (one extra
+    subtraction -- prefer apply=True, that is the engine's point).
+    """
+    lr_alpha = lr * cfg.alpha
+    lr_wd = lr * cfg.weight_decay if cfg.weight_decay else 0.0
+    results: Dict[int, Tuple[jax.Array, Any]] = {}
+    for bucket in plan.buckets:
+        w = _gather(bucket, flat_params)
+        p = _gather_proj(bucket, [st.projector for st in flat_states])
+        if projected:
+            r_g = _gather(bucket, flat_grads)
+        else:
+            g = _gather(bucket, flat_grads)
+            r_g = update_ops.bucketed_project(g, p)
+        m = _gather(bucket, [st.inner.m for st in flat_states])
+        if cfg.inner == "msgd":
+            w_new, m_new = update_ops.bucketed_msgd_update(
+                w, p, r_g, m, lr_alpha, lr_wd, b1=cfg.b1
+            )
+            v_new = None
+        else:
+            v = _gather(bucket, [st.inner.v for st in flat_states])
+            w_new, m_new, v_new = update_ops.bucketed_adam_update(
+                w, p, r_g, m, v, step, lr_alpha, lr_wd,
+                b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+            )
+        out = w_new if apply else w_new - w
+        out_leaves = _scatter(bucket, out, flat_params)
+        m_leaves = _scatter(
+            bucket, m_new, [st.inner.m for st in flat_states]
+        )
+        if v_new is not None:
+            v_leaves = _scatter(
+                bucket, v_new, [st.inner.v for st in flat_states]
+            )
+        for e in bucket.entries:
+            i = e.leaf_idx
+            st = flat_states[i]
+            if v_new is None:
+                new_inner = inner_lib.MSGDState(m=m_leaves[i])
+            else:
+                new_inner = inner_lib.AdamState(m=m_leaves[i], v=v_leaves[i])
+            results[i] = (
+                out_leaves[i],
+                st._replace(inner=new_inner),
+            )
+    return results
+
+
+# ---------------------------------------------------------------------------
+# analytic accounting (benchmarks/kernels_micro.update_engine_bench)
+# ---------------------------------------------------------------------------
+
+
+def modeled_hbm_bytes(
+    plan: BucketPlan, engine: str, itemsize: int = 4, projected: bool = False
+) -> int:
+    """Modeled optimizer-path HBM traffic per hot step for the bucketed
+    leaves (moment dtype f32).
+
+    reference: G read (project) + R written+read, moments r/w, direction N
+    materialized d x n (write + read), params read + update written, then
+    ``apply_updates``'s second pass (param read + update read + param
+    write).
+    bucketed: G read once, R written+read once (inter-kernel), P read
+    twice, moments r/w once, params read+written once.  No N, no second
+    pass.
+    """
+    total = 0
+    for bk in plan.buckets:
+        B, d, n, r = bk.batch, bk.d, bk.n, bk.rank
+        wn = B * d * n * itemsize
+        pr = B * d * r * 4
+        rn = B * r * n * 4
+        moments = 4 * rn  # M, V read + write
+        if engine == "bucketed":
+            proj = 0 if projected else (wn + pr + rn)  # read G,P; write R
+            upd = wn + pr + rn + moments + wn  # W r, P, R, moments, W' w
+            total += proj + upd
+        else:
+            proj = 0 if projected else (wn + pr + rn)
+            inner = rn + moments  # R read, moments r/w
+            direction = rn + moments // 2  # N = f(M', V') read, write N_r
+            backproj = pr + rn + 2 * wn  # P, N_r -> full-space dir d x n
+            apply = 3 * wn  # params read + dir read + params write
+            total += proj + inner + direction + backproj + apply
+    return total
+
+
+def reference_num_ops(plan: BucketPlan, projected: bool = False) -> int:
+    """Per-leaf chain length on the reference path: project, moment update,
+    direction, back-project (+ the apply_updates add) per low-rank leaf."""
+    n_leaves = sum(len(bk.entries) for bk in plan.buckets)
+    per_leaf = 4 if projected else 5
+    return n_leaves * per_leaf

@@ -25,6 +25,12 @@ class InnerOptimizer(NamedTuple):
     update: Callable[[jax.Array, Any, jax.Array], Tuple[jax.Array, Any]]
     # Rough per-element optimizer-state memory multiplier (for accounting).
     state_bytes_per_param: float = 8.0
+    # Whether the bucketed engine has a fused kernel for this optimizer
+    # (kernels/lowrank_update): the moment layout must be plain dense
+    # tensors of the projected-gradient shape (adam, msgd).  Factored /
+    # quantized states (adafactor, adam8bit, adam_mini) stay on the
+    # reference path.
+    fused_eligible: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -39,8 +45,12 @@ class AdamState(NamedTuple):
 
 def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> InnerOptimizer:
     def init(x):
-        z = jnp.zeros(x.shape, jnp.float32)
-        return AdamState(m=z, v=z)
+        # Distinct buffers: m and v must not alias or donating the opt
+        # state double-donates one buffer (jit donate_argnums).
+        return AdamState(
+            m=jnp.zeros(x.shape, jnp.float32),
+            v=jnp.zeros(x.shape, jnp.float32),
+        )
 
     def update(g, state, step):
         g = g.astype(jnp.float32)
@@ -52,7 +62,9 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> InnerOptimize
         direction = mhat / (jnp.sqrt(vhat) + eps)
         return direction, AdamState(m=m, v=v)
 
-    return InnerOptimizer("adam", init, update, state_bytes_per_param=8.0)
+    return InnerOptimizer(
+        "adam", init, update, state_bytes_per_param=8.0, fused_eligible=True
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +87,9 @@ def msgd(b1: float = 0.9) -> InnerOptimizer:
         m = (1.0 - b1) * state.m + b1 * g.astype(jnp.float32)
         return m, MSGDState(m=m)
 
-    return InnerOptimizer("msgd", init, update, state_bytes_per_param=4.0)
+    return InnerOptimizer(
+        "msgd", init, update, state_bytes_per_param=4.0, fused_eligible=True
+    )
 
 
 # ---------------------------------------------------------------------------

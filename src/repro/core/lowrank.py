@@ -24,6 +24,17 @@ DESIGN.md §2):
   * Stacked leaves (scan-over-layers (L, m, n), expert stacks (E, m, n))
     get vmapped projectors -- one batched SVD per stack instead of a python
     loop over layers.
+  * The hot step has two executables of its own (DESIGN.md §2.3): the
+    per-leaf einsum loop (``engine="reference"``, always available, covers
+    Fira and every inner optimizer) and the **bucketed fused engine**
+    (``engine="bucketed"``): low-rank leaves are statically grouped by
+    canonical (d, n, rank, dtype) at build time and each bucket dispatches
+    ONE batched fused kernel (kernels/lowrank_update) that projects,
+    updates moments, back-projects, and writes W' in place of the separate
+    ``apply_updates`` pass -- the full-space direction never reaches HBM.
+    ``update(..., apply=True)`` returns new params directly; that is the
+    mode ``train/step.py`` uses so param buffers are read/written once and
+    can be donated.
 """
 from __future__ import annotations
 
@@ -34,6 +45,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import buckets as buckets_lib
 from repro.core import inner as inner_lib
 from repro.core import projectors as proj_lib
 
@@ -73,6 +85,11 @@ class OptimizerConfig:
     fira_limiter: float = 1.0  # cap on the residual scaling ratio
     momentum_carry: str = "keep"  # keep | reset | reproject
     refresh_groups: int = 1
+    # Hot-path update engine: "reference" (per-leaf einsum loop) or
+    # "bucketed" (stacked fused kernels; falls back to reference per step /
+    # per leaf whenever it doesn't cover the case -- refresh steps, Fira,
+    # non-fused inner optimizers).
+    engine: str = "reference"
     min_dim: int = 16  # leaves with min(m,n) < this stay full-rank
     exclude: Tuple[str, ...] = DEFAULT_EXCLUDE
     seed: int = 0
@@ -192,12 +209,15 @@ def _projector_shape(shape: Tuple[int, ...], side: str, rank: int):
 
 
 class LowRankOptimizer(NamedTuple):
-    """(init, update, specs).  update's ``refresh``/``group`` are static."""
+    """(init, update, specs).  update's ``refresh``/``group``/``apply`` are
+    static.  ``bucket_plan`` is the static bucketing of low-rank leaves the
+    ``engine="bucketed"`` hot path dispatches over (None for full-rank)."""
 
     init: Callable[[PyTree], LowRankOptState]
     update: Callable[..., Tuple[PyTree, LowRankOptState, AuxInfo]]
     specs: PyTree
     config: OptimizerConfig
+    bucket_plan: Optional[buckets_lib.BucketPlan] = None
 
 
 def _global_norm(tree: PyTree) -> jax.Array:
@@ -217,9 +237,21 @@ def make_lowrank_optimizer(
         raise ValueError(f"unknown method {cfg.method!r}")
     if cfg.momentum_carry not in ("keep", "reset", "reproject"):
         raise ValueError(f"unknown momentum_carry {cfg.momentum_carry!r}")
+    if cfg.engine not in ("reference", "bucketed"):
+        raise ValueError(f"unknown engine {cfg.engine!r}")
     specs = build_specs(params_like, cfg, lowrank_filter)
     inner = cfg.make_inner()
     pcfg = cfg.projector_config()
+
+    is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
+    flat_specs_static, spec_treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=is_spec
+    )
+    bucket_plan: Optional[buckets_lib.BucketPlan] = None
+    if cfg.engine == "bucketed":
+        bucket_plan = buckets_lib.build_bucket_plan(
+            flat_specs_static, spec_treedef.flatten_up_to(params_like)
+        )
 
     def init(params: PyTree) -> LowRankOptState:
         def leaf_init(spec: LeafSpec, p: jax.Array) -> LeafState:
@@ -301,6 +333,7 @@ def make_lowrank_optimizer(
         refresh: bool,
         group: int = 0,
         projected: bool = False,
+        apply: bool = False,
     ) -> Tuple[PyTree, LowRankOptState, AuxInfo]:
         """Returns (updates, new_state, aux); apply via params + updates.
 
@@ -309,6 +342,12 @@ def make_lowrank_optimizer(
         path computes and psums them *before* calling update, cutting DP
         traffic by ~d/r.  Incompatible with refresh (SVD needs full G) and
         with Fira (the residual needs full G).
+
+        ``apply=True``: return NEW PARAMS instead of updates -- the fused
+        kernels of the bucketed engine emit W' directly, so no full-space
+        update pytree is ever materialized and the separate
+        ``apply_updates`` pass disappears (params read/written once).  The
+        reference engine honors the same contract by applying internally.
         """
         if projected and refresh:
             raise ValueError("projected gradients cannot drive a refresh step")
@@ -328,26 +367,59 @@ def make_lowrank_optimizer(
         else:
             subkey = key  # unused
 
-        is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
-        flat_specs, spec_treedef = jax.tree_util.tree_flatten(
-            specs, is_leaf=is_spec
-        )
+        flat_specs = flat_specs_static
         flat_states = spec_treedef.flatten_up_to(state.leaves)
         flat_grads = spec_treedef.flatten_up_to(grads)
         flat_params = spec_treedef.flatten_up_to(params)
 
+        # Fused bucketed hot path: one batched kernel chain per bucket for
+        # the covered leaves; everything else falls through to the
+        # reference loop below.  Refresh steps always run reference (the
+        # SVD dominates them and the projector changes under the update).
+        fused: dict = {}
+        if (
+            bucket_plan is not None
+            and bucket_plan.buckets
+            and not refresh
+            and not cfg.fira
+            and inner.fused_eligible
+        ):
+            fused = buckets_lib.bucketed_update(
+                bucket_plan, cfg, flat_states, flat_grads, flat_params,
+                step, lr, projected=projected, apply=apply,
+            )
+
         overlaps = []
-        flat_updates = []
+        flat_out = []  # updates, or new params for fused leaves when apply
+        flat_norm_sq = []  # per-leaf squared update norms (aux)
         flat_new_states = []
+
+        def _norm_sq(u):
+            return jnp.sum(jnp.square(u.astype(jnp.float32)))
+
         for i, (spec, st, g, p) in enumerate(
             zip(flat_specs, flat_states, flat_grads, flat_params)
         ):
+            if i in fused:
+                out, new_st = fused[i]
+                if apply:
+                    flat_norm_sq.append(
+                        _norm_sq(out.astype(jnp.float32) - p.astype(jnp.float32))
+                    )
+                else:
+                    flat_norm_sq.append(_norm_sq(out))
+                flat_out.append(out)
+                flat_new_states.append(new_st)
+                continue
+
             if not spec.lowrank:
                 direction, inner_state = inner.update(g, st.inner, step)
                 upd = -lr * direction
                 if cfg.weight_decay:
                     upd = upd - lr * cfg.weight_decay * p.astype(jnp.float32)
-                flat_updates.append(upd.astype(p.dtype))
+                upd = upd.astype(p.dtype)
+                flat_norm_sq.append(_norm_sq(upd))
+                flat_out.append((p + upd) if apply else upd)
                 flat_new_states.append(
                     LeafState(projector=st.projector, inner=inner_state)
                 )
@@ -377,15 +449,17 @@ def make_lowrank_optimizer(
                 upd = upd - lr * cfg.alpha * ratio * s_res
             if cfg.weight_decay:
                 upd = upd - lr * cfg.weight_decay * p.astype(jnp.float32)
-            flat_updates.append(upd.astype(p.dtype))
+            upd = upd.astype(p.dtype)
+            flat_norm_sq.append(_norm_sq(upd))
+            flat_out.append((p + upd) if apply else upd)
             flat_new_states.append(
                 LeafState(projector=st.projector, inner=inner_state)
             )
 
-        updates = jax.tree_util.tree_unflatten(spec_treedef, flat_updates)
+        out_tree = jax.tree_util.tree_unflatten(spec_treedef, flat_out)
         new_leaves = jax.tree_util.tree_unflatten(spec_treedef, flat_new_states)
 
-        unorm = _global_norm(updates)
+        unorm = jnp.sqrt(sum(flat_norm_sq))
         mean_overlap = (
             jnp.mean(jnp.stack(overlaps)) if overlaps else jnp.zeros(())
         )
@@ -393,9 +467,12 @@ def make_lowrank_optimizer(
         aux = AuxInfo(
             grad_norm=gnorm, update_norm=unorm, mean_refresh_overlap=mean_overlap
         )
-        return updates, new_state, aux
+        return out_tree, new_state, aux
 
-    return LowRankOptimizer(init=init, update=update, specs=specs, config=cfg)
+    return LowRankOptimizer(
+        init=init, update=update, specs=specs, config=cfg,
+        bucket_plan=bucket_plan,
+    )
 
 
 def _safe_ratio(num: jax.Array, den: jax.Array) -> jax.Array:

@@ -1,13 +1,21 @@
-"""Pallas TPU kernel: fused gradient projection + Adam moment update.
+"""Pallas TPU kernels: fused gradient projection (+ optional Adam moments).
 
-The other half of the optimizer hot loop (lowrank_update handles the
-back-projection side): unfused, XLA writes R = P^T G to HBM, then reads R
-three more times for the M/V updates.  Fused, R lives in a VMEM scratch
+``galore_project`` (2-D) is the distributed project-then-reduce half of the
+optimizer loop: unfused, XLA writes R = P^T G to HBM, then reads R three
+more times for the M/V updates.  Fused, R lives in a VMEM scratch
 accumulated over d-blocks; at the last d-block the moment updates read/write
 M and V once and R is emitted once.
 
-Grid: (n_blocks, d_blocks), d innermost ("arbitrary": the (r, bn) accumulator
-scratch carries across d-blocks of one n-block).  r <= 512 stays whole.
+``galore_project_batched`` is the bucketed-engine projection: a leading
+batch *grid* dimension (not vmap-of-pallas_call) projects a whole stacked
+bucket (B, d, n) -> (B, r, n) in one dispatch.  It deliberately does NOT
+touch the moments: in the fused hot path the moment update belongs to the
+update kernel (lowrank_update), which reads R once and owns M/V read/write
+-- fusing moments here too would apply them twice.
+
+Grid: (batch?, n_blocks, d_blocks), d innermost ("arbitrary": the (r, bn)
+accumulator scratch carries across d-blocks of one n-block).  r <= 512
+stays whole.
 """
 from __future__ import annotations
 
@@ -18,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _kernel(
@@ -74,10 +84,8 @@ def galore_project(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     d, n = g.shape
     _, r = p.shape
-    bd = min(block_d, d)
-    bn = min(block_n, n)
-    if d % bd or n % bn:
-        bd, bn = d, n
+    bd = compat.pick_block(d, block_d)
+    bn = compat.pick_block(n, block_n)
     nd = d // bd
     grid = (n // bn, nd)
     kernel = functools.partial(_kernel, b1=b1, b2=b2, nd=nd)
@@ -101,8 +109,76 @@ def galore_project(
             jax.ShapeDtypeStruct((r, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(g, p, m, v)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed-engine projection: batched, moment-free
+# ---------------------------------------------------------------------------
+
+
+def _project_kernel(
+    g_ref,  # (1, bd, bn)
+    p_ref,  # (1, bd, r)
+    r_out,  # (1, r, bn)
+    acc,  # VMEM scratch (r, bn) f32
+    *,
+    nd: int,
+):
+    i_d = pl.program_id(2)
+
+    @pl.when(i_d == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        p_ref[0].astype(jnp.float32),
+        g_ref[0].astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(i_d == nd - 1)
+    def _finalize():
+        r_out[0] = acc[...].astype(r_out.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "block_n", "interpret")
+)
+def galore_project_batched(
+    g: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    *,
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """R = P^T G per batch slice, one fused dispatch: (B, r, n) f32."""
+    bsz, d, n = g.shape
+    _, _, r = p.shape
+    assert p.shape == (bsz, d, r)
+    bd = compat.pick_block(d, block_d)
+    bn = compat.pick_block(n, block_n)
+    nd = d // bd
+    grid = (bsz, n // bn, nd)
+    kernel = functools.partial(_project_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd, bn), lambda b, i, j: (b, j, i)),  # G
+            pl.BlockSpec((1, bd, r), lambda b, i, j: (b, j, 0)),  # P
+        ],
+        out_specs=pl.BlockSpec((1, r, bn), lambda b, i, j: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, r, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(g, p)

@@ -17,15 +17,22 @@ import jax.numpy as jnp
 
 
 def galore_project_ref(
-    g: jax.Array,  # (d, n)
-    p: jax.Array,  # (d, r)
-    m: jax.Array,  # (r, n)
-    v: jax.Array,  # (r, n)
+    g: jax.Array,  # (..., d, n)
+    p: jax.Array,  # (..., d, r)
+    m: jax.Array,  # (..., r, n)
+    v: jax.Array,  # (..., r, n)
     *,
     b1: float,
     b2: float,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    r = (p.astype(jnp.float32).T @ g.astype(jnp.float32))
+    r = project_ref(g, p)
     m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * r
     v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * r * r
     return r, m_new, v_new
+
+
+def project_ref(g: jax.Array, p: jax.Array) -> jax.Array:
+    """R = P^T G with leading batch dims (oracle for the batched kernel)."""
+    return jnp.einsum(
+        "...dr,...dn->...rn", p.astype(jnp.float32), g.astype(jnp.float32)
+    )

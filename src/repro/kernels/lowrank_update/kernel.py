@@ -1,23 +1,34 @@
-"""Pallas TPU kernel: fused low-rank Adam update + back-projection.
+"""Pallas TPU kernels: fused low-rank (Adam | MSGD) update + back-projection.
 
 The torch GaLore update runs four separate passes over HBM per layer:
 moment update (read M,V,R / write M,V), Adam direction (read M,V / write N),
 back-projection GEMM (read P,N / write dW), weight update (read W,dW/write W).
-This kernel fuses all four: per (n-block, d-block) grid step it
+This kernel fuses all four: per (batch, n-block, d-block) grid step it
 
-  * at d==0: updates the (r, bn) moment slabs in VMEM, writes M',V', and
-    stashes the bias-corrected Adam direction N in a VMEM scratch;
-  * for every d: computes  W'[d-blk, n-blk] = W - lr_alpha * P[d-blk] @ N
-    straight out of the scratch -- the full-space direction (d x n) is never
-    materialized in HBM.
+  * at d==0: updates the (r, bn) moment slabs in VMEM, writes the new
+    moments, and stashes the bias-corrected direction N in a VMEM scratch;
+  * for every d: computes  W'[d-blk, n-blk] = (1 - lr*wd) W - lr_alpha *
+    P[d-blk] @ N straight out of the scratch -- the full-space direction
+    (d x n) is never materialized in HBM, weight decay rides along for free,
+    and W' *replaces* the separate ``apply_updates`` pass (params are read
+    and written exactly once).
 
-Grid: (n_blocks, d_blocks), d innermost so the N scratch computed at d==0 is
-reused by all d-blocks of the same n-block (TPU grid steps run sequentially,
-scratch persists).  r (<= 512) is kept whole in VMEM: P block (bd, r) and N
-scratch (r, bn) are both 128-aligned MXU operands.
+Grid: (batch, n_blocks, d_blocks), d innermost so the N scratch computed at
+d==0 is reused by all d-blocks of the same (batch, n-block) (TPU grid steps
+run sequentially, scratch persists).  r (<= 512) is kept whole in VMEM:
+P block (bd, r) and N scratch (r, bn) are both 128-aligned MXU operands.
 
-Scalar operands (step, lr_alpha) arrive via scalar prefetch so no retrace
-happens when the learning-rate schedule moves.
+The leading batch dimension is a real grid axis (not vmap-of-pallas_call):
+the bucketed update engine (core/buckets.py) stacks every same-shape leaf of
+a pytree into one (B, d, n) tensor and dispatches ONE kernel per bucket.
+B == 1 recovers the single-matrix kernel; the 2-D entry points below are
+thin reshaping wrappers.
+
+Scalar operands (step, lr_alpha, lr_wd) arrive via scalar prefetch so no
+retrace happens when the learning-rate schedule moves.
+
+Two inner optimizers are fused (DESIGN.md §2): ``adam`` (M, V moments,
+bias-corrected) and ``msgd`` (single moment, the optimizer of Theorem 3.4).
 """
 from __future__ import annotations
 
@@ -29,45 +40,53 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
 
-def _kernel(
-    scalars,  # SMEM: (2,) f32 [step, lr_alpha]
-    w_ref,  # (bd, bn) in
-    p_ref,  # (bd, r)
-    r_ref,  # (r, bn)
-    m_ref,  # (r, bn)
-    v_ref,  # (r, bn)
-    w_out,  # (bd, bn)
-    m_out,  # (r, bn)
-    v_out,  # (r, bn)
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def _adam_kernel(
+    scalars,  # SMEM: (3,) f32 [step, lr_alpha, lr_wd]
+    w_ref,  # (1, bd, bn) in
+    p_ref,  # (1, bd, r)
+    r_ref,  # (1, r, bn)
+    m_ref,  # (1, r, bn)
+    v_ref,  # (1, r, bn)
+    w_out,  # (1, bd, bn)
+    m_out,  # (1, r, bn)
+    v_out,  # (1, r, bn)
     n_scr,  # VMEM scratch (r, bn) f32
     *,
     b1: float,
     b2: float,
     eps: float,
 ):
-    i_d = pl.program_id(1)
+    i_d = pl.program_id(2)
 
     @pl.when(i_d == 0)
     def _update_moments():
-        r32 = r_ref[...].astype(jnp.float32)
-        m_new = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * r32
-        v_new = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * r32 * r32
+        r32 = r_ref[0].astype(jnp.float32)
+        m_new = b1 * m_ref[0].astype(jnp.float32) + (1.0 - b1) * r32
+        v_new = b2 * v_ref[0].astype(jnp.float32) + (1.0 - b2) * r32 * r32
         t = scalars[0]
         bc1 = 1.0 - b1**t
         bc2 = 1.0 - b2**t
         n_scr[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
-        m_out[...] = m_new.astype(m_out.dtype)
-        v_out[...] = v_new.astype(v_out.dtype)
+        m_out[0] = m_new.astype(m_out.dtype)
+        v_out[0] = v_new.astype(v_out.dtype)
 
     lr_alpha = scalars[1]
+    lr_wd = scalars[2]
     delta = jnp.dot(
-        p_ref[...].astype(jnp.float32),
+        p_ref[0].astype(jnp.float32),
         n_scr[...],
         preferred_element_type=jnp.float32,
     )
-    w_out[...] = (
-        w_ref[...].astype(jnp.float32) - lr_alpha * delta
+    w_out[0] = (
+        (1.0 - lr_wd) * w_ref[0].astype(jnp.float32) - lr_alpha * delta
     ).astype(w_out.dtype)
 
 
@@ -75,14 +94,15 @@ def _kernel(
     jax.jit,
     static_argnames=("b1", "b2", "eps", "block_d", "block_n", "interpret"),
 )
-def lowrank_adam_update(
-    w: jax.Array,  # (d, n)
-    p: jax.Array,  # (d, r)
-    r_g: jax.Array,  # (r, n)
-    m: jax.Array,  # (r, n)
-    v: jax.Array,  # (r, n)
+def lowrank_adam_update_batched(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m: jax.Array,  # (B, r, n)
+    v: jax.Array,  # (B, r, n)
     step: jax.Array,  # int32 scalar
     lr_alpha: jax.Array,  # f32 scalar
+    lr_wd: jax.Array | float = 0.0,  # f32 scalar: lr * weight_decay
     *,
     b1: float = 0.9,
     b2: float = 0.999,
@@ -91,38 +111,37 @@ def lowrank_adam_update(
     block_n: int = 512,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    d, r = p.shape
-    rr, n = r_g.shape
-    assert rr == r and w.shape == (d, n) and m.shape == (r, n)
-    bd = min(block_d, d)
-    bn = min(block_n, n)
-    # TPU wants the last dim 128-aligned; fall back to whole-dim blocks for
-    # ragged small shapes (tests) rather than padding logic in the kernel.
-    if d % bd or n % bn:
-        bd, bn = d, n
-    grid = (n // bn, d // bd)
+    bsz, d, r = p.shape
+    assert w.shape == (bsz, d, r_g.shape[-1])
+    _, rr, n = r_g.shape
+    assert rr == r and m.shape == (bsz, r, n)
+    bd = compat.pick_block(d, block_d)
+    bn = compat.pick_block(n, block_n)
+    grid = (bsz, n // bn, d // bd)
 
-    scalars = jnp.stack(
-        [step.astype(jnp.float32), lr_alpha.astype(jnp.float32)]
-    )
+    scalars = jnp.stack([
+        step.astype(jnp.float32),
+        jnp.asarray(lr_alpha, jnp.float32),
+        jnp.asarray(lr_wd, jnp.float32),
+    ])
 
-    kernel = functools.partial(_kernel, b1=b1, b2=b2, eps=eps)
+    kernel = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps)
     w_new, m_new, v_new = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((bd, bn), lambda i, j, s: (j, i)),  # W
-                pl.BlockSpec((bd, r), lambda i, j, s: (j, 0)),  # P
-                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),  # R
-                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),  # M
-                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),  # V
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),  # W
+                pl.BlockSpec((1, bd, r), lambda b, i, j, s: (b, j, 0)),  # P
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # R
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # M
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # V
             ],
             out_specs=[
-                pl.BlockSpec((bd, bn), lambda i, j, s: (j, i)),
-                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),
-                pl.BlockSpec((r, bn), lambda i, j, s: (0, i)),
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),
             ],
             scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
         ),
@@ -131,9 +150,133 @@ def lowrank_adam_update(
             jax.ShapeDtypeStruct(m.shape, jnp.float32),
             jax.ShapeDtypeStruct(v.shape, jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(scalars, w, p, r_g, m, v)
     return w_new, m_new, v_new
+
+
+def lowrank_adam_update(
+    w: jax.Array,  # (d, n)
+    p: jax.Array,  # (d, r)
+    r_g: jax.Array,  # (r, n)
+    m: jax.Array,  # (r, n)
+    v: jax.Array,  # (r, n)
+    step: jax.Array,  # int32 scalar
+    lr_alpha: jax.Array,  # f32 scalar
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-matrix entry point: B == 1 batched call."""
+    w_new, m_new, v_new = lowrank_adam_update_batched(
+        w[None], p[None], r_g[None], m[None], v[None], step, lr_alpha, lr_wd,
+        b1=b1, b2=b2, eps=eps, block_d=block_d, block_n=block_n,
+        interpret=interpret,
+    )
+    return w_new[0], m_new[0], v_new[0]
+
+
+# ---------------------------------------------------------------------------
+# Momentum SGD (Theorem 3.4's optimizer; inner.msgd convention
+# M' = (1-b1) M + b1 R, direction = M')
+# ---------------------------------------------------------------------------
+
+
+def _msgd_kernel(
+    scalars,  # SMEM: (2,) f32 [lr_alpha, lr_wd]
+    w_ref,  # (1, bd, bn)
+    p_ref,  # (1, bd, r)
+    r_ref,  # (1, r, bn)
+    m_ref,  # (1, r, bn)
+    w_out,  # (1, bd, bn)
+    m_out,  # (1, r, bn)
+    n_scr,  # VMEM scratch (r, bn) f32
+    *,
+    b1: float,
+):
+    i_d = pl.program_id(2)
+
+    @pl.when(i_d == 0)
+    def _update_moment():
+        r32 = r_ref[0].astype(jnp.float32)
+        m_new = (1.0 - b1) * m_ref[0].astype(jnp.float32) + b1 * r32
+        n_scr[...] = m_new
+        m_out[0] = m_new.astype(m_out.dtype)
+
+    lr_alpha = scalars[0]
+    lr_wd = scalars[1]
+    delta = jnp.dot(
+        p_ref[0].astype(jnp.float32),
+        n_scr[...],
+        preferred_element_type=jnp.float32,
+    )
+    w_out[0] = (
+        (1.0 - lr_wd) * w_ref[0].astype(jnp.float32) - lr_alpha * delta
+    ).astype(w_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "block_d", "block_n", "interpret"),
+)
+def lowrank_msgd_update_batched(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m: jax.Array,  # (B, r, n)
+    lr_alpha: jax.Array,  # f32 scalar
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, d, r = p.shape
+    _, rr, n = r_g.shape
+    assert rr == r and w.shape == (bsz, d, n) and m.shape == (bsz, r, n)
+    bd = compat.pick_block(d, block_d)
+    bn = compat.pick_block(n, block_n)
+    grid = (bsz, n // bn, d // bd)
+
+    scalars = jnp.stack([
+        jnp.asarray(lr_alpha, jnp.float32),
+        jnp.asarray(lr_wd, jnp.float32),
+    ])
+
+    kernel = functools.partial(_msgd_kernel, b1=b1)
+    w_new, m_new = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),  # W
+                pl.BlockSpec((1, bd, r), lambda b, i, j, s: (b, j, 0)),  # P
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # R
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # M
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),
+            ],
+            scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scalars, w, p, r_g, m)
+    return w_new, m_new

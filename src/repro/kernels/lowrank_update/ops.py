@@ -1,14 +1,16 @@
-"""Backend dispatch for the fused low-rank Adam update.
+"""Backend dispatch for the fused low-rank update kernels.
 
-* TPU backend: the Pallas kernel (kernel.py).
-* everywhere else: the pure-jnp reference (ref.py) -- identical math; XLA
+* TPU backend: the Pallas kernels (kernel.py), batch grid dimension included.
+* everywhere else: the pure-jnp references (ref.py) -- identical math; XLA
   fuses the elementwise part but materializes the back-projection GEMM
-  operand, which is exactly the HBM round-trip the kernel removes.
+  operand, which is exactly the HBM round-trip the kernel removes.  The refs
+  are batch-capable einsums, so the bucketed engine keeps its
+  one-dispatch-per-bucket shape on CPU/GPU too (fewer, larger XLA ops).
 
-Covers side='left' 2-D leaves (d <= n, the dominant case: every attention/MLP
-projection in the assigned archs).  side='right' and stacked (batched) leaves
-fall back to the reference path (vmap of the kernel is a later optimization;
-see EXPERIMENTS.md §Perf).
+These are the primitives of the bucketed update engine (core/buckets.py):
+every function takes stacked (B, d, n)/(B, d, r)/(B, r, n) operands in the
+canonical side='left' orientation (the engine transposes side='right'
+buckets on the way in/out).
 """
 from __future__ import annotations
 
@@ -18,7 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.lowrank_update import ref as ref_lib
-from repro.kernels.lowrank_update.kernel import lowrank_adam_update
+from repro.kernels.lowrank_update.kernel import (
+    lowrank_adam_update,
+    lowrank_adam_update_batched,
+    lowrank_msgd_update_batched,
+)
 
 
 def _on_tpu() -> bool:
@@ -40,6 +46,7 @@ def fused_lowrank_adam_update(
     force_pallas: bool = False,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-matrix (2-D, side='left') fused update -- legacy entry point."""
     use_kernel = force_pallas or _on_tpu()
     if use_kernel and w.ndim == 2:
         return lowrank_adam_update(
@@ -48,4 +55,77 @@ def fused_lowrank_adam_update(
         )
     return ref_lib.lowrank_adam_update_ref(
         w, p, r_g, m, v, b1=b1, b2=b2, eps=eps, step=step, lr_alpha=lr_alpha
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bucketed-engine primitives (stacked (B, ...) operands)
+# ---------------------------------------------------------------------------
+
+
+def bucketed_project(
+    g: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    *,
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    if force_pallas or _on_tpu():
+        from repro.kernels.galore_project.kernel import galore_project_batched
+
+        return galore_project_batched(
+            g, p, interpret=interpret or not _on_tpu()
+        )
+    from repro.kernels.galore_project.ref import project_ref
+
+    return project_ref(g, p)
+
+
+def bucketed_adam_update(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m: jax.Array,  # (B, r, n)
+    v: jax.Array,  # (B, r, n)
+    step: jax.Array,
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """W' = (1-lr_wd) W - lr_alpha P@N, plus new moments, one dispatch."""
+    if force_pallas or _on_tpu():
+        return lowrank_adam_update_batched(
+            w, p, r_g, m, v, step, lr_alpha, lr_wd,
+            b1=b1, b2=b2, eps=eps, interpret=interpret or not _on_tpu(),
+        )
+    return ref_lib.lowrank_adam_update_ref(
+        w, p, r_g, m, v, b1=b1, b2=b2, eps=eps, step=step,
+        lr_alpha=lr_alpha, lr_wd=lr_wd,
+    )
+
+
+def bucketed_msgd_update(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m: jax.Array,  # (B, r, n)
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    if force_pallas or _on_tpu():
+        return lowrank_msgd_update_batched(
+            w, p, r_g, m, lr_alpha, lr_wd,
+            b1=b1, interpret=interpret or not _on_tpu(),
+        )
+    return ref_lib.lowrank_msgd_update_ref(
+        w, p, r_g, m, b1=b1, lr_alpha=lr_alpha, lr_wd=lr_wd
     )

@@ -1,13 +1,19 @@
-"""Pure-jnp oracle for the fused GaLore/SARA-Adam update kernel.
+"""Pure-jnp oracles for the fused GaLore/SARA update kernels.
 
-Semantics (side='left', the kernel-covered case; d = m <= n):
+Semantics (side='left', the kernel-covered case; d = m <= n), with optional
+leading batch dims (the bucketed engine's stacked (B, d, n) layout):
 
+  Adam:
     M' = b1 M + (1-b1) R
     V' = b2 V + (1-b2) R*R
     N  = (M'/bc1) / (sqrt(V'/bc2) + eps)        # bias-corrected Adam dir
-    W' = W - lr_alpha * (P @ N)                 # fused back-projection
+    W' = (1 - lr_wd) W - lr_alpha * (P @ N)     # fused back-projection +
+                                                # decoupled weight decay
+  MSGD (inner.msgd convention):
+    M' = (1-b1) M + b1 R
+    W' = (1 - lr_wd) W - lr_alpha * (P @ M')
 
-with bc1 = 1-b1^t, bc2 = 1-b2^t.  Returns (W', M', V').
+with bc1 = 1-b1^t, bc2 = 1-b2^t.  Returns (W', M', V') / (W', M').
 """
 from __future__ import annotations
 
@@ -18,17 +24,18 @@ import jax.numpy as jnp
 
 
 def lowrank_adam_update_ref(
-    w: jax.Array,  # (d, n)
-    p: jax.Array,  # (d, r)
-    r_g: jax.Array,  # (r, n) projected gradient
-    m: jax.Array,  # (r, n)
-    v: jax.Array,  # (r, n)
+    w: jax.Array,  # (..., d, n)
+    p: jax.Array,  # (..., d, r)
+    r_g: jax.Array,  # (..., r, n) projected gradient
+    m: jax.Array,  # (..., r, n)
+    v: jax.Array,  # (..., r, n)
     *,
     b1: float,
     b2: float,
     eps: float,
     step: jax.Array,  # int32 scalar (1-indexed)
     lr_alpha: jax.Array,  # f32 scalar: lr * galore_alpha
+    lr_wd: jax.Array | float = 0.0,  # f32 scalar: lr * weight_decay
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     r32 = r_g.astype(jnp.float32)
     m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * r32
@@ -37,7 +44,24 @@ def lowrank_adam_update_ref(
     bc1 = 1.0 - b1**t
     bc2 = 1.0 - b2**t
     n_dir = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
-    w_new = w.astype(jnp.float32) - lr_alpha * (
-        p.astype(jnp.float32) @ n_dir
+    w_new = (1.0 - lr_wd) * w.astype(jnp.float32) - lr_alpha * jnp.einsum(
+        "...dr,...rn->...dn", p.astype(jnp.float32), n_dir
     )
     return w_new.astype(w.dtype), m_new, v_new
+
+
+def lowrank_msgd_update_ref(
+    w: jax.Array,  # (..., d, n)
+    p: jax.Array,  # (..., d, r)
+    r_g: jax.Array,  # (..., r, n)
+    m: jax.Array,  # (..., r, n)
+    *,
+    b1: float,
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    m_new = (1.0 - b1) * m.astype(jnp.float32) + b1 * r_g.astype(jnp.float32)
+    w_new = (1.0 - lr_wd) * w.astype(jnp.float32) - lr_alpha * jnp.einsum(
+        "...dr,...rn->...dn", p.astype(jnp.float32), m_new
+    )
+    return w_new.astype(w.dtype), m_new

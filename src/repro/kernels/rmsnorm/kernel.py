@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _kernel(x_ref, s_ref, o_ref, *, eps: float):
@@ -40,9 +41,7 @@ def rmsnorm(
     for s in x.shape[:-1]:
         rows *= s
     x2 = x.reshape(rows, d)
-    bm = min(block_rows, rows)
-    if rows % bm:
-        bm = rows  # ragged test shapes: single block
+    bm = compat.pick_block(rows, block_rows, align=8)
     out = pl.pallas_call(
         functools.partial(_kernel, eps=eps),
         grid=(rows // bm,),
@@ -52,7 +51,7 @@ def rmsnorm(
         ],
         out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -33,3 +33,25 @@ def single_device_mesh():
 
 def batch_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names):
+    """``jax.shard_map`` across jax generations.
+
+    New jax: top-level ``jax.shard_map(..., axis_names=..., check_vma=...)``.
+    Old jax (<= 0.4.x): ``jax.experimental.shard_map.shard_map`` with the
+    manual/auto split expressed through ``auto`` (complement of the manual
+    ``axis_names``) and replication checking via ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(axis_names), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False, auto=auto,
+    )

@@ -156,7 +156,10 @@ def _ep_local_fn(x_loc, router_w, gate_w, up_w, down_w, shared, cfg,
     k = cfg.moe_top_k
     e = cfg.n_experts
     dt = x_loc.dtype
-    m_size = jax.lax.axis_size("model")
+    if hasattr(jax.lax, "axis_size"):
+        m_size = jax.lax.axis_size("model")
+    else:  # old jax: axis size via a counting psum
+        m_size = jax.lax.psum(1, "model")
     m_rank = jax.lax.axis_index("model")
     e_loc = e // m_size
     cap = int(t * k / e * cfg.moe_capacity_factor) + 1
@@ -238,7 +241,9 @@ def _apply_moe_ep(p, x, cfg, mesh):
 
     fn = functools.partial(_ep_local_fn, cfg=cfg, dp_axes=dp_axes)
     # wrap to make `shared` a positional pytree (or None)
-    out, aux = jax.shard_map(
+    from repro.launch.mesh import shard_map_compat
+
+    out, aux = shard_map_compat(
         lambda x_, rw, gw, uw, dw, sh: fn(x_, rw, gw, uw, dw, sh),
         mesh=mesh,
         in_specs=(
@@ -250,7 +255,7 @@ def _apply_moe_ep(p, x, cfg, mesh):
             shared_specs,
         ),
         out_specs=(P(batch_ax, None, None), P()),
-        check_vma=False,
+        axis_names=set(mesh.axis_names),
     )(x, p["router_w"], ew["gate_proj"], ew["up_proj"], ew["down_proj"],
       shared)
     return out, aux

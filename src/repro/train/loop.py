@@ -123,6 +123,7 @@ def train_loop(
                     "step": float(step),
                     "loss": loss,
                     "grad_norm": float(m.get("grad_norm", np.nan)),
+                    "update_norm": float(m.get("update_norm", np.nan)),
                     **{k: float(v) for k, v in health.items()},
                 }
                 if eval_fn is not None:

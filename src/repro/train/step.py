@@ -16,6 +16,11 @@ Two training-step flavors:
   replica-identical inside the manual region); memory-for-bandwidth trade
   documented in EXPERIMENTS.md §Perf.
 
+Both flavors call ``optimizer.update(..., apply=True)``: the optimizer
+returns new params directly, so with ``engine="bucketed"`` the fused
+kernels' W' output replaces the old separate ``apply_updates`` pass over
+the params (one read + one write per param per step, donated buffers).
+
 Both flavors build TWO executables -- (refresh=False) hot path and
 (refresh=True) projector-refresh path -- selected by the caller on
 ``step % tau == 0``.  Keeping the SVD out of the hot executable keeps its HLO
@@ -35,7 +40,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import TrainConfig
 from repro.core import lowrank as lowrank_lib
 from repro.launch import sharding as shd
-from repro.launch.mesh import batch_axes
+from repro.launch.mesh import batch_axes, shard_map_compat
 from repro.models.model_zoo import Model
 from repro.train.state import TrainState
 
@@ -99,10 +104,14 @@ def make_train_step(
 
     def step_fn(state: TrainState, batch, *, refresh: bool, group: int = 0):
         (loss, metrics), grads = vg(state.params, batch)
-        updates, opt_state, aux = optimizer.update(
-            grads, state.opt_state, state.params, refresh=refresh, group=group
+        # apply=True: the optimizer returns new params directly -- with
+        # engine="bucketed" the fused kernels write W' themselves, so there
+        # is no separate apply_updates pass over the parameters (and with
+        # donation the param buffers are updated in place).
+        params, opt_state, aux = optimizer.update(
+            grads, state.opt_state, state.params, refresh=refresh,
+            group=group, apply=True,
         )
-        params = lowrank_lib.apply_updates(state.params, updates)
         out_metrics = {
             **metrics,
             "grad_norm": aux.grad_norm,
@@ -146,20 +155,22 @@ def make_train_step(
             (loss, metrics), grads = vg(state.params, batch)
             if refresh:
                 grads = jax.lax.pmean(grads, dp)
-                updates, opt_state, aux = optimizer.update(
+                params, opt_state, aux = optimizer.update(
                     grads, state.opt_state, state.params,
-                    refresh=True, group=group,
+                    refresh=True, group=group, apply=True,
                 )
             else:
                 rgrads = lowrank_lib.project_grads(
                     optimizer, grads, state.opt_state
                 )
                 rgrads = jax.lax.pmean(rgrads, dp)
-                updates, opt_state, aux = optimizer.update(
+                # projected R-space grads feed the bucketed engine too: the
+                # per-bucket projection stage is skipped, only the fused
+                # moment+backproject+apply kernel runs.
+                params, opt_state, aux = optimizer.update(
                     rgrads, state.opt_state, state.params,
-                    refresh=False, projected=True,
+                    refresh=False, projected=True, apply=True,
                 )
-            params = lowrank_lib.apply_updates(state.params, updates)
             metrics = jax.lax.pmean(metrics, dp)
             out_metrics = {
                 **metrics,
@@ -169,13 +180,12 @@ def make_train_step(
             }
             return TrainState(params, opt_state), out_metrics
 
-        return jax.shard_map(
+        return shard_map_compat(
             shard_body,
             mesh=mesh,
             in_specs=(P(), batch_specs),
             out_specs=(P(), P()),
             axis_names=set(dp),
-            check_vma=False,
         )(state, batch)
 
     base = compressed_step_fn if compressed else step_fn
@@ -195,6 +205,10 @@ def make_train_step(
         donate_argnums=donate_args,
     )
     fns["refresh_groups"] = refresh_groups
+    # Surfaced so launchers/benchmarks can report which hot path compiled
+    # (and how many fused dispatches it takes per step).
+    fns["engine"] = optimizer.config.engine
+    fns["bucket_plan"] = optimizer.bucket_plan
     return fns
 
 

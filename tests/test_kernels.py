@@ -6,9 +6,16 @@ import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.lowrank_update.kernel import lowrank_adam_update
+from repro.kernels.lowrank_update.kernel import (
+    lowrank_adam_update,
+    lowrank_adam_update_batched,
+    lowrank_msgd_update_batched,
+)
 from repro.kernels.lowrank_update.ops import fused_lowrank_adam_update
-from repro.kernels.lowrank_update.ref import lowrank_adam_update_ref
+from repro.kernels.lowrank_update.ref import (
+    lowrank_adam_update_ref,
+    lowrank_msgd_update_ref,
+)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -83,6 +90,64 @@ def test_ops_dispatch_cpu_uses_ref():
         jnp.asarray(1e-3, jnp.float32),
     )
     assert out[0].shape == (d, n)
+
+
+def _batched_operands(B, d, n, r, wdtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 5)
+    w = (jax.random.normal(ks[0], (B, d, n)) * 0.1).astype(wdtype)
+    p = jnp.stack([
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(ks[1], b), (d, r)))[0]
+        for b in range(B)
+    ])
+    rg = jax.random.normal(ks[2], (B, r, n)) * 0.01
+    m = jax.random.normal(ks[3], (B, r, n)) * 0.01
+    v = jnp.abs(jax.random.normal(ks[4], (B, r, n))) * 1e-4
+    return w, p, rg, m, v
+
+
+@pytest.mark.parametrize("B,d,n,r", [(1, 128, 256, 32), (3, 128, 384, 32)])
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_update_batched_matches_ref(B, d, n, r, wdtype):
+    """The leading batch grid dim: every slice == the 2-D oracle."""
+    w, p, rg, m, v = _batched_operands(B, d, n, r, wdtype)
+    step = jnp.asarray(7, jnp.int32)
+    lr = jnp.asarray(3e-3, jnp.float32)
+    wd = jnp.asarray(2e-4, jnp.float32)
+    w1, m1, v1 = lowrank_adam_update_batched(
+        w, p, rg, m, v, step, lr, wd, interpret=True
+    )
+    w2, m2, v2 = lowrank_adam_update_ref(
+        w, p, rg, m, v, b1=0.9, b2=0.999, eps=1e-8, step=step,
+        lr_alpha=lr, lr_wd=wd,
+    )
+    tol = 1e-5 if wdtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(w1, np.float32), np.asarray(w2, np.float32), atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+
+
+@pytest.mark.parametrize("B,d,n,r", [(2, 128, 256, 32)])
+def test_lowrank_msgd_batched_matches_ref(B, d, n, r):
+    w, p, rg, m, _ = _batched_operands(B, d, n, r)
+    lr = jnp.asarray(1e-3, jnp.float32)
+    w1, m1 = lowrank_msgd_update_batched(w, p, rg, m, lr, interpret=True)
+    w2, m2 = lowrank_msgd_update_ref(w, p, rg, m, b1=0.9, lr_alpha=lr)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-6)
+
+
+def test_galore_project_batched_matches_ref():
+    from repro.kernels.galore_project.kernel import galore_project_batched
+    from repro.kernels.galore_project.ref import project_ref
+
+    B, d, n, r = 3, 256, 384, 32
+    _, p, _, _, _ = _batched_operands(B, d, n, r)
+    g = jax.random.normal(jax.random.fold_in(KEY, 11), (B, d, n)) * 0.1
+    r1 = galore_project_batched(g, p, block_d=128, interpret=True)
+    r2 = project_ref(g, p)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (offline image)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.metrics import (

@@ -13,6 +13,11 @@ Theorem 3.4.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (offline image)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.projectors import ProjectorConfig, refresh_projector, residual
