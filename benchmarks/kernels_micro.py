@@ -144,7 +144,13 @@ def rmsnorm_bench() -> List[Row]:
 def update_engine_bench() -> List[Row]:
     """End-to-end optimizer hot step: engine='reference' vs 'bucketed' on a
     realistic stacked-transformer pytree (scan layers, excluded embed/norm
-    leaves, mixed left/right sides -> multiple buckets)."""
+    leaves, mixed left/right sides -> multiple buckets).
+
+    Runs with ``track_update_norm=False`` (the pure-throughput
+    configuration; the W' - W aux read pass is gated off) and reports the
+    bucket-native storage layout's modeled HBM alongside the per-leaf
+    layout it replaced -- the delta is the per-step moment/projector
+    stack/unstack the ISSUE-2 refactor deleted."""
     from repro.core import make_optimizer
     from repro.core import buckets as buckets_lib
 
@@ -183,7 +189,7 @@ def update_engine_bench() -> List[Row]:
     for engine in ("reference", "bucketed"):
         opt = make_optimizer(
             "galore-sara-adam", params, rank=rank, lr=1e-3, alpha=0.25,
-            engine=engine,
+            engine=engine, track_update_norm=False,
         )
         state = opt.init(params)
         _, state, _ = opt.update(grads, state, params, refresh=True)
@@ -206,14 +212,27 @@ def update_engine_bench() -> List[Row]:
             n_ops = buckets_lib.reference_num_ops(plan, projected=False)
         hbm = buckets_lib.modeled_hbm_bytes(plan, engine)
         name = f"engine/update_{engine}_L{L}_d{d_model}_r{rank}"
-        rows.append((
-            name, us,
+        extra = {}
+        derived = (
             f"dispatched_ops={n_ops} modeled_hbm={hbm / 1e6:.1f}MB "
-            f"buckets={len(plan.buckets)}",
-        ))
+            f"buckets={len(plan.buckets)}"
+        )
+        if engine == "bucketed":
+            # what the same step cost when moments/projectors were stored
+            # per-leaf and stacked/unstacked every step (pre-ISSUE-2)
+            hbm_perleaf = buckets_lib.modeled_hbm_bytes(
+                plan, engine, state_layout="perleaf"
+            )
+            extra["modeled_hbm_bytes_perleaf_state"] = hbm_perleaf
+            derived += (
+                f" perleaf_state_hbm={hbm_perleaf / 1e6:.1f}MB "
+                f"state_layout_saving="
+                f"{100 * (1 - hbm / hbm_perleaf):.0f}%"
+            )
+        rows.append((name, us, derived))
         common.record(
             name, us, roofline_us=hbm / hw.HBM_BW * 1e6, engine=engine,
-            dispatched_ops=n_ops, modeled_hbm_bytes=hbm,
+            dispatched_ops=n_ops, modeled_hbm_bytes=hbm, **extra,
         )
     rows.append((
         "engine/update_speedup", 0.0,

@@ -2,7 +2,8 @@
 roofline.  Prints ``name,us_per_call,derived`` CSV and, when the kernel
 suite runs, dumps the machine-readable ``BENCH_kernels.json`` sidecar
 (op, wall_us, roofline_us, engine, ...) so the perf trajectory is diffable
-across PRs."""
+across PRs.  ``--check`` regression-gates the analytic fields against the
+previous sidecar before overwriting it."""
 from __future__ import annotations
 
 import argparse
@@ -10,6 +11,32 @@ import json
 import os
 import sys
 import traceback
+
+# Analytic (machine-independent) fields gated by --check; wall_us is
+# deliberately excluded -- CPU container timings are too noisy to gate.
+_CHECK_FIELDS = ("modeled_hbm_bytes", "dispatched_ops")
+_CHECK_TOLERANCE = 1.10  # fail on > 10% regression
+
+
+def check_regressions(previous: list, current: list) -> list:
+    """Compare analytic perf fields per op; return regression strings."""
+    prev_by_op = {r["op"]: r for r in previous}
+    problems = []
+    for rec in current:
+        old = prev_by_op.get(rec["op"])
+        if old is None:
+            continue
+        for field in _CHECK_FIELDS:
+            a, b = old.get(field), rec.get(field)
+            if a is None or b is None or a <= 0:
+                continue
+            if b > a * _CHECK_TOLERANCE:
+                problems.append(
+                    f"{rec['op']}: {field} regressed {a} -> {b} "
+                    f"(+{100 * (b / a - 1):.1f}% > "
+                    f"{100 * (_CHECK_TOLERANCE - 1):.0f}% budget)"
+                )
+    return problems
 
 
 def main() -> None:
@@ -23,6 +50,11 @@ def main() -> None:
         "--json-out", default="BENCH_kernels.json",
         help="where to write the machine-readable kernel records "
              "('' disables)",
+    )
+    parser.add_argument(
+        "--check", action="store_true",
+        help="fail (exit 1) if any op's modeled-HBM or dispatched-op "
+             "count regressed >10%% vs the existing --json-out records",
     )
     args = parser.parse_args()
 
@@ -53,17 +85,32 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append((name, repr(e)))
+    regressions = []
     if common.JSON_RECORDS and args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump(common.JSON_RECORDS, f, indent=2)
-        print(
-            f"# wrote {len(common.JSON_RECORDS)} records to "
-            f"{os.path.abspath(args.json_out)}",
-            file=sys.stderr,
-        )
+        if args.check and os.path.exists(args.json_out):
+            with open(args.json_out) as f:
+                previous = json.load(f)
+            regressions = check_regressions(previous, common.JSON_RECORDS)
+        if regressions:
+            # keep the old sidecar as the baseline of record
+            print(
+                f"# NOT updating {args.json_out}: regressions detected",
+                file=sys.stderr,
+            )
+        else:
+            with open(args.json_out, "w") as f:
+                json.dump(common.JSON_RECORDS, f, indent=2)
+            print(
+                f"# wrote {len(common.JSON_RECORDS)} records to "
+                f"{os.path.abspath(args.json_out)}",
+                file=sys.stderr,
+            )
+    for msg in regressions:
+        print(f"# PERF REGRESSION: {msg}", file=sys.stderr)
     if failed:
         for name, err in failed:
             print(f"{name},nan,FAILED {err}")
+    if failed or regressions:
         sys.exit(1)
 
 

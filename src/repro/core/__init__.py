@@ -4,9 +4,11 @@ from repro.core.lowrank import (
     LowRankOptimizer,
     LowRankOptState,
     apply_updates,
+    canonical_opt_state,
     make_lowrank_optimizer,
     optimizer_memory_report,
     state_memory_bytes,
+    storage_opt_state,
 )
 from repro.core.metrics import (
     OverlapTracker,
@@ -23,6 +25,8 @@ __all__ = [
     "LowRankOptimizer",
     "LowRankOptState",
     "apply_updates",
+    "canonical_opt_state",
+    "storage_opt_state",
     "make_lowrank_optimizer",
     "optimizer_memory_report",
     "state_memory_bytes",

@@ -1,4 +1,5 @@
-"""The bucketed fused update engine (DESIGN.md §2.3).
+"""The bucketed fused update engine (DESIGN.md §2.3) and its state layout
+(DESIGN.md §2.5).
 
 ``engine="reference"`` (lowrank.py's per-leaf loop) runs a separate
 project -> inner-update -> back-project einsum chain per low-rank leaf and
@@ -10,26 +11,35 @@ every full-space direction in HBM.  This module is the
     canonical (d, n, rank, dtype) -- the side='right' leaves enter
     transposed, so e.g. a (96, 32) down-projection and a (32, 96)
     up-projection land in the SAME bucket;
-  * per step, each bucket's leaves are stacked into (B, d, n) operands
-    (stacked scan/expert leaves reshape in for free -- a (L, d, n) leaf is
-    L batch slices, no copy on its own) and ONE batched fused kernel per
-    bucket computes
+  * ``build_state_layout`` turns the plan into a **storage** decision:
+    when the inner optimizer is fused-eligible, moments and projectors
+    *live* in the per-bucket stacked (B, r, n) / (B, d, r) layout as
+    ``BucketState`` buffers (``LowRankOptState.buckets``) instead of
+    per-leaf ``LeafState`` arrays -- the hot step never stacks/unstacks
+    optimizer state, only params and grads (which the model owns);
+  * per step, each bucket's param/grad leaves are stacked into (B, d, n)
+    operands (stacked scan/expert leaves reshape in for free) and ONE
+    batched fused kernel per bucket computes
 
         R  = P^T G                      (skipped when grads arrive projected)
         W' = (1 - lr*wd) W - lr*alpha * P @ N(inner(R))
 
-    directly -- the full-space direction never touches HBM and params are
-    read/written exactly once (kernels/lowrank_update).  On non-TPU
-    backends the same bucketed shape runs as batched einsums (ops.py), so
-    the dispatch-count win and the numerics are identical everywhere.
+    directly -- the full-space direction never touches HBM, params are
+    read/written exactly once (kernels/lowrank_update), and the moment
+    buffers are consumed/produced in their storage layout (donation
+    reuses them in place).  On non-TPU backends the same bucketed shape
+    runs as batched einsums (ops.py), so the dispatch-count win and the
+    numerics are identical everywhere.
 
-The engine covers the hot path (refresh=False) for the fused-eligible inner
-optimizers (adam, msgd) without Fira; everything else stays on the
-reference path -- correctness first, selected per leaf, per step.
+Checkpoints never see the stacked layout: ``bucketed_to_leaf_states`` /
+``leaf_states_to_bucketed`` convert between the storage layout and the
+canonical per-leaf layout (exact reshapes/transposes/concats, no
+arithmetic), so a run checkpointed under one engine resumes bit-for-bit
+under the other (train/checkpoint.py applies the converters on save/load).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, NamedTuple, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +105,166 @@ def build_bucket_plan(flat_specs: Sequence, flat_params: Sequence) -> BucketPlan
 
 
 # ---------------------------------------------------------------------------
+# storage layout: bucket-native optimizer state
+# ---------------------------------------------------------------------------
+
+
+class BucketState(NamedTuple):
+    """One bucket's optimizer state in storage (stacked) layout.
+
+    ``projector`` is (B, d, r) in canonical orientation (projectors are
+    (d, r) for BOTH sides, never transposed); moments are (B, r, n) f32 in
+    the canonical 'left' orientation (side='right' slices enter
+    transposed, exactly like the param/grad operands).  ``v`` is None for
+    inner optimizers without a second moment (msgd).
+    """
+
+    projector: jax.Array
+    m: jax.Array
+    v: Optional[jax.Array]
+
+
+class LeafStateTemplate(NamedTuple):
+    """Per-leaf canonical shapes/dtypes (static) -- what the per-leaf
+    layout stores and what checkpoints serialize."""
+
+    projector: jax.ShapeDtypeStruct
+    m: jax.ShapeDtypeStruct
+    v: Optional[jax.ShapeDtypeStruct]
+
+
+class StateLayout(NamedTuple):
+    """Build-time decision that the optimizer state is bucket-native,
+    plus everything needed to convert in BOTH directions (save/load)."""
+
+    plan: BucketPlan
+    inner_name: str  # 'adam' | 'msgd'
+    has_v: bool
+    templates: Dict[int, LeafStateTemplate]  # keyed by leaf_idx (static)
+
+
+def build_state_layout(
+    plan: BucketPlan,
+    flat_specs: Sequence,
+    flat_params: Sequence,
+    *,
+    inner_name: str,
+    projector_dtype,
+) -> StateLayout:
+    """Canonical per-leaf templates for every bucketed leaf."""
+    has_v = inner_lib.fused_has_second_moment(inner_name)
+    templates: Dict[int, LeafStateTemplate] = {}
+    for bucket in plan.buckets:
+        for e in bucket.entries:
+            p = flat_params[e.leaf_idx]
+            lead = p.shape[:-2]
+            proj = jax.ShapeDtypeStruct(
+                lead + (bucket.d, bucket.rank), jnp.dtype(projector_dtype)
+            )
+            if e.side == "left":
+                mshape = lead + (bucket.rank, p.shape[-1])
+            else:
+                mshape = lead + (p.shape[-2], bucket.rank)
+            m = jax.ShapeDtypeStruct(mshape, jnp.float32)
+            v = m if has_v else None
+            templates[e.leaf_idx] = LeafStateTemplate(proj, m, v)
+    return StateLayout(
+        plan=plan, inner_name=inner_name, has_v=has_v, templates=templates
+    )
+
+
+def init_bucket_states(layout: StateLayout) -> Tuple[BucketState, ...]:
+    """Stacked equivalent of the per-leaf init: eye projectors (the first
+    refresh installs the real ones), zero moments."""
+    out = []
+    for bucket in layout.plan.buckets:
+        B, d, n, r = bucket.batch, bucket.d, bucket.n, bucket.rank
+        pdtype = layout.templates[bucket.entries[0].leaf_idx].projector.dtype
+        eye = jnp.broadcast_to(jnp.eye(d, r, dtype=pdtype), (B, d, r))
+        m = jnp.zeros((B, r, n), jnp.float32)
+        v = jnp.zeros((B, r, n), jnp.float32) if layout.has_v else None
+        out.append(BucketState(projector=eye, m=m, v=v))
+    return tuple(out)
+
+
+def leaf_states_to_bucketed(
+    layout: StateLayout, flat_states: Sequence
+) -> Tuple[BucketState, ...]:
+    """Per-leaf canonical -> storage: stack projectors and moments.
+
+    ``flat_states`` holds objects with ``.projector`` and ``.inner`` (with
+    ``.m`` / optionally ``.v``) at the bucketed indices; other entries are
+    ignored.  Pure layout: reshape/transpose/concat only.
+    """
+    out = []
+    for bucket in layout.plan.buckets:
+        proj = _gather_proj(
+            bucket, [getattr(st, "projector", None) for st in flat_states]
+        )
+        ms: Dict[int, jax.Array] = {}
+        vs: Dict[int, jax.Array] = {}
+        for e in bucket.entries:
+            m_leaf, v_leaf = inner_lib.fused_moments(
+                layout.inner_name, flat_states[e.leaf_idx].inner
+            )
+            ms[e.leaf_idx], vs[e.leaf_idx] = m_leaf, v_leaf
+        m = _gather(bucket, ms)
+        v = _gather(bucket, vs) if layout.has_v else None
+        out.append(BucketState(projector=proj, m=m, v=v))
+    return tuple(out)
+
+
+def bucketed_to_leaf_states(
+    layout: StateLayout, bucket_states: Sequence[BucketState]
+) -> Dict[int, Tuple[jax.Array, Any]]:
+    """Storage -> per-leaf canonical: {leaf_idx: (projector, inner_state)}.
+
+    Inverse of ``leaf_states_to_bucketed`` (exact; no arithmetic).
+    """
+    out: Dict[int, Tuple[jax.Array, Any]] = {}
+    for bucket, bst in zip(layout.plan.buckets, bucket_states):
+        projs = _scatter_proj(
+            bucket, bst.projector,
+            {e.leaf_idx: layout.templates[e.leaf_idx].projector
+             for e in bucket.entries},
+        )
+        ms = _scatter(
+            bucket, bst.m,
+            {e.leaf_idx: layout.templates[e.leaf_idx].m
+             for e in bucket.entries},
+        )
+        vs = None
+        if layout.has_v:
+            vs = _scatter(
+                bucket, bst.v,
+                {e.leaf_idx: layout.templates[e.leaf_idx].v
+                 for e in bucket.entries},
+            )
+        for e in bucket.entries:
+            i = e.leaf_idx
+            inner_state = inner_lib.fused_state(
+                layout.inner_name, ms[i], vs[i] if vs is not None else None
+            )
+            out[i] = (projs[i], inner_state)
+    return out
+
+
+def leaf_projectors(
+    layout: StateLayout, bucket_states: Sequence[BucketState]
+) -> Dict[int, jax.Array]:
+    """Per-leaf projector views sliced out of the stacks (no transpose --
+    projectors are canonical (d, r) for both sides)."""
+    out: Dict[int, jax.Array] = {}
+    for bucket, bst in zip(layout.plan.buckets, bucket_states):
+        out.update(_scatter_proj(
+            bucket, bst.projector,
+            {e.leaf_idx: layout.templates[e.leaf_idx].projector
+             for e in bucket.entries},
+        ))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # stack / unstack
 # ---------------------------------------------------------------------------
 
@@ -107,7 +277,8 @@ def _orient_in(x: jax.Array, side: str) -> jax.Array:
     return x2
 
 
-def _gather(bucket: Bucket, leaves: Sequence[jax.Array]) -> jax.Array:
+def _gather(bucket: Bucket, leaves) -> jax.Array:
+    """``leaves`` is anything indexable by leaf_idx (list or dict)."""
     parts = [_orient_in(leaves[e.leaf_idx], e.side) for e in bucket.entries]
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
@@ -122,10 +293,11 @@ def _gather_proj(bucket: Bucket, projs: Sequence[jax.Array]) -> jax.Array:
 
 
 def _scatter(
-    bucket: Bucket, stacked: jax.Array, likes: Sequence[jax.Array]
+    bucket: Bucket, stacked: jax.Array, likes
 ) -> Dict[int, jax.Array]:
     """Split a (B, ...) result back into per-leaf arrays shaped like
-    ``likes[leaf_idx]`` (orientation and dtype restored)."""
+    ``likes[leaf_idx]`` (orientation and dtype restored; ``likes`` is any
+    leaf_idx-indexable of shape/dtype carriers, arrays or structs)."""
     out: Dict[int, jax.Array] = {}
     off = 0
     for e in bucket.entries:
@@ -138,15 +310,29 @@ def _scatter(
     return out
 
 
+def _scatter_proj(
+    bucket: Bucket, stacked: jax.Array, likes: Dict[int, Any]
+) -> Dict[int, jax.Array]:
+    """Split a (B, d, r) projector stack per leaf -- never transposed."""
+    out: Dict[int, jax.Array] = {}
+    off = 0
+    for e in bucket.entries:
+        part = stacked[off : off + e.batch]
+        off += e.batch
+        like = likes[e.leaf_idx]
+        out[e.leaf_idx] = part.reshape(like.shape).astype(like.dtype)
+    return out
+
+
 # ---------------------------------------------------------------------------
-# the fused hot-path update
+# the fused hot-path update (bucket-native state)
 # ---------------------------------------------------------------------------
 
 
 def bucketed_update(
     plan: BucketPlan,
     cfg,  # OptimizerConfig
-    flat_states: Sequence,  # LeafState per leaf
+    bucket_states: Sequence[BucketState],
     flat_grads: Sequence[jax.Array],
     flat_params: Sequence[jax.Array],
     step: jax.Array,
@@ -154,57 +340,153 @@ def bucketed_update(
     *,
     projected: bool,
     apply: bool,
-) -> Dict[int, Tuple[jax.Array, Any]]:
-    """Run every bucket; returns {leaf_idx: (new_param_or_update, LeafState)}.
+    track_norm: bool = True,
+) -> Tuple[Dict[int, jax.Array], Tuple[BucketState, ...], List[jax.Array]]:
+    """Run every bucket against its *storage-layout* state.
+
+    Returns ``({leaf_idx: new_param_or_update}, new_bucket_states,
+    per_bucket_norm_sq)``.  Moments and projectors are consumed/produced
+    in place in the stacked layout -- the only per-step stack/unstack is
+    of params and grads (which the model owns per-leaf).
 
     ``apply=True`` returns the new parameter leaf (the kernel's W' output);
-    ``apply=False`` returns the additive update W' - W (one extra
-    subtraction -- prefer apply=True, that is the engine's point).
+    ``apply=False`` returns the additive update W' - W.  ``track_norm``
+    gates the ``aux.update_norm`` W' - W read pass
+    (OptimizerConfig.track_update_norm).
     """
     lr_alpha = lr * cfg.alpha
     lr_wd = lr * cfg.weight_decay if cfg.weight_decay else 0.0
-    results: Dict[int, Tuple[jax.Array, Any]] = {}
-    for bucket in plan.buckets:
+    out_leaves: Dict[int, jax.Array] = {}
+    new_states: List[BucketState] = []
+    norm_sq: List[jax.Array] = []
+    for bucket, bst in zip(plan.buckets, bucket_states):
         w = _gather(bucket, flat_params)
-        p = _gather_proj(bucket, [st.projector for st in flat_states])
+        p = bst.projector
         if projected:
             r_g = _gather(bucket, flat_grads)
         else:
             g = _gather(bucket, flat_grads)
             r_g = update_ops.bucketed_project(g, p)
-        m = _gather(bucket, [st.inner.m for st in flat_states])
         if cfg.inner == "msgd":
             w_new, m_new = update_ops.bucketed_msgd_update(
-                w, p, r_g, m, lr_alpha, lr_wd, b1=cfg.b1
+                w, p, r_g, bst.m, lr_alpha, lr_wd, b1=cfg.b1
             )
             v_new = None
         else:
-            v = _gather(bucket, [st.inner.v for st in flat_states])
             w_new, m_new, v_new = update_ops.bucketed_adam_update(
-                w, p, r_g, m, v, step, lr_alpha, lr_wd,
+                w, p, r_g, bst.m, bst.v, step, lr_alpha, lr_wd,
                 b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
             )
         out = w_new if apply else w_new - w
-        out_leaves = _scatter(bucket, out, flat_params)
-        m_leaves = _scatter(
-            bucket, m_new, [st.inner.m for st in flat_states]
-        )
-        if v_new is not None:
-            v_leaves = _scatter(
-                bucket, v_new, [st.inner.v for st in flat_states]
-            )
+        if track_norm:
+            delta = (w_new - w) if apply else out
+            norm_sq.append(jnp.sum(jnp.square(delta.astype(jnp.float32))))
+        out_leaves.update(_scatter(bucket, out, flat_params))
+        new_states.append(BucketState(projector=p, m=m_new, v=v_new))
+    return out_leaves, tuple(new_states), norm_sq
+
+
+# ---------------------------------------------------------------------------
+# the refresh path on stacked operands
+# ---------------------------------------------------------------------------
+
+
+def bucketed_refresh(
+    layout: StateLayout,
+    bucket_states: Sequence[BucketState],
+    flat_specs: Sequence,
+    flat_grads: Sequence[jax.Array],
+    subkey: jax.Array,
+    refresh_fn,  # (g, key, old_p, spec) -> new per-leaf projector
+    *,
+    group: int,
+    momentum_carry: str,
+) -> Tuple[Tuple[BucketState, ...], List[jax.Array]]:
+    """Refresh the projectors of one static refresh ``group`` directly in
+    the bucket stacks.
+
+    Per bucket: slice each refreshed entry's old projector out of the
+    stack, run the (per-leaf, SVD-bearing) ``refresh_fn``, and concatenate
+    the new slices back -- a static scatter into the (B, d, r) stack.  The
+    ``momentum_carry="reproject"`` carry (M' = P_new^T P_old M) then runs
+    as ONE batched r x r einsum over the whole stack instead of a per-leaf
+    loop; non-refreshed slices keep their exact old moments (static
+    selection, not a where over approximate C ~= I).
+
+    Returns (new_bucket_states, per-leaf overlap diagnostics).  Keys fold
+    the *global* leaf index, so trajectories are bit-identical with the
+    reference engine's per-leaf refresh.
+    """
+    new_states: List[BucketState] = []
+    overlaps: List[jax.Array] = []
+    for bucket, bst in zip(layout.plan.buckets, bucket_states):
+        parts: List[jax.Array] = []
+        refreshed: List[bool] = []
+        off = 0
         for e in bucket.entries:
-            i = e.leaf_idx
-            st = flat_states[i]
-            if v_new is None:
-                new_inner = inner_lib.MSGDState(m=m_leaves[i])
+            old_slice = bst.projector[off : off + e.batch]
+            off += e.batch
+            spec = flat_specs[e.leaf_idx]
+            if spec.group == group:
+                tmpl = layout.templates[e.leaf_idx].projector
+                old_p = old_slice.reshape(tmpl.shape)
+                lkey = jax.random.fold_in(subkey, e.leaf_idx)
+                new_p = refresh_fn(
+                    flat_grads[e.leaf_idx], lkey, old_p, spec
+                )
+                # overlap diagnostic (GARD18): ||P_new^T P_old||_F^2 / r,
+                # same per-leaf reduction as the reference path.
+                c = jnp.einsum("...dn,...do->...no", new_p, old_p)
+                overlaps.append(jnp.mean(
+                    jnp.sum(c.astype(jnp.float32) ** 2, axis=(-2, -1))
+                    / spec.rank
+                ))
+                parts.append(
+                    new_p.reshape((-1,) + new_p.shape[-2:])
+                    .astype(bst.projector.dtype)
+                )
+                refreshed.append(True)
             else:
-                new_inner = inner_lib.AdamState(m=m_leaves[i], v=v_leaves[i])
-            results[i] = (
-                out_leaves[i],
-                st._replace(inner=new_inner),
-            )
-    return results
+                parts.append(old_slice)
+                refreshed.append(False)
+        new_proj = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+        m, v = bst.m, bst.v
+        if any(refreshed):
+            if momentum_carry == "reset":
+                # reference semantics: the WHOLE inner state resets (m and
+                # second moment) for refreshed leaves.
+                m = _select_slices(bucket, refreshed, jnp.zeros_like(m), m)
+                if v is not None:
+                    v = _select_slices(
+                        bucket, refreshed, jnp.zeros_like(v), v
+                    )
+            elif momentum_carry == "reproject":
+                # C = P_new^T P_old for every slice, then M' = C M: two
+                # batched einsums per bucket.  In canonical orientation the
+                # single left-side formula covers both sides exactly
+                # (side='right' moments are stored transposed).
+                c = jnp.einsum("bdn,bdo->bno", new_proj, bst.projector)
+                # m stays f32 (the einsum promotes c), matching the
+                # reference path's precision exactly.
+                m2 = jnp.einsum("bno,bok->bnk", c, m).astype(m.dtype)
+                m = _select_slices(bucket, refreshed, m2, m)
+        new_states.append(BucketState(projector=new_proj, m=m, v=v))
+    return tuple(new_states), overlaps
+
+
+def _select_slices(
+    bucket: Bucket, take_new: Sequence[bool], new: jax.Array, old: jax.Array
+) -> jax.Array:
+    """Static per-entry selection between two stacked buffers."""
+    if all(take_new):
+        return new
+    parts = []
+    off = 0
+    for e, t in zip(bucket.entries, take_new):
+        parts.append((new if t else old)[off : off + e.batch])
+        off += e.batch
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -213,7 +495,12 @@ def bucketed_update(
 
 
 def modeled_hbm_bytes(
-    plan: BucketPlan, engine: str, itemsize: int = 4, projected: bool = False
+    plan: BucketPlan,
+    engine: str,
+    itemsize: int = 4,
+    projected: bool = False,
+    state_layout: str = "bucketed",
+    track_update_norm: bool = False,
 ) -> int:
     """Modeled optimizer-path HBM traffic per hot step for the bucketed
     leaves (moment dtype f32).
@@ -224,7 +511,10 @@ def modeled_hbm_bytes(
     write).
     bucketed: G read once, R written+read once (inter-kernel), P read
     twice, moments r/w once, params read+written once.  No N, no second
-    pass.
+    pass.  ``state_layout="perleaf"`` adds the per-step moment
+    stack/unstack (read per-leaf + write stacked, and back) and the
+    projector stack that bucket-native storage deletes;
+    ``track_update_norm`` adds the W' - W re-read for ``aux.update_norm``.
     """
     total = 0
     for bk in plan.buckets:
@@ -236,7 +526,15 @@ def modeled_hbm_bytes(
         if engine == "bucketed":
             proj = 0 if projected else (wn + pr + rn)  # read G,P; write R
             upd = wn + pr + rn + moments + wn  # W r, P, R, moments, W' w
-            total += proj + upd
+            extra = 0
+            if state_layout == "perleaf":
+                # stack: read per-leaf + write stacked; unstack: the
+                # reverse -- 2 extra r/w passes per moment buffer, plus
+                # the projector stack (read + write, consumed stacked).
+                extra += 2 * moments + 2 * pr
+            if track_update_norm:
+                extra += 2 * wn  # re-read W' and W for ||W' - W||
+            total += proj + upd + extra
         else:
             proj = 0 if projected else (wn + pr + rn)
             inner = rn + moments  # R read, moments r/w

@@ -13,7 +13,7 @@ applies sign, learning rate, and the GaLore ``alpha`` scale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -279,6 +279,44 @@ def adam8bit(
         return direction, Adam8bitState(m_codes=mc, m_scale=ms, v_codes=vc, v_scale=vs)
 
     return InnerOptimizer("adam8bit", init, update, state_bytes_per_param=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused (bucket-native) state plumbing
+# ---------------------------------------------------------------------------
+
+# The bucketed engine stores fused-eligible moments in per-bucket stacked
+# buffers (core/buckets.BucketState) rather than per-leaf inner states;
+# these helpers are the canonical <-> stacked boundary: which plain dense
+# moment buffers each fused inner carries, and how to rebuild its per-leaf
+# state NamedTuple from them (checkpoint serialization, engine switching).
+
+_FUSED_SECOND_MOMENT = {"adam": True, "msgd": False}
+
+
+def fused_has_second_moment(name: str) -> bool:
+    if name not in _FUSED_SECOND_MOMENT:
+        raise ValueError(f"{name!r} has no fused (bucket-native) state layout")
+    return _FUSED_SECOND_MOMENT[name]
+
+
+def fused_state(name: str, m: jax.Array, v: Optional[jax.Array] = None):
+    """Per-leaf inner state from canonical moment buffers."""
+    if name == "adam":
+        assert v is not None
+        return AdamState(m=m, v=v)
+    if name == "msgd":
+        return MSGDState(m=m)
+    raise ValueError(f"{name!r} has no fused (bucket-native) state layout")
+
+
+def fused_moments(name: str, state) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Canonical moment buffers (m, v-or-None) from a per-leaf inner state."""
+    if name == "adam":
+        return state.m, state.v
+    if name == "msgd":
+        return state.m, None
+    raise ValueError(f"{name!r} has no fused (bucket-native) state layout")
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,18 @@ DESIGN.md §2):
     ``update(..., apply=True)`` returns new params directly; that is the
     mode ``train/step.py`` uses so param buffers are read/written once and
     can be donated.
+  * With ``engine="bucketed"`` and a fused-eligible inner optimizer, the
+    bucketed layout is also the **storage** layout (DESIGN.md §2.5):
+    moments and projectors live in per-bucket stacked ``(B, r, n)`` /
+    ``(B, d, r)`` buffers (``LowRankOptState.buckets``) and the per-leaf
+    ``LeafState`` entries of covered leaves are empty placeholders.  The
+    hot step consumes/produces optimizer state with NO per-step
+    stack/unstack; refresh scatters new projectors into the stacks and
+    runs the ``momentum_carry="reproject"`` carry as one batched r x r
+    einsum per bucket.  Checkpoints always serialize the canonical
+    per-leaf layout: ``canonical_opt_state`` / ``storage_opt_state``
+    convert losslessly in both directions, so resume and mid-run engine
+    switching stay bit-for-bit.
 """
 from __future__ import annotations
 
@@ -86,10 +98,14 @@ class OptimizerConfig:
     momentum_carry: str = "keep"  # keep | reset | reproject
     refresh_groups: int = 1
     # Hot-path update engine: "reference" (per-leaf einsum loop) or
-    # "bucketed" (stacked fused kernels; falls back to reference per step /
-    # per leaf whenever it doesn't cover the case -- refresh steps, Fira,
-    # non-fused inner optimizers).
+    # "bucketed" (stacked fused kernels with bucket-native state storage
+    # when the inner optimizer is fused-eligible; Fira and non-fused
+    # inner optimizers fall back to the reference loop with per-leaf
+    # state, so the flag is always safe to enable).
     engine: str = "reference"
+    # aux.update_norm costs an extra W' - W read pass in apply mode; gate
+    # it off for pure-throughput runs (benchmarks run with False).
+    track_update_norm: bool = True
     min_dim: int = 16  # leaves with min(m,n) < this stay full-rank
     exclude: Tuple[str, ...] = DEFAULT_EXCLUDE
     seed: int = 0
@@ -149,6 +165,10 @@ class LowRankOptState(NamedTuple):
     step: jax.Array  # int32 scalar, number of updates applied so far
     key: jax.Array  # PRNG key for sampling-based refreshes
     leaves: PyTree  # pytree of LeafState, same treedef as params
+    # Storage-layout bucket stacks (tuple of buckets_lib.BucketState) when
+    # the optimizer is bucket-native; () for the canonical per-leaf layout
+    # (reference engine, non-fused inners, Fira, and every checkpoint).
+    buckets: Any = ()
 
 
 class AuxInfo(NamedTuple):
@@ -211,13 +231,21 @@ def _projector_shape(shape: Tuple[int, ...], side: str, rank: int):
 class LowRankOptimizer(NamedTuple):
     """(init, update, specs).  update's ``refresh``/``group``/``apply`` are
     static.  ``bucket_plan`` is the static bucketing of low-rank leaves the
-    ``engine="bucketed"`` hot path dispatches over (None for full-rank)."""
+    ``engine="bucketed"`` hot path dispatches over (None for full-rank);
+    ``state_layout`` is non-None iff the optimizer state is stored
+    bucket-native (stacked moments/projectors in ``state.buckets``)."""
 
     init: Callable[[PyTree], LowRankOptState]
     update: Callable[..., Tuple[PyTree, LowRankOptState, AuxInfo]]
     specs: PyTree
     config: OptimizerConfig
     bucket_plan: Optional[buckets_lib.BucketPlan] = None
+    state_layout: Optional[buckets_lib.StateLayout] = None
+
+
+def _placeholder_leaf() -> LeafState:
+    """Empty per-leaf slot for a leaf whose state lives in bucket stacks."""
+    return LeafState(projector=jnp.zeros((), jnp.float32), inner=None)
 
 
 def _global_norm(tree: PyTree) -> jax.Array:
@@ -248,14 +276,30 @@ def make_lowrank_optimizer(
         specs, is_leaf=is_spec
     )
     bucket_plan: Optional[buckets_lib.BucketPlan] = None
+    state_layout: Optional[buckets_lib.StateLayout] = None
     if cfg.engine == "bucketed":
         bucket_plan = buckets_lib.build_bucket_plan(
             flat_specs_static, spec_treedef.flatten_up_to(params_like)
         )
+        # Bucket-native storage: when the fused engine covers EVERY hot
+        # step of EVERY low-rank leaf (fused inner, no Fira), moments and
+        # projectors live stacked.  Otherwise (adafactor / adam-mini /
+        # 8-bit / Fira fall through to the reference loop) state stays
+        # per-leaf and the plan is used for accounting only.
+        if bucket_plan.buckets and inner.fused_eligible and not cfg.fira:
+            state_layout = buckets_lib.build_state_layout(
+                bucket_plan, flat_specs_static,
+                spec_treedef.flatten_up_to(params_like),
+                inner_name=cfg.inner, projector_dtype=cfg.projector_dtype,
+            )
 
     def init(params: PyTree) -> LowRankOptState:
         def leaf_init(spec: LeafSpec, p: jax.Array) -> LeafState:
             if spec.lowrank:
+                if state_layout is not None:
+                    # bucket-native: this leaf's projector and moments
+                    # live in the bucket stacks; keep an empty slot.
+                    return _placeholder_leaf()
                 pshape = _projector_shape(p.shape, spec.side, spec.rank)
                 # Deterministic init: dominant-like placeholder (eye) --
                 # the first refresh (step 0) installs the real projector
@@ -278,10 +322,15 @@ def make_lowrank_optimizer(
             leaf_init, specs, params,
             is_leaf=lambda x: isinstance(x, LeafSpec),
         )
+        bucket_states = (
+            buckets_lib.init_bucket_states(state_layout)
+            if state_layout is not None else ()
+        )
         return LowRankOptState(
             step=jnp.zeros((), jnp.int32),
             key=jax.random.PRNGKey(cfg.seed),
             leaves=leaves,
+            buckets=bucket_states,
         )
 
     def _lr_at(step: jax.Array) -> jax.Array:
@@ -372,24 +421,47 @@ def make_lowrank_optimizer(
         flat_grads = spec_treedef.flatten_up_to(grads)
         flat_params = spec_treedef.flatten_up_to(params)
 
-        # Fused bucketed hot path: one batched kernel chain per bucket for
-        # the covered leaves; everything else falls through to the
-        # reference loop below.  Refresh steps always run reference (the
-        # SVD dominates them and the projector changes under the update).
+        overlaps = []
+
+        # Bucket-native path: the stacks in ``state.buckets`` ARE the
+        # moments/projectors, so the fused kernels consume and produce
+        # them directly -- no per-step gather/scatter of optimizer state.
+        # Refresh steps scatter new projectors into the stacks (and carry
+        # momentum with one batched r x r einsum per bucket), then run the
+        # same fused update with the fresh projectors, exactly like the
+        # reference loop's refresh-then-update order.
         fused: dict = {}
-        if (
-            bucket_plan is not None
-            and bucket_plan.buckets
-            and not refresh
-            and not cfg.fira
-            and inner.fused_eligible
-        ):
-            fused = buckets_lib.bucketed_update(
-                bucket_plan, cfg, flat_states, flat_grads, flat_params,
-                step, lr, projected=projected, apply=apply,
+        new_bucket_states = state.buckets
+        bucket_norm_sq: list = []
+        if state_layout is not None:
+            if not state.buckets:
+                raise ValueError(
+                    "bucket-native optimizer got a canonical per-leaf "
+                    "state; convert with storage_opt_state(optimizer, state)"
+                )
+            if refresh:
+                def _refresh_fn(g, lkey, old_p, spec):
+                    return proj_lib.refresh_projector(
+                        g, lkey, old_p, pcfg, side=spec.side, rank=spec.rank
+                    )
+
+                new_bucket_states, bucket_overlaps = (
+                    buckets_lib.bucketed_refresh(
+                        state_layout, state.buckets, flat_specs,
+                        flat_grads, subkey, _refresh_fn,
+                        group=group % max(cfg.refresh_groups, 1),
+                        momentum_carry=cfg.momentum_carry,
+                    )
+                )
+                overlaps.extend(bucket_overlaps)
+            fused, new_bucket_states, bucket_norm_sq = (
+                buckets_lib.bucketed_update(
+                    bucket_plan, cfg, new_bucket_states, flat_grads,
+                    flat_params, step, lr, projected=projected, apply=apply,
+                    track_norm=cfg.track_update_norm,
+                )
             )
 
-        overlaps = []
         flat_out = []  # updates, or new params for fused leaves when apply
         flat_norm_sq = []  # per-leaf squared update norms (aux)
         flat_new_states = []
@@ -401,15 +473,10 @@ def make_lowrank_optimizer(
             zip(flat_specs, flat_states, flat_grads, flat_params)
         ):
             if i in fused:
-                out, new_st = fused[i]
-                if apply:
-                    flat_norm_sq.append(
-                        _norm_sq(out.astype(jnp.float32) - p.astype(jnp.float32))
-                    )
-                else:
-                    flat_norm_sq.append(_norm_sq(out))
-                flat_out.append(out)
-                flat_new_states.append(new_st)
+                # norm already accounted stacked (bucket_norm_sq); the
+                # per-leaf slot is a placeholder and stays as-is.
+                flat_out.append(fused[i])
+                flat_new_states.append(st)
                 continue
 
             if not spec.lowrank:
@@ -418,7 +485,8 @@ def make_lowrank_optimizer(
                 if cfg.weight_decay:
                     upd = upd - lr * cfg.weight_decay * p.astype(jnp.float32)
                 upd = upd.astype(p.dtype)
-                flat_norm_sq.append(_norm_sq(upd))
+                if cfg.track_update_norm:
+                    flat_norm_sq.append(_norm_sq(upd))
                 flat_out.append((p + upd) if apply else upd)
                 flat_new_states.append(
                     LeafState(projector=st.projector, inner=inner_state)
@@ -450,7 +518,8 @@ def make_lowrank_optimizer(
             if cfg.weight_decay:
                 upd = upd - lr * cfg.weight_decay * p.astype(jnp.float32)
             upd = upd.astype(p.dtype)
-            flat_norm_sq.append(_norm_sq(upd))
+            if cfg.track_update_norm:
+                flat_norm_sq.append(_norm_sq(upd))
             flat_out.append((p + upd) if apply else upd)
             flat_new_states.append(
                 LeafState(projector=st.projector, inner=inner_state)
@@ -459,11 +528,16 @@ def make_lowrank_optimizer(
         out_tree = jax.tree_util.tree_unflatten(spec_treedef, flat_out)
         new_leaves = jax.tree_util.tree_unflatten(spec_treedef, flat_new_states)
 
-        unorm = jnp.sqrt(sum(flat_norm_sq))
+        if cfg.track_update_norm:
+            unorm = jnp.sqrt(sum(flat_norm_sq) + sum(bucket_norm_sq))
+        else:
+            unorm = jnp.zeros(())
         mean_overlap = (
             jnp.mean(jnp.stack(overlaps)) if overlaps else jnp.zeros(())
         )
-        new_state = LowRankOptState(step=step, key=key, leaves=new_leaves)
+        new_state = LowRankOptState(
+            step=step, key=key, leaves=new_leaves, buckets=new_bucket_states
+        )
         aux = AuxInfo(
             grad_norm=gnorm, update_norm=unorm, mean_refresh_overlap=mean_overlap
         )
@@ -471,7 +545,7 @@ def make_lowrank_optimizer(
 
     return LowRankOptimizer(
         init=init, update=update, specs=specs, config=cfg,
-        bucket_plan=bucket_plan,
+        bucket_plan=bucket_plan, state_layout=state_layout,
     )
 
 
@@ -496,13 +570,82 @@ def project_grads(
     )
     flat_states = treedef.flatten_up_to(state.leaves)
     flat_grads = treedef.flatten_up_to(grads)
+    stacked_projs = {}
+    if optimizer.state_layout is not None and state.buckets:
+        # bucket-native state: per-leaf projector views sliced from stacks
+        stacked_projs = buckets_lib.leaf_projectors(
+            optimizer.state_layout, state.buckets
+        )
     out = []
-    for spec, st, g in zip(flat_specs, flat_states, flat_grads):
+    for i, (spec, st, g) in enumerate(zip(flat_specs, flat_states, flat_grads)):
         if spec.lowrank:
-            out.append(proj_lib.project(g, st.projector, spec.side))
+            proj = stacked_projs.get(i, st.projector)
+            out.append(proj_lib.project(g, proj, spec.side))
         else:
             out.append(g)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# state-layout conversion (DESIGN.md §2.5): storage <-> canonical per-leaf
+# ---------------------------------------------------------------------------
+
+
+def canonical_opt_state(
+    optimizer: "LowRankOptimizer", state: LowRankOptState
+) -> LowRankOptState:
+    """Storage layout -> canonical per-leaf layout (the checkpoint format).
+
+    Pure re-layout (reshape/transpose/split, no arithmetic): the returned
+    state has the exact pytree structure a ``engine="reference"``
+    optimizer would produce, so checkpoints written from a bucket-native
+    run load under any engine, bit-for-bit.  No-op when the state is
+    already canonical.
+    """
+    layout = optimizer.state_layout
+    if layout is None or not state.buckets:
+        return state
+    per_leaf = buckets_lib.bucketed_to_leaf_states(layout, state.buckets)
+    is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
+    _, treedef = jax.tree_util.tree_flatten(optimizer.specs, is_leaf=is_spec)
+    flat_states = treedef.flatten_up_to(state.leaves)
+    out = []
+    for i, st in enumerate(flat_states):
+        if i in per_leaf:
+            proj, inner_state = per_leaf[i]
+            out.append(LeafState(projector=proj, inner=inner_state))
+        else:
+            out.append(st)
+    leaves = jax.tree_util.tree_unflatten(treedef, out)
+    return LowRankOptState(
+        step=state.step, key=state.key, leaves=leaves, buckets=()
+    )
+
+
+def storage_opt_state(
+    optimizer: "LowRankOptimizer", state: LowRankOptState
+) -> LowRankOptState:
+    """Canonical per-leaf layout -> the optimizer's storage layout.
+
+    Inverse of ``canonical_opt_state``: stacks the moments/projectors of
+    every bucketed leaf and empties the per-leaf slots.  No-op for
+    per-leaf-storage optimizers or states that are already bucket-native.
+    """
+    layout = optimizer.state_layout
+    if layout is None or state.buckets:
+        return state
+    is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
+    _, treedef = jax.tree_util.tree_flatten(optimizer.specs, is_leaf=is_spec)
+    flat_states = treedef.flatten_up_to(state.leaves)
+    bucket_states = buckets_lib.leaf_states_to_bucketed(layout, flat_states)
+    out = [
+        _placeholder_leaf() if i in layout.plan.bucketed else st
+        for i, st in enumerate(flat_states)
+    ]
+    leaves = jax.tree_util.tree_unflatten(treedef, out)
+    return LowRankOptState(
+        step=state.step, key=state.key, leaves=leaves, buckets=bucket_states
+    )
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:

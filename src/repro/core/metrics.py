@@ -79,13 +79,29 @@ class OverlapTracker:
         return out
 
 
-def collect_projectors(opt_state, specs) -> Dict[str, jax.Array]:
-    """Extract {path: P} for all low-rank leaves from an optimizer state."""
+def collect_projectors(opt_state, specs, layout=None) -> Dict[str, jax.Array]:
+    """Extract {path: P} for all low-rank leaves from an optimizer state.
+
+    ``layout`` (a ``core.buckets.StateLayout``, i.e.
+    ``optimizer.state_layout``) must be passed for bucket-native states,
+    whose projectors live stacked in ``opt_state.buckets`` rather than in
+    the per-leaf slots.
+    """
     is_spec = lambda x: hasattr(x, "lowrank")  # noqa: E731
     flat_specs, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
     flat_states = treedef.flatten_up_to(opt_state.leaves)
+    stacked = {}
+    if getattr(opt_state, "buckets", ()):
+        if layout is None:
+            raise ValueError(
+                "opt_state is bucket-native (projectors live in "
+                "state.buckets); pass layout=optimizer.state_layout"
+            )
+        from repro.core import buckets as buckets_lib
+
+        stacked = buckets_lib.leaf_projectors(layout, opt_state.buckets)
     out = {}
-    for spec, st in zip(flat_specs, flat_states):
+    for i, (spec, st) in enumerate(zip(flat_specs, flat_states)):
         if spec.lowrank:
-            out[spec.path] = st.projector
+            out[spec.path] = stacked.get(i, st.projector)
     return out

@@ -14,6 +14,13 @@ Properties required at cluster scale, all implemented and tested:
     tree *paths* as keys; ``load`` fills a caller-provided state skeleton and
     ``device_put``s each leaf with shardings derived from the *current* mesh,
     so a job checkpointed on N devices restarts on M devices (tested 1<->4).
+  * **layout-canonical serialization** -- optional ``canonicalize`` /
+    ``localize`` converters (train/state.checkpoint_converters) run on
+    every save / load respectively, so on-disk checkpoints always hold the
+    canonical per-leaf optimizer-state layout regardless of the in-memory
+    storage layout (bucket-native runs save/resume bit-for-bit and can
+    switch engines mid-run).  ``shardings`` given to ``load`` must then
+    describe the *canonical* tree.
 
 Format: one ``.npy`` per leaf + ``manifest.json``.  No tensorstore available
 offline; per-shard streaming writes are a documented production follow-up.
@@ -107,9 +114,17 @@ def _write_checkpoint(base: str, step: int, host_leaves, paths, keep: int):
 
 
 class CheckpointManager:
-    def __init__(self, base_dir: str, keep: int = 3):
+    def __init__(
+        self,
+        base_dir: str,
+        keep: int = 3,
+        canonicalize=None,
+        localize=None,
+    ):
         self.base_dir = base_dir
         self.keep = keep
+        self.canonicalize = canonicalize  # storage -> serialized layout
+        self.localize = localize  # serialized -> storage layout
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -117,6 +132,8 @@ class CheckpointManager:
 
     def save(self, state: PyTree, step: int, blocking: bool = True) -> None:
         self.wait()  # only one in-flight async save
+        if self.canonicalize is not None:
+            state = self.canonicalize(state)
         flat, _ = jax.tree_util.tree_flatten(state)
         paths = _leaf_paths(state)
         # Snapshot on the caller thread: device_get of (possibly sharded)
@@ -157,7 +174,17 @@ class CheckpointManager:
         shardings: Optional[PyTree] = None,
         verify: bool = True,
     ) -> PyTree:
-        """Fill ``state_like``'s structure from disk (elastic reshard)."""
+        """Fill ``state_like``'s structure from disk (elastic reshard).
+
+        ``state_like`` may be in the optimizer's storage layout; it is
+        canonicalized before matching against the on-disk manifest and the
+        result is localized back, so callers round-trip their own layout.
+        """
+        if self.canonicalize is not None:
+            # Only the canonical tree's structure/shapes/dtypes matter
+            # here -- eval_shape skips the actual re-layout compute (and
+            # the transient extra copy of the whole optimizer state).
+            state_like = jax.eval_shape(self.canonicalize, state_like)
         step = step if step is not None else latest_step(self.base_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.base_dir}")
@@ -190,4 +217,7 @@ class CheckpointManager:
                 out.append(jax.device_put(arr.astype(like.dtype), sh))
             else:
                 out.append(jax.numpy.asarray(arr.astype(like.dtype)))
-        return jax.tree_util.tree_unflatten(treedef, out)
+        loaded = jax.tree_util.tree_unflatten(treedef, out)
+        if self.localize is not None:
+            loaded = self.localize(loaded)
+        return loaded

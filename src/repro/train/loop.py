@@ -20,6 +20,7 @@ from repro.core import lowrank as lowrank_lib
 from repro.core import metrics as metrics_lib
 from repro.train import checkpoint as ckpt_lib
 from repro.train.monitor import StepMonitor
+from repro.train import state as state_lib
 from repro.train.state import TrainState
 
 PyTree = Any
@@ -72,8 +73,12 @@ def train_loop(
 ) -> TrainResult:
     tau = max(optimizer.config.tau, 1)
     groups = max(optimizer.config.refresh_groups, 1)
+    # Checkpoints always serialize the canonical per-leaf state layout;
+    # bucket-native optimizers convert on save/load (train/state.py).
+    canonicalize, localize = state_lib.checkpoint_converters(optimizer)
     manager = ckpt_lib.CheckpointManager(
-        train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints
+        train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints,
+        canonicalize=canonicalize, localize=localize,
     )
     monitor = StepMonitor()
     guard = _PreemptionGuard(handle_signals)
@@ -86,7 +91,29 @@ def train_loop(
     start_step = 0
     latest = ckpt_lib.latest_step(train_cfg.checkpoint_dir)
     if latest is not None:
-        state = manager.load(state, step=latest, shardings=shardings)
+        # shardings describe the in-memory (storage) layout; with layout
+        # converters active the serialized tree differs, so derive
+        # name-based shardings for the canonical tree (leaves are loaded
+        # directly sharded -- elastic restore) and re-place the converted
+        # storage-layout state on the mesh afterwards.
+        if canonicalize is None:
+            state = manager.load(state, step=latest, shardings=shardings)
+        else:
+            load_shardings = None
+            if shardings is not None and mesh is not None:
+                from repro.launch import sharding as shd_lib
+
+                canon_skel = jax.eval_shape(canonicalize, state)
+                load_shardings = shd_lib.tree_shardings(canon_skel, mesh)
+            state = manager.load(
+                state, step=latest, shardings=load_shardings
+            )
+            if mesh is not None:
+                from repro.launch import sharding as shd_lib
+
+                state = jax.tree_util.tree_map(
+                    jax.device_put, state, shd_lib.tree_shardings(state, mesh)
+                )
         start_step = latest
     history: List[Dict[str, float]] = []
     losses: List[float] = []
@@ -113,7 +140,8 @@ def train_loop(
             health = monitor.end_step(step, loss)
             if tracker is not None and step % sub_tau == 0:
                 projs = metrics_lib.collect_projectors(
-                    state.opt_state, optimizer.specs
+                    state.opt_state, optimizer.specs,
+                    layout=optimizer.state_layout,
                 )
                 tracker.observe(
                     {k: np.asarray(v) for k, v in projs.items()}

@@ -1,8 +1,15 @@
-"""Train state pytree."""
+"""Train state pytree + state-layout conversion at the checkpoint boundary.
+
+Checkpoints always serialize the **canonical per-leaf** optimizer-state
+layout (DESIGN.md §2.5): a run training with the bucket-native storage
+layout (``engine="bucketed"`` + fused inner) converts on save/load, so a
+checkpoint written under one engine resumes bit-for-bit under the other.
+"""
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
+from repro.core import lowrank as lowrank_lib
 from repro.core.lowrank import LowRankOptState
 
 PyTree = Any
@@ -15,3 +22,34 @@ class TrainState(NamedTuple):
     @property
     def step(self):
         return self.opt_state.step
+
+
+def canonical_train_state(
+    optimizer: lowrank_lib.LowRankOptimizer, state: TrainState
+) -> TrainState:
+    """Storage layout -> the per-leaf layout checkpoints serialize."""
+    return TrainState(
+        params=state.params,
+        opt_state=lowrank_lib.canonical_opt_state(optimizer, state.opt_state),
+    )
+
+
+def storage_train_state(
+    optimizer: lowrank_lib.LowRankOptimizer, state: TrainState
+) -> TrainState:
+    """Per-leaf checkpoint layout -> the optimizer's storage layout."""
+    return TrainState(
+        params=state.params,
+        opt_state=lowrank_lib.storage_opt_state(optimizer, state.opt_state),
+    )
+
+
+def checkpoint_converters(optimizer: lowrank_lib.LowRankOptimizer):
+    """(canonicalize, localize) pair for CheckpointManager, or (None, None)
+    when the optimizer already stores the canonical per-leaf layout."""
+    if optimizer.state_layout is None:
+        return None, None
+    return (
+        lambda ts: canonical_train_state(optimizer, ts),
+        lambda ts: storage_train_state(optimizer, ts),
+    )

@@ -206,9 +206,13 @@ def make_train_step(
     )
     fns["refresh_groups"] = refresh_groups
     # Surfaced so launchers/benchmarks can report which hot path compiled
-    # (and how many fused dispatches it takes per step).
+    # (and how many fused dispatches it takes per step).  ``state_layout``
+    # is non-None when the optimizer state is bucket-native (stacked
+    # moments/projectors donated straight into the fused kernels via
+    # donate_argnums=(0,) on the TrainState).
     fns["engine"] = optimizer.config.engine
     fns["bucket_plan"] = optimizer.bucket_plan
+    fns["state_layout"] = optimizer.state_layout
     return fns
 
 

@@ -1,5 +1,6 @@
 """Fault tolerance: checkpoint atomicity/integrity/retention, deterministic
-resume, elastic restore; data determinism; monitors."""
+resume, elastic restore, cross-engine state-layout round-trips; data
+determinism; monitors."""
 import json
 import os
 import shutil
@@ -9,9 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import make_optimizer
 from repro.data.synthetic import SyntheticDataConfig, SyntheticDataset
 from repro.train.checkpoint import CheckpointManager, latest_step
 from repro.train.monitor import HeartbeatRegistry, StepMonitor
+from repro.train.state import TrainState, checkpoint_converters
 
 
 @pytest.fixture()
@@ -93,6 +96,111 @@ def test_missing_leaf_rejected(tmp_ckpt):
     bigger["extra"] = jnp.zeros((3,))
     with pytest.raises(KeyError):
         mgr.load(bigger)
+
+
+# ---------------------------------------------------------------------------
+# state-layout round-trips (checkpoints always serialize per-leaf canonical)
+# ---------------------------------------------------------------------------
+
+
+def _lr_params():
+    k = jax.random.PRNGKey(3)
+
+    def mat(i, shape):
+        return jax.random.normal(jax.random.fold_in(k, i), shape) * 0.02
+
+    return {
+        "blocks": {
+            "q_proj": mat(0, (2, 32, 64)),
+            "down_proj": mat(1, (2, 96, 32)),  # side='right'
+        },
+        "norm": jnp.ones((32,)),
+    }
+
+
+def _lr_grads(params, seed):
+    k = jax.random.PRNGKey(100 + seed)
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(k, p.size % 89), p.shape
+        ) * 0.01,
+        params,
+    )
+
+
+def _make_opt(engine, params):
+    return make_optimizer(
+        "galore-sara-adam", params, rank=8, lr=1e-2, alpha=0.5, min_dim=8,
+        momentum_carry="reproject", engine=engine,
+    )
+
+
+def _steps(opt, state, params, step_range):
+    for s in step_range:
+        g = _lr_grads(params, s)
+        params, state, _ = opt.update(
+            g, state, params, refresh=(s % 2 == 0), apply=True
+        )
+    return params, state
+
+
+@pytest.mark.parametrize(
+    "engine_a,engine_b",
+    [("bucketed", "reference"), ("reference", "bucketed")],
+)
+def test_checkpoint_cross_engine_resume_bit_identical(
+    tmp_ckpt, engine_a, engine_b
+):
+    """Save under one engine, resume under the other: the fp32 trajectory
+    (params AND canonical optimizer state) is bit-identical with never
+    having switched -- the on-disk layout is engine-independent."""
+    params = _lr_params()
+    opt_a = _make_opt(engine_a, params)
+    p_a, st_a = _steps(opt_a, opt_a.init(params), params, range(3))
+    can_a, loc_a = checkpoint_converters(opt_a)
+    mgr_a = CheckpointManager(
+        tmp_ckpt, keep=2, canonicalize=can_a, localize=loc_a
+    )
+    mgr_a.save(TrainState(p_a, st_a), 3)
+
+    # the on-disk leaves must be the canonical per-leaf layout: same
+    # manifest paths regardless of the saving engine
+    with open(os.path.join(tmp_ckpt, "step_00000003", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert not any("buckets" in k for k in manifest["leaves"])
+    assert any(".inner" in k and ".m" in k for k in manifest["leaves"])
+
+    # resume under engine B from the checkpoint
+    opt_b = _make_opt(engine_b, params)
+    can_b, loc_b = checkpoint_converters(opt_b)
+    mgr_b = CheckpointManager(
+        tmp_ckpt, keep=2, canonicalize=can_b, localize=loc_b
+    )
+    skel = TrainState(params, opt_b.init(params))
+    restored = mgr_b.load(skel, step=3)
+    p_b, st_b = _steps(opt_b, restored.opt_state, restored.params, range(3, 6))
+
+    # uninterrupted engine-B run as ground truth
+    p_ref, st_ref = _steps(opt_b, opt_b.init(params), params, range(6))
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(p_b), jax.tree_util.tree_leaves(p_ref)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    from repro.core import canonical_opt_state
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(canonical_opt_state(opt_b, st_b)),
+        jax.tree_util.tree_leaves(canonical_opt_state(opt_b, st_ref)),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_converters_identity_for_reference_engine():
+    params = _lr_params()
+    opt = _make_opt("reference", params)
+    can, loc = checkpoint_converters(opt)
+    assert can is None and loc is None
 
 
 # ---------------------------------------------------------------------------

@@ -9,9 +9,18 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Old jax (<= 0.4.x, no top-level jax.shard_map): partial-auto shard_map
+# lowers through the legacy experimental surface and XLA's
+# ``IsManualSubgroup`` check rejects the compressed-DP step on CPU meshes.
+# Tracked in ROADMAP.md ("Old-jax partial-auto shard_map" /
+# ``IsManualSubgroup`` entry); the API rename itself is shimmed by
+# ``launch/mesh.shard_map_compat``.
+OLD_JAX_SHARD_MAP = not hasattr(jax, "shard_map")
 
 
 def run_sub(body: str, timeout=420):
@@ -66,6 +75,12 @@ def test_sharded_train_step_runs_and_matches_single_device():
     assert "OK" in out
 
 
+@pytest.mark.xfail(
+    OLD_JAX_SHARD_MAP,
+    strict=False,
+    reason="old-jax partial-auto shard_map hits XLA IsManualSubgroup on "
+           "CPU meshes (ROADMAP.md IsManualSubgroup entry)",
+)
 def test_compressed_dp_equals_standard():
     out = run_sub("""
     cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32,

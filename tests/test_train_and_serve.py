@@ -74,6 +74,43 @@ def test_deterministic_resume(setup, tmp_path):
     )
 
 
+def test_bucketed_loop_resumes_across_engines(setup, tmp_path):
+    """train_loop with engine='bucketed': checkpoints serialize the
+    canonical layout, and a reference-engine loop resumes the bucketed
+    run's checkpoint with identical losses (and vice versa)."""
+    cfg, model, _, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt = str(tmp_path / "cx")
+    tc = TrainConfig(
+        total_steps=12, checkpoint_every=4, checkpoint_dir=ckpt, lr=2e-3,
+        async_checkpoint=False,
+    )
+
+    def run(engine):
+        opt = make_optimizer(
+            "galore-sara-adam", params, rank=8, tau=4, lr=2e-3,
+            engine=engine,
+        )
+        fns = make_train_step(model, opt, donate=False)
+        return train_loop(
+            model, opt, data, tc, fns, log_every=100, handle_signals=False
+        )
+
+    res_b = run("bucketed")  # steps 0..11, checkpoints at 4, 8, 12
+    import shutil
+
+    shutil.rmtree(os.path.join(ckpt, "step_00000012"))
+    res_r = run("reference")  # resumes from the bucketed step-8 checkpoint
+    np.testing.assert_allclose(
+        np.asarray(res_b.losses[8:]), np.asarray(res_r.losses), atol=1e-6
+    )
+    shutil.rmtree(os.path.join(ckpt, "step_00000012"))
+    res_b2 = run("bucketed")  # and back: bucketed resumes reference's save
+    np.testing.assert_allclose(
+        np.asarray(res_b.losses[8:]), np.asarray(res_b2.losses), atol=1e-6
+    )
+
+
 def test_subspace_tracking(setup, tmp_path):
     cfg, model, opt, data = setup
     tc = TrainConfig(

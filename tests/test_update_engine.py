@@ -6,13 +6,25 @@ projection sides -- the bucketed engine is bit-for-bit (fp32, no weight
 decay) / tolerance-equal (bf16, weight decay) with the per-leaf reference
 loop, for both fused inner optimizers and both the full-grad and
 projected-grad hot paths.
+
+ISSUE 2 additions: with a fused inner the bucketed layout is the *storage*
+layout -- moments/projectors live stacked in ``state.buckets``, the hot
+step's jaxpr contains no moment stack/unstack ops, refresh (including the
+batched ``momentum_carry="reproject"`` carry) runs on the stacks, and
+``canonical_opt_state``/``storage_opt_state`` convert losslessly.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import OptimizerConfig, apply_updates, make_optimizer
+from repro.core import (
+    OptimizerConfig,
+    apply_updates,
+    canonical_opt_state,
+    make_optimizer,
+    storage_opt_state,
+)
 from repro.core import buckets as buckets_lib
 from repro.core.lowrank import build_specs, project_grads
 from repro.kernels.compat import pick_block
@@ -68,7 +80,7 @@ def _run(engine, params, inner, steps=4, apply=True, wd=0.0, seed=0, **kw):
         else:
             u, st, aux = opt.update(g, st, p, refresh=refresh)
             p = apply_updates(p, u)
-    return p, st, aux
+    return p, canonical_opt_state(opt, st), aux
 
 
 def _assert_trees(a, b, atol=0.0):
@@ -177,6 +189,205 @@ def test_unknown_engine_rejected():
     params = {"w_proj": jnp.zeros((32, 64))}
     with pytest.raises(ValueError):
         make_optimizer("galore-adam", params, engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# bucket-native state (ISSUE 2)
+# ---------------------------------------------------------------------------
+
+
+def _opts_pair(params, inner="adam", **kw):
+    ref = make_optimizer(
+        f"galore-sara-{inner}", params, rank=16, lr=1e-2, alpha=0.5,
+        min_dim=8, **kw,
+    )
+    buck = make_optimizer(
+        f"galore-sara-{inner}", params, rank=16, lr=1e-2, alpha=0.5,
+        min_dim=8, engine="bucketed", **kw,
+    )
+    return ref, buck
+
+
+def test_state_is_bucket_native_for_fused_inners():
+    params = _mixed_params()
+    _, buck = _opts_pair(params)
+    st = buck.init(params)
+    assert buck.state_layout is not None
+    assert len(st.buckets) == len(buck.bucket_plan.buckets)
+    for bucket, bst in zip(buck.bucket_plan.buckets, st.buckets):
+        B, d, n, r = bucket.batch, bucket.d, bucket.n, bucket.rank
+        assert bst.projector.shape == (B, d, r)
+        assert bst.m.shape == (B, r, n)
+        assert bst.v.shape == (B, r, n)
+    # covered leaves hold empty placeholders (no duplicated state)
+    flat = jax.tree_util.tree_leaves(st.leaves)
+    total = sum(x.size for x in flat)
+    ref_total = sum(
+        x.size for x in jax.tree_util.tree_leaves(
+            canonical_opt_state(buck, st).leaves
+        )
+    )
+    assert total < ref_total  # moments/projectors moved into the stacks
+
+
+def test_non_fused_inner_keeps_per_leaf_state():
+    params = _mixed_params()
+    opt = make_optimizer(
+        "galore-sara-adafactor", params, rank=16, min_dim=8, engine="bucketed"
+    )
+    assert opt.state_layout is None
+    assert opt.init(params).buckets == ()
+    fira = make_optimizer(
+        "fira-adam", params, rank=16, min_dim=8, engine="bucketed"
+    )
+    assert fira.state_layout is None
+
+
+def test_canonical_storage_roundtrip_exact():
+    params = _mixed_params()
+    _, buck = _opts_pair(params)
+    st = buck.init(params)
+    g = _grads(params)
+    _, st, _ = buck.update(g, st, params, refresh=True, apply=True)
+    canon = canonical_opt_state(buck, st)
+    assert canon.buckets == ()
+    rt = storage_opt_state(buck, canon)
+    _assert_trees(
+        jax.tree_util.tree_leaves(rt), jax.tree_util.tree_leaves(st), atol=0.0
+    )
+    # converting an already-converted state is a no-op
+    assert canonical_opt_state(buck, canon) is canon
+    assert storage_opt_state(buck, rt) is rt
+
+
+@pytest.mark.parametrize("carry", ["keep", "reset", "reproject"])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_staggered_refresh_and_carry_match_reference(carry, groups):
+    """Multi-refresh trajectories (the stack-scattering refresh path and
+    the batched r x r reproject carry) stay bit-for-bit with reference."""
+    params = _mixed_params()
+    ref, buck = _opts_pair(
+        params, momentum_carry=carry, refresh_groups=groups
+    )
+    sr, sb = ref.init(params), buck.init(params)
+    pr = pb = params
+    for step in range(5):
+        g = _grads(params, step)
+        refresh = step % 2 == 0
+        group = step // 2
+        ur, sr, _ = ref.update(g, sr, pr, refresh=refresh, group=group)
+        pr = apply_updates(pr, ur)
+        pb, sb, _ = buck.update(
+            g, sb, pb, refresh=refresh, group=group, apply=True
+        )
+    _assert_trees(pr, pb, atol=0.0)
+    _assert_trees(sr.leaves, canonical_opt_state(buck, sb).leaves, atol=0.0)
+
+
+def test_hot_step_has_no_moment_stack_ops():
+    """Acceptance: the bucketed hot step's jaxpr stacks only params and
+    grads -- the optimizer state is consumed in storage layout, so the
+    only concatenates are the two per multi-entry bucket (W and G)."""
+    params = _mixed_params()
+    _, buck = _opts_pair(params)
+    st = buck.init(params)
+    g = _grads(params)
+    _, st, _ = buck.update(g, st, params, refresh=True, apply=True)
+
+    jaxpr = jax.make_jaxpr(
+        lambda g, s, p: buck.update(g, s, p, refresh=False, apply=True)
+    )(g, st, params)
+    n_concat = sum(
+        1 for eqn in jaxpr.jaxpr.eqns if eqn.primitive.name == "concatenate"
+    )
+    multi = sum(
+        1 for bk in buck.bucket_plan.buckets if len(bk.entries) > 1
+    )
+    assert multi >= 2  # the fixture exercises multi-leaf buckets
+    assert n_concat == 2 * multi  # W + G only; no moment/projector stacking
+    # the per-leaf storage layout needed 5 stacks per multi-entry bucket
+    # (W, G, P, M, V) -- strictly fewer now
+    assert n_concat < 5 * multi
+
+
+def test_track_update_norm_gate():
+    params = _mixed_params()
+    pr, _, aux_on = _run("bucketed", params, "adam")
+    pg, _, aux_off = _run(
+        "bucketed", params, "adam", track_update_norm=False
+    )
+    _assert_trees(pr, pg, atol=0.0)  # trajectory unaffected by the knob
+    assert float(aux_on.update_norm) > 0.0
+    assert float(aux_off.update_norm) == 0.0
+    # reference engine honors the same knob
+    prr, _, aux_roff = _run(
+        "reference", params, "adam", track_update_norm=False
+    )
+    _assert_trees(pr, prr, atol=0.0)
+    assert float(aux_roff.update_norm) == 0.0
+
+
+def test_project_grads_uses_stacked_projectors():
+    params = _mixed_params()
+    ref, buck = _opts_pair(params)
+    sr, sb = ref.init(params), buck.init(params)
+    g = _grads(params)
+    _, sr, _ = ref.update(g, sr, params, refresh=True)
+    _, sb, _ = buck.update(g, sb, params, refresh=True, apply=True)
+    g2 = _grads(params, 1)
+    _assert_trees(
+        project_grads(ref, g2, sr), project_grads(buck, g2, sb), atol=0.0
+    )
+
+
+def test_reproject_carry_keeps_f32_moment_precision():
+    """The batched reproject carry must not round moments through the
+    (possibly low-precision) projector dtype: einsum(c_bf16, m_f32)
+    promotes to f32, bit-identical to casting c up first."""
+    params = {"w_proj": jnp.ones((32, 64)) * 0.02}
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=8, lr=1e-2, min_dim=8,
+        engine="bucketed", momentum_carry="reproject",
+        projector_dtype=jnp.bfloat16,
+    )
+    st = opt.init(params)
+    g = _grads(params)
+    _, st, _ = opt.update(g, st, params, refresh=True, apply=True)
+    bst = st.buckets[0]
+    assert bst.m.dtype == jnp.float32 and float(jnp.sum(bst.m**2)) > 0
+
+    from repro.core import projectors as proj_lib
+
+    pcfg = opt.config.projector_config()
+
+    def refresh_fn(g, lkey, old_p, spec):
+        return proj_lib.refresh_projector(
+            g, lkey, old_p, pcfg, side=spec.side, rank=spec.rank
+        )
+
+    flat_specs = jax.tree_util.tree_leaves(
+        opt.specs, is_leaf=lambda x: hasattr(x, "lowrank")
+    )
+    g2 = _grads(params, 1)
+    new_states, _ = buckets_lib.bucketed_refresh(
+        opt.state_layout, st.buckets, flat_specs,
+        jax.tree_util.tree_leaves(g2), jax.random.PRNGKey(7), refresh_fn,
+        group=0, momentum_carry="reproject",
+    )
+    c = jnp.einsum("bdn,bdo->bno", new_states[0].projector, bst.projector)
+    expected = jnp.einsum("bno,bok->bnk", c.astype(jnp.float32), bst.m)
+    assert new_states[0].m.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(new_states[0].m), np.asarray(expected)
+    )
+
+
+def test_bucket_native_rejects_canonical_state():
+    params = _mixed_params()
+    _, buck = _opts_pair(params)
+    canon = canonical_opt_state(buck, buck.init(params))
+    with pytest.raises(ValueError, match="storage_opt_state"):
+        buck.update(_grads(params), canon, params, refresh=False)
 
 
 # ---------------------------------------------------------------------------
