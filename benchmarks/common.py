@@ -36,8 +36,17 @@ def record(
     wall_us: float,
     roofline_us: Optional[float] = None,
     engine: str = "reference",
+    state_layout: str = "none",
     **extra,
 ) -> None:
+    """Append one sidecar record.
+
+    ``engine`` and ``state_layout`` are REQUIRED metadata on every record
+    (state_layout: "bucketed" | "perleaf" | "none" for stateless kernel
+    micro-benches) -- benchmarks/run.py --check keys its cross-PR
+    comparisons on (op, engine, state_layout), so records stay unambiguous
+    when an op is measured under several engine configurations.
+    """
     JSON_RECORDS.append({
         "op": op,
         "wall_us": round(float(wall_us), 2),
@@ -45,6 +54,7 @@ def record(
             round(float(roofline_us), 2) if roofline_us is not None else None
         ),
         "engine": engine,
+        "state_layout": state_layout,
         **extra,
     })
 

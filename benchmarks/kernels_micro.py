@@ -141,20 +141,10 @@ def rmsnorm_bench() -> List[Row]:
     return rows
 
 
-def update_engine_bench() -> List[Row]:
-    """End-to-end optimizer hot step: engine='reference' vs 'bucketed' on a
-    realistic stacked-transformer pytree (scan layers, excluded embed/norm
-    leaves, mixed left/right sides -> multiple buckets).
-
-    Runs with ``track_update_norm=False`` (the pure-throughput
-    configuration; the W' - W aux read pass is gated off) and reports the
-    bucket-native storage layout's modeled HBM alongside the per-leaf
-    layout it replaced -- the delta is the per-step moment/projector
-    stack/unstack the ISSUE-2 refactor deleted."""
-    from repro.core import make_optimizer
-    from repro.core import buckets as buckets_lib
-
-    L, d_model, d_ff, vocab = 4, 256, 640, 2048
+def _bench_transformer(L=4, d_model=256, d_ff=640, vocab=2048):
+    """Realistic stacked-transformer pytree (scan layers, excluded
+    embed/norm leaves, mixed left/right sides -> multiple buckets), shared
+    by the engine benches."""
     key = jax.random.PRNGKey(0)
 
     def mat(i, shape):
@@ -182,6 +172,24 @@ def update_engine_bench() -> List[Row]:
         ) * 0.01,
         params,
     )
+    return params, grads
+
+
+def update_engine_bench() -> List[Row]:
+    """End-to-end optimizer hot step: engine='reference' vs 'bucketed' on a
+    realistic stacked-transformer pytree (scan layers, excluded embed/norm
+    leaves, mixed left/right sides -> multiple buckets).
+
+    Runs with ``track_update_norm=False`` (the pure-throughput
+    configuration; the W' - W aux read pass is gated off) and reports the
+    bucket-native storage layout's modeled HBM alongside the per-leaf
+    layout it replaced -- the delta is the per-step moment/projector
+    stack/unstack the ISSUE-2 refactor deleted."""
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+
+    L, d_model = 4, 256
+    params, grads = _bench_transformer(L=L, d_model=d_model)
 
     rows: List[Row] = []
     rank = 64
@@ -232,6 +240,7 @@ def update_engine_bench() -> List[Row]:
         rows.append((name, us, derived))
         common.record(
             name, us, roofline_us=hbm / hw.HBM_BW * 1e6, engine=engine,
+            state_layout="bucketed" if engine == "bucketed" else "perleaf",
             dispatched_ops=n_ops, modeled_hbm_bytes=hbm, **extra,
         )
     rows.append((
@@ -241,8 +250,87 @@ def update_engine_bench() -> List[Row]:
     return rows
 
 
+def refresh_engine_bench() -> List[Row]:
+    """The refresh executable: per-leaf loop vs the bucket-native batched
+    randomized-subspace-iteration engine (DESIGN.md §2.6), same bench
+    transformer as ``update_engine_bench``.
+
+    Both arms run ``engine="bucketed"`` with ``svd_backend="randomized"``
+    (SARA pool factor 2 so the sketch width stays below d and the power
+    iterations actually run); only ``batched_refresh`` differs -- the two
+    are bit-identical, so this measures pure dispatch/HBM shape.  Modeled
+    ops and HBM come from ``buckets.refresh_num_ops`` /
+    ``modeled_refresh_hbm_bytes`` (perleaf = the classic two-QR HMT chain
+    with the Z intermediate in HBM; batched = fused kernels/power_iter
+    chain, one dispatch chain per bucket)."""
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+
+    L, d_model, rank, pool = 4, 256, 64, 2
+    params, grads = _bench_transformer(L=L, d_model=d_model)
+    rows: List[Row] = []
+    results = {}
+    ops_hbm = {}
+    for mode in ("perleaf", "batched"):
+        opt = make_optimizer(
+            "galore-sara-adam", params, rank=rank, lr=1e-3, alpha=0.25,
+            engine="bucketed", track_update_norm=False,
+            svd_backend="randomized", sara_pool_factor=pool,
+            batched_refresh=(mode == "batched"),
+        )
+        state = opt.init(params)
+        refresh = jax.jit(
+            lambda g, s, p, _o=opt: _o.update(
+                g, s, p, refresh=True, apply=True
+            )
+        )
+        us = _time(lambda g: refresh(g, state, params), grads, iters=3)
+        results[mode] = us
+        flat_specs = jax.tree_util.tree_leaves(
+            opt.specs, is_leaf=lambda x: hasattr(x, "lowrank")
+        )
+        n_ops = buckets_lib.refresh_num_ops(
+            opt.bucket_plan, flat_specs, engine=mode,
+            oversample=opt.config.svd_oversample,
+            power_iters=opt.config.svd_power_iters, pool_factor=pool,
+        )
+        hbm = buckets_lib.modeled_refresh_hbm_bytes(
+            opt.bucket_plan, flat_specs, engine=mode,
+            oversample=opt.config.svd_oversample,
+            power_iters=opt.config.svd_power_iters, pool_factor=pool,
+        )
+        ops_hbm[mode] = (n_ops, hbm)
+        name = f"engine/refresh_{mode}_L{L}_d{d_model}_r{rank}"
+        model_note = (
+            " model=pre_fused_two_qr_baseline" if mode == "perleaf" else ""
+        )
+        rows.append((
+            name, us,
+            f"dispatched_ops={n_ops} modeled_hbm={hbm / 1e6:.1f}MB "
+            f"buckets={len(opt.bucket_plan.buckets)}{model_note}",
+        ))
+        extra = (
+            {"modeled_as": "pre_fused_two_qr_baseline"}
+            if mode == "perleaf" else {}
+        )
+        common.record(
+            name, us, roofline_us=hbm / hw.HBM_BW * 1e6, engine=mode,
+            state_layout="bucketed", dispatched_ops=n_ops,
+            modeled_hbm_bytes=hbm, **extra,
+        )
+    (ops_p, hbm_p), (ops_b, hbm_b) = ops_hbm["perleaf"], ops_hbm["batched"]
+    rows.append((
+        "engine/refresh_speedup", 0.0,
+        f"op_ratio={ops_p / ops_b:.2f}x "
+        f"hbm_saving={100 * (1 - hbm_b / hbm_p):.0f}% "
+        f"wall_ratio={results['perleaf'] / max(results['batched'], 1e-9):.2f}x",
+    ))
+    return rows
+
+
 def run() -> List[Row]:
     return (
         lowrank_update_bench() + galore_project_bench()
         + attention_bench() + rmsnorm_bench() + update_engine_bench()
+        + refresh_engine_bench()
     )

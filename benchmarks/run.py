@@ -18,12 +18,27 @@ _CHECK_FIELDS = ("modeled_hbm_bytes", "dispatched_ops")
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 
 
+# Pre-ISSUE-3 sidecars carry no state_layout field; infer it from the
+# engine so old baselines stay comparable across the metadata change.
+_LEGACY_LAYOUT = {"bucketed": "bucketed", "reference": "perleaf"}
+
+
+def _record_key(rec: dict) -> tuple:
+    """Records are keyed by (op, engine, state_layout) so the same op
+    measured under several engine configurations compares unambiguously
+    across PRs (refresh entries included)."""
+    layout = rec.get("state_layout") or _LEGACY_LAYOUT.get(
+        rec.get("engine"), "none"
+    )
+    return (rec["op"], rec.get("engine"), layout)
+
+
 def check_regressions(previous: list, current: list) -> list:
-    """Compare analytic perf fields per op; return regression strings."""
-    prev_by_op = {r["op"]: r for r in previous}
+    """Compare analytic perf fields per record key; return regressions."""
+    prev_by_op = {_record_key(r): r for r in previous}
     problems = []
     for rec in current:
-        old = prev_by_op.get(rec["op"])
+        old = prev_by_op.get(_record_key(rec))
         if old is None:
             continue
         for field in _CHECK_FIELDS:

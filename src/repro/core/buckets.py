@@ -31,6 +31,13 @@ every full-space direction in HBM.  This module is the
     runs as batched einsums (ops.py), so the dispatch-count win and the
     numerics are identical everywhere.
 
+The *refresh* executable is bucket-native too (DESIGN.md §2.6):
+``bucketed_refresh`` runs all same-group entries of a bucket as ONE
+batched randomized-subspace-iteration chain over their stacked (B', d, n)
+gradients whenever the projector config is batchable, with per-slice RNG
+keys that replicate the per-leaf schedule bit-for-bit; the exact SVD
+backend falls back to the per-leaf loop (paper-faithful runs untouched).
+
 Checkpoints never see the stacked layout: ``bucketed_to_leaf_states`` /
 ``leaf_states_to_bucketed`` convert between the storage layout and the
 canonical per-leaf layout (exact reshapes/transposes/concats, no
@@ -391,6 +398,20 @@ def bucketed_update(
 # ---------------------------------------------------------------------------
 
 
+def _entry_slice_keys(subkey: jax.Array, entry: BucketEntry, template):
+    """The per-slice PRNG keys one entry contributes to a batched refresh.
+
+    EXACTLY the per-leaf schedule of ``projectors.refresh_projector``: the
+    leaf key folds the *global* leaf index; a leaf with leading batch dims
+    splits it over the flattened slices, a plain 2-D leaf uses it whole.
+    Returns a (entry.batch, ...) stacked key array.
+    """
+    lkey = jax.random.fold_in(subkey, entry.leaf_idx)
+    if template.projector.shape[:-2]:
+        return jax.random.split(lkey, entry.batch)
+    return lkey[None]
+
+
 def bucketed_refresh(
     layout: StateLayout,
     bucket_states: Sequence[BucketState],
@@ -401,17 +422,28 @@ def bucketed_refresh(
     *,
     group: int,
     momentum_carry: str,
+    stacked_refresh_fn=None,  # (g_stack, keys, old_p_stack, rank) -> stack
 ) -> Tuple[Tuple[BucketState, ...], List[jax.Array]]:
     """Refresh the projectors of one static refresh ``group`` directly in
     the bucket stacks.
 
-    Per bucket: slice each refreshed entry's old projector out of the
-    stack, run the (per-leaf, SVD-bearing) ``refresh_fn``, and concatenate
-    the new slices back -- a static scatter into the (B, d, r) stack.  The
-    ``momentum_carry="reproject"`` carry (M' = P_new^T P_old M) then runs
-    as ONE batched r x r einsum over the whole stack instead of a per-leaf
-    loop; non-refreshed slices keep their exact old moments (static
-    selection, not a where over approximate C ~= I).
+    With ``stacked_refresh_fn`` (the batched refresh engine, provided when
+    ``projectors.batched_refresh_supported`` covers the config): ALL of a
+    bucket's same-group entries refresh as ONE batched chain over their
+    stacked (B', d, n) gradients -- batched Gaussian sketch, fused power
+    iterations, batched thin QR, one small batched SVD, batched Gumbel
+    top-k -- instead of a chain per leaf.  Per-slice keys follow the exact
+    per-leaf schedule (``_entry_slice_keys``), so the batched stack is
+    bit-identical to the per-leaf fallback, which remains for the exact
+    backend (``stacked_refresh_fn=None``): slice each refreshed entry's
+    old projector out of the stack, run the per-leaf ``refresh_fn``, and
+    concatenate the new slices back.
+
+    Either way the scatter into the (B, d, r) stack is static, and the
+    ``momentum_carry="reproject"`` carry (M' = P_new^T P_old M) runs as ONE
+    batched r x r einsum over the whole stack instead of a per-leaf loop;
+    non-refreshed slices keep their exact old moments (static selection,
+    not a where over approximate C ~= I).
 
     Returns (new_bucket_states, per-leaf overlap diagnostics).  Keys fold
     the *global* leaf index, so trajectories are bit-identical with the
@@ -422,33 +454,77 @@ def bucketed_refresh(
     for bucket, bst in zip(layout.plan.buckets, bucket_states):
         parts: List[jax.Array] = []
         refreshed: List[bool] = []
-        off = 0
-        for e in bucket.entries:
-            old_slice = bst.projector[off : off + e.batch]
-            off += e.batch
-            spec = flat_specs[e.leaf_idx]
-            if spec.group == group:
-                tmpl = layout.templates[e.leaf_idx].projector
-                old_p = old_slice.reshape(tmpl.shape)
-                lkey = jax.random.fold_in(subkey, e.leaf_idx)
-                new_p = refresh_fn(
-                    flat_grads[e.leaf_idx], lkey, old_p, spec
-                )
-                # overlap diagnostic (GARD18): ||P_new^T P_old||_F^2 / r,
-                # same per-leaf reduction as the reference path.
-                c = jnp.einsum("...dn,...do->...no", new_p, old_p)
-                overlaps.append(jnp.mean(
+        if stacked_refresh_fn is not None:
+            hot = [
+                e for e in bucket.entries
+                if flat_specs[e.leaf_idx].group == group
+            ]
+            new_slices: Dict[int, jax.Array] = {}
+            if hot:
+                g_stack = _gather(bucket._replace(entries=tuple(hot)),
+                                  flat_grads)
+                old_stack = _slice_entries(bucket, bst.projector, hot)
+                keys = jnp.concatenate([
+                    _entry_slice_keys(
+                        subkey, e, layout.templates[e.leaf_idx]
+                    )
+                    for e in hot
+                ], axis=0)
+                new_stack = stacked_refresh_fn(
+                    g_stack, keys, old_stack, bucket.rank
+                ).astype(bst.projector.dtype)
+                # overlap diagnostic (GARD18): ||P_new^T P_old||_F^2 / r
+                # per slice, averaged per LEAF like the reference path.
+                c = jnp.einsum("bdn,bdo->bno", new_stack, old_stack)
+                vals = (
                     jnp.sum(c.astype(jnp.float32) ** 2, axis=(-2, -1))
-                    / spec.rank
-                ))
-                parts.append(
-                    new_p.reshape((-1,) + new_p.shape[-2:])
-                    .astype(bst.projector.dtype)
+                    / bucket.rank
                 )
-                refreshed.append(True)
-            else:
-                parts.append(old_slice)
-                refreshed.append(False)
+                off_h = 0
+                for e in hot:
+                    overlaps.append(jnp.mean(vals[off_h : off_h + e.batch]))
+                    new_slices[e.leaf_idx] = (
+                        new_stack[off_h : off_h + e.batch]
+                    )
+                    off_h += e.batch
+            off = 0
+            for e in bucket.entries:
+                old_slice = bst.projector[off : off + e.batch]
+                off += e.batch
+                if e.leaf_idx in new_slices:
+                    parts.append(new_slices[e.leaf_idx])
+                    refreshed.append(True)
+                else:
+                    parts.append(old_slice)
+                    refreshed.append(False)
+        else:
+            off = 0
+            for e in bucket.entries:
+                old_slice = bst.projector[off : off + e.batch]
+                off += e.batch
+                spec = flat_specs[e.leaf_idx]
+                if spec.group == group:
+                    tmpl = layout.templates[e.leaf_idx].projector
+                    old_p = old_slice.reshape(tmpl.shape)
+                    lkey = jax.random.fold_in(subkey, e.leaf_idx)
+                    new_p = refresh_fn(
+                        flat_grads[e.leaf_idx], lkey, old_p, spec
+                    )
+                    # overlap diagnostic (GARD18): ||P_new^T P_old||_F^2 /
+                    # r, same per-leaf reduction as the reference path.
+                    c = jnp.einsum("...dn,...do->...no", new_p, old_p)
+                    overlaps.append(jnp.mean(
+                        jnp.sum(c.astype(jnp.float32) ** 2, axis=(-2, -1))
+                        / spec.rank
+                    ))
+                    parts.append(
+                        new_p.reshape((-1,) + new_p.shape[-2:])
+                        .astype(bst.projector.dtype)
+                    )
+                    refreshed.append(True)
+                else:
+                    parts.append(old_slice)
+                    refreshed.append(False)
         new_proj = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
         m, v = bst.m, bst.v
@@ -473,6 +549,20 @@ def bucketed_refresh(
                 m = _select_slices(bucket, refreshed, m2, m)
         new_states.append(BucketState(projector=new_proj, m=m, v=v))
     return tuple(new_states), overlaps
+
+
+def _slice_entries(
+    bucket: Bucket, stacked: jax.Array, entries: Sequence[BucketEntry]
+) -> jax.Array:
+    """Concatenated stack slices of an entry subset (in bucket order)."""
+    want = frozenset(e.leaf_idx for e in entries)
+    parts = []
+    off = 0
+    for e in bucket.entries:
+        if e.leaf_idx in want:
+            parts.append(stacked[off : off + e.batch])
+        off += e.batch
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
 
 def _select_slices(
@@ -551,3 +641,120 @@ def reference_num_ops(plan: BucketPlan, projected: bool = False) -> int:
     n_leaves = sum(len(bk.entries) for bk in plan.buckets)
     per_leaf = 4 if projected else 5
     return n_leaves * per_leaf
+
+
+# ---------------------------------------------------------------------------
+# refresh accounting (benchmarks/kernels_micro.refresh_engine_bench)
+# ---------------------------------------------------------------------------
+#
+# Both models describe the RANDOMIZED (sara/dominant) refresh chain:
+#
+#   perleaf -- the PRE-batched-engine baseline of record: one chain per
+#   refreshed leaf, classic two-QR HMT iteration with the (n, k')
+#   intermediate Z = G^T Q materialized in HBM and re-orthonormalized.
+#   NOTE this is deliberately NOT what ``batched_refresh=False`` dispatches
+#   today -- the per-leaf randomized SVD was restructured onto the fused
+#   thin-QR chain in the same change, so the current fallback costs
+#   7 + 2q ops per leaf, not 7 + 4q.  The model pins the baseline this
+#   engine replaced so cross-PR --check comparisons don't shift.
+#
+#   batched -- the bucket-native engine: ONE chain per bucket with refreshed
+#   entries, thin-QR-only iterations, Z held in VMEM (kernels/power_iter),
+#   plus the honest concat cost of stacking the hot entries' gradients.
+
+
+def _refresh_chain_ops(engine: str, power_iters: int) -> int:
+    """Dispatched ops of one chain: sketch draw + sketch GEMM + final QR +
+    B = Q^T G GEMM + small SVD + Gumbel sample + column gather (7), plus
+    per power iteration either QR + fused power step (batched, 2) or
+    QR + Z GEMM + QR + Y GEMM (perleaf, 4).  ``power_iters`` is the
+    post-clamp count -- callers apply ``svd.clamp_sketch`` per bucket so
+    the gated numbers match what actually dispatches."""
+    per_iter = 2 if engine == "batched" else 4
+    return 7 + per_iter * power_iters
+
+
+def refresh_num_ops(
+    plan: BucketPlan,
+    flat_specs: Sequence,
+    *,
+    engine: str,
+    group: int = 0,
+    oversample: int = 8,
+    power_iters: int = 2,
+    pool_factor: int = 4,
+) -> int:
+    """Modeled dispatched-op count of one randomized (SARA-pool) refresh
+    step of ``group`` -- same clamping as ``modeled_refresh_hbm_bytes``,
+    so buckets whose full-range sketch skips the power iterations at
+    runtime are counted without them here too."""
+    from repro.core import svd as svd_lib
+
+    total = 0
+    for bk in plan.buckets:
+        k = min(bk.d, pool_factor * bk.rank)
+        _, _, iters = svd_lib.clamp_sketch(
+            bk.d, bk.n, k, oversample, power_iters
+        )
+        chain = _refresh_chain_ops(engine, iters)
+        n_hot = sum(
+            1 for e in bk.entries
+            if flat_specs[e.leaf_idx].group == group
+        )
+        total += chain * (min(n_hot, 1) if engine == "batched" else n_hot)
+    return total
+
+
+def modeled_refresh_hbm_bytes(
+    plan: BucketPlan,
+    flat_specs: Sequence,
+    *,
+    engine: str,
+    group: int = 0,
+    oversample: int = 8,
+    power_iters: int = 2,
+    pool_factor: int = 4,
+    itemsize: int = 4,
+) -> int:
+    """Modeled HBM traffic of one randomized (SARA-pool) refresh step.
+
+    Per refreshed (d, n) slice with sketch width k' (pool + oversample,
+    degenerate shapes clamped exactly like ``svd.clamp_sketch``): sketch
+    GEMM, the power iterations (engine-dependent, see module comment --
+    the batched engine's fused kernel deletes the 2 n k' Z round-trip and
+    one n-side QR per iteration), final QR, B = Q^T G, the small SVD,
+    U = Q U_b, and the sampled (d, r) projector write-back.  The batched
+    engine additionally pays the gradient concat for multi-entry buckets.
+    """
+    from repro.core import svd as svd_lib
+
+    total = 0
+    for bk in plan.buckets:
+        d, n, r = bk.d, bk.n, bk.rank
+        k = min(d, pool_factor * r)
+        _, kp, iters = svd_lib.clamp_sketch(d, n, k, oversample, power_iters)
+        dn, dkp, nkp = d * n, d * kp, n * kp
+        per_slice = dn + nkp + dkp  # sketch: G read, omega read, Y write
+        if engine == "batched":
+            # thin QR (Y r/w) + fused step (G read twice, Q read, Y write)
+            per_slice += iters * (2 * dkp + 2 * dn + 2 * dkp)
+        else:
+            # QR(Y) + Z = G^T Q (HBM write) + QR(Z) + Y = G Z
+            per_slice += iters * (2 * dkp + (dn + dkp + nkp)
+                                  + 2 * nkp + (dn + nkp + dkp))
+        per_slice += 2 * dkp  # final QR
+        per_slice += dkp + dn + nkp  # B = Q^T G
+        per_slice += nkp + kp * kp + kp  # small SVD of B
+        per_slice += 2 * dkp + kp * kp  # U = Q @ U_b
+        per_slice += kp + d * r  # spectrum read + sampled projector write
+        hot = [
+            e for e in bk.entries if flat_specs[e.leaf_idx].group == group
+        ]
+        n_slices = sum(e.batch for e in hot)
+        bucket_bytes = n_slices * per_slice
+        # _gather concatenates only when >1 HOT entry stacks (a single
+        # refreshed entry -- e.g. staggered groups -- slices for free)
+        if engine == "batched" and len(hot) > 1:
+            bucket_bytes += 2 * n_slices * dn  # gradient stack concat r/w
+        total += bucket_bytes * itemsize
+    return total

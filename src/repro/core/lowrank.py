@@ -47,6 +47,18 @@ DESIGN.md §2):
     per-leaf layout: ``canonical_opt_state`` / ``storage_opt_state``
     convert losslessly in both directions, so resume and mid-run engine
     switching stay bit-for-bit.
+  * The *refresh* executable is bucket-native too (DESIGN.md §2.6): with
+    ``engine="bucketed"`` and a batchable projector config
+    (``projectors.batched_refresh_supported`` -- SVD-free methods, or
+    dominant/SARA on ``svd_backend="randomized"``), all same-group leaves
+    of a bucket refresh as ONE batched randomized-subspace-iteration chain
+    over their stacked (B, d, n) gradients (batched Gaussian sketch, fused
+    ``kernels/power_iter`` power steps, batched thin QR, one small batched
+    SVD, batched SARA Gumbel-top-k) instead of a per-leaf chain each.
+    Per-slice RNG keys follow the exact per-leaf schedule (fold the global
+    leaf index, split over leading dims), so batched and per-leaf refresh
+    trajectories are bit-identical; ``svd_backend="exact"`` always falls
+    back to the per-leaf loop, keeping paper-faithful runs untouched.
 """
 from __future__ import annotations
 
@@ -103,6 +115,16 @@ class OptimizerConfig:
     # inner optimizers fall back to the reference loop with per-leaf
     # state, so the flag is always safe to enable).
     engine: str = "reference"
+    # Bucket-native batched refresh: with engine="bucketed" (+ bucket-native
+    # state), all same-group entries of a bucket refresh as ONE batched
+    # randomized-subspace-iteration chain over their stacked gradients
+    # (core/buckets.bucketed_refresh + projectors.refresh_projector_stacked)
+    # whenever projectors.batched_refresh_supported covers the config;
+    # svd_backend="exact" always falls back to the per-leaf loop, so
+    # paper-faithful runs are untouched.  False forces the per-leaf loop
+    # everywhere (the two are bit-identical; this knob exists for A/B
+    # benchmarks and bisection).
+    batched_refresh: bool = True
     # aux.update_norm costs an extra W' - W read pass in apply mode; gate
     # it off for pure-throughput runs (benchmarks run with False).
     track_update_norm: bool = True
@@ -445,12 +467,22 @@ def make_lowrank_optimizer(
                         g, lkey, old_p, pcfg, side=spec.side, rank=spec.rank
                     )
 
+                _stacked_fn = None
+                if cfg.batched_refresh and proj_lib.batched_refresh_supported(
+                    pcfg
+                ):
+                    def _stacked_fn(gs, keys, old_ps, rank):
+                        return proj_lib.refresh_projector_stacked(
+                            gs, keys, old_ps, pcfg, rank=rank
+                        )
+
                 new_bucket_states, bucket_overlaps = (
                     buckets_lib.bucketed_refresh(
                         state_layout, state.buckets, flat_specs,
                         flat_grads, subkey, _refresh_fn,
                         group=group % max(cfg.refresh_groups, 1),
                         momentum_carry=cfg.momentum_carry,
+                        stacked_refresh_fn=_stacked_fn,
                     )
                 )
                 overlaps.extend(bucket_overlaps)

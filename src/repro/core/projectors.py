@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import sampling as sampling_lib
 from repro.core import svd as svd_lib
+from repro.kernels.power_iter import ops as power_ops
 
 METHODS = (
     "dominant",
@@ -43,6 +44,25 @@ METHODS = (
     "online_pca",
     "identity",
 )
+
+# Methods whose refresh is SVD-free and therefore always batchable.
+_SVD_FREE_METHODS = frozenset({"identity", "golore", "grass", "online_pca"})
+
+
+def batched_refresh_supported(cfg: "ProjectorConfig") -> bool:
+    """Can ``refresh_projector_stacked`` cover this config?
+
+    The batched-refresh coverage matrix (DESIGN.md §2.6): SVD-free methods
+    always batch; ``dominant``/``sara`` batch only on the ``randomized``
+    backend (one stacked subspace-iteration chain per bucket).  The
+    ``exact`` backend stays on the per-leaf loop -- paper-faithful runs
+    (full ``k = d`` spectra through LAPACK) are untouched.
+    """
+    if cfg.method in _SVD_FREE_METHODS:
+        return True
+    if cfg.method in ("dominant", "sara"):
+        return cfg.svd_backend == "randomized"
+    return False
 
 
 class ProjectorConfig(NamedTuple):
@@ -118,9 +138,10 @@ def _refresh_single(
             return q.astype(cfg.dtype)
         g32 = g2.astype(jnp.float32)
         p32 = prev_p.astype(jnp.float32)
-        # One step of subspace descent on ||G - P P^T G||_F^2, then retraction.
+        # One step of subspace descent on ||G - P P^T G||_F^2, then
+        # retraction.  (G G^T) P is the fused power-iteration primitive.
         step = cfg.online_pca_lr / (jnp.linalg.norm(g32) ** 2 + 1e-12)
-        y = p32 + step * (g32 @ (g32.T @ p32))
+        y = p32 + step * power_ops.power_iter_step(g32, p32)
         q, _ = jnp.linalg.qr(y)
         return q.astype(cfg.dtype)
     # SVD-based methods: dominant (GaLore) & sara.
@@ -145,6 +166,82 @@ def _refresh_single(
     if method == "dominant":
         return u.astype(cfg.dtype)
     p, _ = sampling_lib.sara_select(u, s, rank, key_sample)
+    return p.astype(cfg.dtype)
+
+
+def refresh_projector_stacked(
+    g: jax.Array,
+    keys: jax.Array,
+    prev_p: Optional[jax.Array],
+    cfg: ProjectorConfig,
+    *,
+    rank: int,
+) -> jax.Array:
+    """Refresh a whole (B, d, n) *oriented* gradient stack in one chain.
+
+    The bucket-native refresh engine (core/buckets.bucketed_refresh) calls
+    this once per bucket with every same-group leaf's slices stacked --
+    batched Gaussian sketch, fused power iterations, batched thin QR, one
+    small batched SVD, batched Gumbel-top-k -- instead of a per-leaf chain
+    each.  ``keys`` is the (B,) per-slice key stack the caller derived with
+    the per-leaf schedule (fold the global leaf index, split over leading
+    dims), so every slice is bit-identical to what ``refresh_projector``
+    would produce for its leaf; only the dispatch shape changes.  ``prev_p``
+    is the (B, d, r) slice stack of the outgoing projectors (``online_pca``
+    consumes it; SVD methods ignore it).  Coverage is decided by
+    ``batched_refresh_supported`` -- callers must gate on it.
+
+    Returns a (B, d, rank) stack with orthonormal columns per slice.
+    """
+    bsz, d, _ = g.shape
+    rank = min(rank, d)
+    method = cfg.method
+    if method == "identity":
+        eye = jnp.eye(d, rank, dtype=cfg.dtype)
+        return jnp.broadcast_to(eye, (bsz, d, rank))
+    if method == "golore":
+        z = jax.vmap(
+            lambda kk: jax.random.normal(kk, (d, rank), dtype=jnp.float32)
+        )(keys)
+        q, _ = jnp.linalg.qr(z)
+        return q.astype(cfg.dtype)
+    if method == "grass":
+        row_energy = jnp.sum(g.astype(jnp.float32) ** 2, axis=-1)  # (B, d)
+        idx = sampling_lib.gumbel_topk_indices_batched(row_energy, rank, keys)
+        sel = jax.nn.one_hot(idx, d, dtype=cfg.dtype)  # (B, rank, d)
+        return jnp.swapaxes(sel, -1, -2)
+    if method == "online_pca":
+        if prev_p is None:
+            z = jax.vmap(
+                lambda kk: jax.random.normal(kk, (d, rank), dtype=jnp.float32)
+            )(keys)
+            q, _ = jnp.linalg.qr(z)
+            return q.astype(cfg.dtype)
+        g32 = g.astype(jnp.float32)
+        p32 = prev_p.astype(jnp.float32)
+        norms = jax.vmap(jnp.linalg.norm)(g32)  # per-slice Frobenius
+        step = (cfg.online_pca_lr / (norms**2 + 1e-12))[:, None, None]
+        y = p32 + step * power_ops.power_iter_step(g32, p32)
+        q, _ = jnp.linalg.qr(y)
+        return q.astype(cfg.dtype)
+    if method not in ("dominant", "sara"):
+        raise ValueError(f"unknown projector method {method!r}")
+    if cfg.svd_backend != "randomized":
+        # the coverage matrix (DESIGN.md §2.6): exact stays per-leaf, and
+        # callers gate on batched_refresh_supported before getting here.
+        raise ValueError(
+            f"stacked {method!r} refresh requires svd_backend='randomized'"
+        )
+    k = rank if method == "dominant" else min(d, cfg.sara_pool_factor * rank)
+    split = jax.vmap(jax.random.split)(keys)
+    key_svd, key_sample = split[:, 0], split[:, 1]
+    u, s = svd_lib.randomized_svd_stacked(
+        g, k, key_svd,
+        oversample=cfg.svd_oversample, power_iters=cfg.svd_power_iters,
+    )
+    if method == "dominant":
+        return u.astype(cfg.dtype)
+    p, _ = sampling_lib.sara_select_batched(u, s, rank, key_sample)
     return p.astype(cfg.dtype)
 
 

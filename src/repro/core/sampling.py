@@ -80,6 +80,40 @@ def sara_select(
     return p, idx
 
 
+def gumbel_topk_indices_batched(
+    weights: jax.Array,
+    r: int,
+    keys: jax.Array,
+    *,
+    sort_indices: bool = True,
+) -> jax.Array:
+    """``gumbel_topk_indices`` over a (B, m) weight stack with (B,) keys.
+
+    One batched dispatch chain (batched Gumbel draw + batched top-k) whose
+    slice ``b`` is bit-identical to ``gumbel_topk_indices(weights[b], r,
+    keys[b])`` -- the bucketed refresh engine samples every leaf of a
+    bucket's singular-value stack in one shot.  Returns (B, r) indices.
+    """
+    return jax.vmap(
+        lambda w, k: gumbel_topk_indices(w, r, k, sort_indices=sort_indices)
+    )(weights, keys)
+
+
+def sara_select_batched(
+    u: jax.Array,
+    s: jax.Array,
+    r: int,
+    keys: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """``sara_select`` over stacked (B, d, k) bases / (B, k) spectra.
+
+    Per-slice keys make slice ``b`` bit-identical to ``sara_select(u[b],
+    s[b], r, keys[b])``; the whole stack costs one batched Gumbel top-k and
+    one batched gather.  Returns (P (B, d, r), idx (B, r)).
+    """
+    return jax.vmap(lambda uu, ss, kk: sara_select(uu, ss, r, kk))(u, s, keys)
+
+
 def inclusion_probabilities_mc(
     weights: jax.Array, r: int, key: jax.Array, n_samples: int = 4096
 ) -> jax.Array:

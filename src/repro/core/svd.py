@@ -7,10 +7,31 @@ Two backends:
     mesh with only small-matrix collectives; this is the TPU-native default at
     8B+ scale where an exact SVD of every layer gradient would serialize.
 
+The randomized chain uses the *fused* subspace-iteration form: one thin QR
+per iteration followed by ``Y = G (G^T Q)``, dispatched through
+``kernels/power_iter`` so the (n, k') intermediate ``Z = G^T Q`` lives in
+VMEM on TPU (jnp einsums elsewhere -- identical math).  Per iteration this
+squares the sketch's spectrum exactly like the classical two-QR form; the
+dropped inner re-orthonormalization costs some stability for extreme
+spectra, which the thin QR between iterations bounds (documented
+deviation, traded for halving the QR count and fusing the GEMM pair).
+
+Degenerate shapes are clamped rather than trusted to the caller: ``k`` is
+cut to ``min(m, n)`` (so the returned basis always has exactly the
+promised, orthonormal columns -- never a silently thinner ``u[:, :k]``),
+the sketch width ``k' = k + oversample`` is cut to ``min(m, n)``, and when
+``k'`` already spans the full ``min(m, n)``-dimensional range the power
+iterations are skipped outright: they cannot enlarge a full sketch, and on
+tiny ragged leaves their spectrum-squaring is exactly where fp32 under- /
+overflow would erode orthonormality.
+
 Both return the left singular vectors of ``G`` (``m x k``) and the singular
 values (``k,``), for ``G`` of shape ``(m, n)``.  Callers that need the *right*
 side pass ``G.T``.  Leading batch dims (scanned layer stacks, expert stacks)
-are handled by the ``*_batched`` wrappers via ``vmap``.
+are handled by the ``*_batched`` wrappers via ``vmap``; the bucketed refresh
+engine instead calls ``randomized_svd_stacked`` with an explicit (B, m, n)
+stack and per-slice keys -- same per-slice numerics (bit-for-bit on CPU),
+but ONE batched chain per bucket instead of a chain per leaf.
 """
 from __future__ import annotations
 
@@ -19,6 +40,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.power_iter import ops as power_ops
 
 
 def exact_svd(g: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
@@ -31,6 +54,23 @@ def exact_svd(g: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     return u[:, :k], s[:k]
 
 
+def clamp_sketch(
+    m: int, n: int, k: int, oversample: int, power_iters: int
+) -> Tuple[int, int, int]:
+    """Degenerate-shape guards shared by the per-leaf and stacked chains.
+
+    Returns ``(k, kp, power_iters)`` with ``k <= kp <= min(m, n)`` and the
+    power iterations zeroed when the sketch already spans the full range
+    (tiny ragged leaves: nothing to refine, everything to lose in fp32).
+    """
+    d = min(m, n)
+    k = max(1, min(k, d))
+    kp = min(k + max(oversample, 0), d)
+    if kp >= d:
+        power_iters = 0
+    return k, kp, power_iters
+
+
 def randomized_svd(
     g: jax.Array,
     k: int,
@@ -39,28 +79,64 @@ def randomized_svd(
     oversample: int = 8,
     power_iters: int = 2,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Randomized top-``k`` SVD (HMT 2011).
+    """Randomized top-``k`` SVD (HMT 2011, fused subspace iteration).
 
-    Cost: ~2(q+1) GEMMs of (m,n)x(n,k') + small QR/SVD on (m,k')/(k',n),
-    with k' = k + oversample.  All GEMMs partition cleanly under SPMD when
-    ``g`` is sharded, unlike a full dense SVD.
+    Cost: ~(2 + 2q) GEMMs of (m,n)-by-(n,k') + (q+1) thin QRs + a small SVD
+    on (k', n), with k' = k + oversample.  All GEMMs partition cleanly under
+    SPMD when ``g`` is sharded, unlike a full dense SVD.  Single-slice entry
+    point of the stacked chain below -- identical per-slice numerics.
+    """
+    u, s = randomized_svd_stacked(
+        g.astype(jnp.float32)[None],
+        k,
+        _as_key_stack(key),
+        oversample=oversample,
+        power_iters=power_iters,
+    )
+    return u[0], s[0]
+
+
+def randomized_svd_stacked(
+    g: jax.Array,
+    k: int,
+    keys: jax.Array,
+    *,
+    oversample: int = 8,
+    power_iters: int = 2,
+) -> Tuple[jax.Array, jax.Array]:
+    """One batched randomized-SVD chain over a (B, m, n) gradient stack.
+
+    ``keys``: (B,) per-slice PRNG keys -- the caller derives them exactly as
+    the per-leaf path would (fold the global leaf index, split over leading
+    batch dims), so slice ``b`` draws the SAME Gaussian sketch it would have
+    drawn per-leaf and the two paths stay bit-for-bit.  The whole stack runs
+    as batched GEMMs / thin QRs / one small batched SVD: the dispatched-op
+    count is per-chain, not per-leaf, and the power-iteration GEMM pair goes
+    through ``kernels/power_iter`` (VMEM-resident intermediate on TPU).
+
+    Returns ``(U (B, m, k), S (B, k))``.
     """
     g = g.astype(jnp.float32)
-    m, n = g.shape
-    kp = min(k + oversample, m, n)
-    omega = jax.random.normal(key, (n, kp), dtype=jnp.float32)
-    y = g @ omega  # (m, kp)
+    _, m, n = g.shape
+    k, kp, power_iters = clamp_sketch(m, n, k, oversample, power_iters)
+    omega = jax.vmap(
+        lambda kk: jax.random.normal(kk, (n, kp), dtype=jnp.float32)
+    )(keys)
+    y = jnp.einsum("bmn,bnk->bmk", g, omega)  # (B, m, kp) sketch
     for _ in range(power_iters):
-        # Re-orthonormalize between power iterations for stability.
+        # Thin QR keeps the iteration bounded; the GEMM pair is fused.
         q, _ = jnp.linalg.qr(y)
-        z = g.T @ q  # (n, kp)
-        q2, _ = jnp.linalg.qr(z)
-        y = g @ q2
-    q, _ = jnp.linalg.qr(y)  # (m, kp) orthonormal range basis
-    b = q.T @ g  # (kp, n) small
+        y = power_ops.power_iter_step(g, q)
+    q, _ = jnp.linalg.qr(y)  # (B, m, kp) orthonormal range basis
+    b = jnp.einsum("bmk,bmn->bkn", q, g)  # (B, kp, n) small
     ub, s, _ = jnp.linalg.svd(b, full_matrices=False)
-    u = q @ ub  # (m, kp)
-    return u[:, :k], s[:k]
+    u = jnp.einsum("bmk,bkj->bmj", q, ub)  # (B, m, kp)
+    return u[..., :k], s[..., :k]
+
+
+def _as_key_stack(key: jax.Array) -> jax.Array:
+    """A single PRNG key as a (1,)-stacked key array (old- or new-style)."""
+    return key[None]
 
 
 def topk_svd(

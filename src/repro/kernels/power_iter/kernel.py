@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fused randomized-subspace power-iteration step.
+
+Computes, per batch slice of a stacked gradient bucket,
+
+    Y = G @ (G^T @ Q)          G: (m, n), Q: (m, k'), Y: (m, k')
+
+in ONE dispatch with the (n, k') intermediate ``Z = G^T Q`` held entirely
+in a VMEM scratch: unfused, XLA writes Z to HBM after the first GEMM and
+reads it back for the second -- 2 * n * k' * 4 bytes of pure round-trip
+per power iteration per slice, paid tau' times per refresh.  k' is the
+oversampled sketch width (rank + oversample, or the SARA candidate pool),
+so Z is small in exactly the dimension the refresh iterates over.
+
+Grid: (batch, 2, m_blocks, n_blocks) -- the batch dim is a real grid axis
+(the bucketed refresh engine stacks every same-group leaf of a bucket into
+one (B, m, n) operand, like kernels/lowrank_update), and the phase axis
+sequences the two GEMMs over the SAME VMEM-resident Z:
+
+  * phase 0 sweeps (m, n) blocks accumulating  Z[nb] += G[mb, nb]^T Q[mb];
+  * phase 1 sweeps them again accumulating     Y[mb] += G[mb, nb] Z[nb]
+    into a (bm, k') scratch, emitted at the last n-block.
+
+TPU grid steps run sequentially within a batch slice, so the Z scratch
+computed in phase 0 is complete before phase 1 reads it.  The Y output
+block is revisited across phases; only phase 1's final writes survive.
+Block sizes come from ``compat.pick_block`` (128-multiple divisors), so
+non-divisible m/n fall back to safe whole-dim blocks.  The kernel needs
+n * k' * 4 bytes of scratch for Z -- ops.py falls back to the jnp ref when
+that exceeds its VMEM budget instead of risking a compile-time blow-up.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+
+
+def _power_iter_kernel(
+    g_ref,  # (1, bm, bn)
+    q_ref,  # (1, bm, kp)
+    y_out,  # (1, bm, kp)
+    z_scr,  # VMEM scratch (n, kp) f32
+    y_scr,  # VMEM scratch (bm, kp) f32
+    *,
+    bn: int,
+    nn: int,
+):
+    phase = pl.program_id(1)
+    i_m = pl.program_id(2)
+    i_n = pl.program_id(3)
+
+    @pl.when(phase == 0)
+    def _accumulate_z():
+        part = jax.lax.dot_general(
+            g_ref[0].astype(jnp.float32),
+            q_ref[0].astype(jnp.float32),
+            (((0,), (0,)), ((), ())),  # contract the m (block) dim
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(i_m == 0)
+        def _init():
+            z_scr[pl.ds(i_n * bn, bn), :] = part
+
+        @pl.when(i_m > 0)
+        def _acc():
+            z_scr[pl.ds(i_n * bn, bn), :] += part
+
+    @pl.when(phase == 1)
+    def _emit_y():
+        part = jnp.dot(
+            g_ref[0].astype(jnp.float32),
+            z_scr[pl.ds(i_n * bn, bn), :],
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(i_n == 0)
+        def _init():
+            y_scr[...] = part
+
+        @pl.when(i_n > 0)
+        def _acc():
+            y_scr[...] += part
+
+        @pl.when(i_n == nn - 1)
+        def _write():
+            y_out[0] = y_scr[...].astype(y_out.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def power_iter_batched(
+    g: jax.Array,  # (B, m, n)
+    q: jax.Array,  # (B, m, kp)
+    *,
+    block_m: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = G (G^T Q) per batch slice, one fused dispatch: (B, m, kp) f32."""
+    bsz, m, n = g.shape
+    _, mm, kp = q.shape
+    assert mm == m and q.shape[0] == bsz
+    bm = compat.pick_block(m, block_m)
+    bn = compat.pick_block(n, block_n)
+    nm, nn = m // bm, n // bn
+    grid = (bsz, 2, nm, nn)
+    kernel = functools.partial(_power_iter_kernel, bn=bn, nn=nn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda b, ph, i, j: (b, i, j)),  # G
+            pl.BlockSpec((1, bm, kp), lambda b, ph, i, j: (b, i, 0)),  # Q
+        ],
+        out_specs=pl.BlockSpec((1, bm, kp), lambda b, ph, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, kp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n, kp), jnp.float32),
+            pltpu.VMEM((bm, kp), jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(g, q)

@@ -1,0 +1,52 @@
+"""Backend dispatch for the fused power-iteration step.
+
+Same contract as the other kernel families (lowrank_update, galore_project):
+
+* TPU backend: the Pallas kernel (kernel.py), batch grid dimension included,
+  Z = G^T Q held in VMEM scratch -- no HBM round-trip of the (n, k')
+  intermediate.
+* everywhere else (and when the Z scratch would not fit the VMEM budget):
+  the pure-jnp reference (ref.py) -- identical math, batched einsums, so the
+  stacked refresh keeps its one-dispatch-per-bucket shape on CPU/GPU too.
+
+Callers pass (B, m, n) stacks; a 2-D (m, n) gradient gets a B=1 batch dim
+(the per-leaf randomized SVD uses this entry point too, so per-leaf and
+stacked refreshes run the *same* primitive and stay bit-for-bit).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.power_iter.kernel import power_iter_batched
+from repro.kernels.power_iter.ref import power_iter_ref
+
+# Z scratch budget: (n * k' * 4) bytes must fit comfortably in ~16 MB VMEM
+# next to the G/Q/Y blocks; past this the dispatch falls back to the jnp
+# ref (Z round-trips HBM, but nothing blows up at compile time).
+VMEM_Z_BUDGET_BYTES = 6 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def power_iter_step(
+    g: jax.Array,  # (B, m, n) or (m, n)
+    q: jax.Array,  # (B, m, kp) or (m, kp)
+    *,
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = G (G^T Q) per batch slice (f32)."""
+    squeeze = g.ndim == 2
+    if squeeze:
+        g, q = g[None], q[None]
+    n, kp = g.shape[-1], q.shape[-1]
+    use_kernel = (force_pallas or _on_tpu()) and (
+        n * kp * 4 <= VMEM_Z_BUDGET_BYTES
+    )
+    if use_kernel:
+        out = power_iter_batched(g, q, interpret=interpret or not _on_tpu())
+    else:
+        out = power_iter_ref(g, q)
+    return out[0] if squeeze else out

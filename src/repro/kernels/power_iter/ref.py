@@ -1,0 +1,23 @@
+"""jnp oracle for the fused randomized-subspace power-iteration step.
+
+One subspace-iteration step of the stacked randomized SVD (core/svd.py):
+
+    Y = G @ (G^T @ Q)        per batch slice
+
+``g``: (B, m, n), ``q``: (B, m, k') -> (B, m, k'), f32 accumulation.  XLA
+materializes the (B, n, k') intermediate ``Z = G^T Q`` in HBM between the
+two GEMMs -- exactly the round-trip the Pallas kernel (kernel.py) removes
+by holding Z in VMEM scratch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def power_iter_ref(g: jax.Array, q: jax.Array) -> jax.Array:
+    """Y = G (G^T Q) per batch slice; inputs any float dtype, output f32."""
+    g32 = g.astype(jnp.float32)
+    q32 = q.astype(jnp.float32)
+    z = jnp.einsum("bmn,bmk->bnk", g32, q32)
+    return jnp.einsum("bmn,bnk->bmk", g32, z)

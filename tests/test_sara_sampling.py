@@ -14,6 +14,7 @@ from repro.core.sampling import (
     gumbel_topk_indices,
     inclusion_probabilities_mc,
     sara_select,
+    sara_select_batched,
     sequential_sample_reference,
 )
 
@@ -102,3 +103,32 @@ def test_property_valid_sample(m, r_frac, seed):
 def test_r_greater_than_m_raises():
     with pytest.raises(ValueError):
         gumbel_topk_indices(jnp.ones(4), 5, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# batched sampling (the bucket-native refresh engine's primitives)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 6),
+    k=st.integers(2, 20),
+    r_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_batched_sara_select_bitexact(b, k, r_frac, seed):
+    """Batched sara_select over a (B, k) singular-value stack is
+    bit-for-bit with per-slice sara_select given the same folded keys --
+    the property the batched refresh engine's trajectories rest on."""
+    r = max(1, int(k * r_frac))
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(jax.random.fold_in(key, 1), b)
+    u = jax.random.normal(key, (b, 12, k))
+    s = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (b, k)))
+    p_b, idx_b = sara_select_batched(u, s, r, keys)
+    assert p_b.shape == (b, 12, r) and idx_b.shape == (b, r)
+    for i in range(b):
+        p_i, idx_i = sara_select(u[i], s[i], r, keys[i])
+        np.testing.assert_array_equal(np.asarray(p_b[i]), np.asarray(p_i))
+        np.testing.assert_array_equal(np.asarray(idx_b[i]), np.asarray(idx_i))
