@@ -328,9 +328,80 @@ def refresh_engine_bench() -> List[Row]:
     return rows
 
 
+def dp_compression_bench() -> List[Row]:
+    """Compressed-DP project-then-reduce: modeled per-replica collective
+    bytes and dispatched reduction operands per step, compressed vs
+    standard, on the bench transformer (``core/buckets.dp_comm_model``).
+
+    Wall time is not measured -- a single-host CPU container has no
+    cross-replica wire; the analytic fields are the record
+    (``modeled_collective_bytes`` / ``dispatched_collectives``,
+    regression-gated by ``benchmarks/run.py --check`` like the update and
+    refresh ops).  The ``_lowrank`` pair isolates the bucketed payload,
+    whose byte ratio is exactly d/r (the paper's memory factor applied to
+    DP bandwidth); the full-step records include the full-rank leaves
+    (embed/norm) that reduce uncompressed either way.
+    """
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+
+    L, d_model, rank = 4, 256, 64
+    params, _ = _bench_transformer(L=L, d_model=d_model)
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=rank, engine="bucketed",
+    )
+    is_spec = lambda x: hasattr(x, "lowrank")  # noqa: E731
+    _, treedef = jax.tree_util.tree_flatten(opt.specs, is_leaf=is_spec)
+    flat_params = treedef.flatten_up_to(params)
+    model = buckets_lib.dp_comm_model(opt.bucket_plan, flat_params)
+
+    rows: List[Row] = []
+    base = f"dp/grad_reduce_L{L}_d{d_model}_r{rank}"
+    for sched in ("standard", "compressed_hot", "compressed_refresh"):
+        b, c = model[sched]["bytes"], model[sched]["collectives"]
+        name = f"{base}_{sched}"
+        rows.append((
+            name, 0.0,
+            f"modeled_bytes={b / 1e6:.2f}MB dispatched_collectives={c} "
+            f"tpu_ici={b / hw.ICI_LINK_BW * 1e6:.1f}us",
+        ))
+        common.record(
+            name, 0.0, roofline_us=b / hw.ICI_LINK_BW * 1e6,
+            engine="bucketed", state_layout="bucketed",
+            modeled_collective_bytes=b, dispatched_collectives=c,
+            schedule=sched,
+        )
+    for sched, key in (("standard", "lowrank_bytes_standard"),
+                       ("compressed_hot", "lowrank_bytes_compressed_hot")):
+        b = model[key]
+        name = f"{base}_lowrank_{sched}"
+        rows.append((
+            name, 0.0,
+            f"modeled_bytes={b / 1e6:.2f}MB "
+            f"(lowrank leaves only, d/r={d_model // rank})",
+        ))
+        common.record(
+            name, 0.0, roofline_us=b / hw.ICI_LINK_BW * 1e6,
+            engine="bucketed", state_layout="bucketed",
+            modeled_collective_bytes=b, schedule=sched,
+        )
+    ratio = model["lowrank_compression_ratio"]
+    saving = 1 - (model["compressed_hot"]["bytes"]
+                  / model["standard"]["bytes"])
+    rows.append((
+        "dp/grad_reduce_compression", 0.0,
+        f"lowrank_ratio={ratio:.2f}x (d/r={d_model // rank}) "
+        f"step_saving={100 * saving:.0f}% "
+        f"collectives={model['standard']['collectives']}->"
+        f"{model['compressed_hot']['collectives']}",
+    ))
+    assert abs(ratio - d_model / rank) < 1e-9, ratio
+    return rows
+
+
 def run() -> List[Row]:
     return (
         lowrank_update_bench() + galore_project_bench()
         + attention_bench() + rmsnorm_bench() + update_engine_bench()
-        + refresh_engine_bench()
+        + refresh_engine_bench() + dp_compression_bench()
     )

@@ -14,7 +14,14 @@ import traceback
 
 # Analytic (machine-independent) fields gated by --check; wall_us is
 # deliberately excluded -- CPU container timings are too noisy to gate.
-_CHECK_FIELDS = ("modeled_hbm_bytes", "dispatched_ops")
+# modeled_collective_bytes / dispatched_collectives gate the compressed-DP
+# reduction schedule (dp_compression_bench) exactly like update/refresh ops.
+_CHECK_FIELDS = (
+    "modeled_hbm_bytes",
+    "dispatched_ops",
+    "modeled_collective_bytes",
+    "dispatched_collectives",
+)
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 
 

@@ -133,6 +133,11 @@ class TrainConfig:
     momentum_carry: str = "keep"
     svd_backend: str = "exact"
     microbatch: int = 0  # 0 = no gradient accumulation
+    # Gradient-accumulation partial-sum dtype (anything jnp.dtype accepts).
+    # f32 by default: bf16 partial sums lose low-order bits across
+    # microbatches.  The accumulated gradient is cast back to the param
+    # dtype either way, so both paths hand the optimizer the same dtype.
+    accum_dtype: Any = "float32"
     # fault tolerance
     checkpoint_every: int = 500
     keep_checkpoints: int = 3

@@ -336,6 +336,51 @@ def _scatter_proj(
 # ---------------------------------------------------------------------------
 
 
+def bucketed_project_grads(
+    plan: BucketPlan,
+    bucket_states: Sequence[BucketState],
+    flat_grads: Sequence[jax.Array],
+) -> Tuple[jax.Array, ...]:
+    """Per-bucket batched projection: one ``(B, r, n)`` R-space gradient
+    stack per bucket, straight from the bucket projector buffers.
+
+    This is the distributed project-then-reduce payload: ONE contiguous
+    f32 buffer per bucket to psum instead of a ragged per-leaf tree
+    (kernels/galore_project's batch grid on TPU, batched einsum elsewhere).
+    """
+    return tuple(
+        update_ops.bucketed_project(_gather(bucket, flat_grads),
+                                    bst.projector)
+        for bucket, bst in zip(plan.buckets, bucket_states)
+    )
+
+
+def bucketed_stack_grads(
+    plan: BucketPlan, flat_grads: Sequence[jax.Array]
+) -> Tuple[jax.Array, ...]:
+    """Per-bucket stacked ``(B, d, n)`` FULL gradients (canonical
+    orientation) -- the refresh-step reduce payload; ``bucketed_refresh``
+    and the fused update consume the stacks directly."""
+    return tuple(_gather(bucket, flat_grads) for bucket in plan.buckets)
+
+
+def _unstack_entry(
+    stacked: jax.Array, bucket: Bucket, entry: BucketEntry, template
+) -> jax.Array:
+    """One entry's per-leaf view out of a full-gradient ``(B, d, n)`` stack
+    (orientation restored, leading batch dims reshaped back)."""
+    off = 0
+    for e in bucket.entries:
+        if e.leaf_idx == entry.leaf_idx:
+            break
+        off += e.batch
+    part = stacked[off : off + entry.batch]
+    if entry.side == "right":
+        part = jnp.swapaxes(part, -1, -2)
+    lead = template.projector.shape[:-2]
+    return part.reshape(lead + part.shape[-2:])
+
+
 def bucketed_update(
     plan: BucketPlan,
     cfg,  # OptimizerConfig
@@ -348,6 +393,7 @@ def bucketed_update(
     projected: bool,
     apply: bool,
     track_norm: bool = True,
+    stacked_grads: Optional[Sequence[jax.Array]] = None,
 ) -> Tuple[Dict[int, jax.Array], Tuple[BucketState, ...], List[jax.Array]]:
     """Run every bucket against its *storage-layout* state.
 
@@ -355,6 +401,13 @@ def bucketed_update(
     per_bucket_norm_sq)``.  Moments and projectors are consumed/produced
     in place in the stacked layout -- the only per-step stack/unstack is
     of params and grads (which the model owns per-leaf).
+
+    ``stacked_grads`` (one array per bucket, already in canonical stacked
+    orientation) short-circuits the per-leaf gather: the distributed
+    project-then-reduce path hands the psum'd ``(B, r, n)`` R-space stacks
+    (``projected=True``) or the psum'd full ``(B, d, n)`` stacks (refresh
+    steps) straight to the engine, so compressed gradients never
+    round-trip through per-leaf layout.
 
     ``apply=True`` returns the new parameter leaf (the kernel's W' output);
     ``apply=False`` returns the additive update W' - W.  ``track_norm``
@@ -366,13 +419,15 @@ def bucketed_update(
     out_leaves: Dict[int, jax.Array] = {}
     new_states: List[BucketState] = []
     norm_sq: List[jax.Array] = []
-    for bucket, bst in zip(plan.buckets, bucket_states):
+    for bi, (bucket, bst) in enumerate(zip(plan.buckets, bucket_states)):
         w = _gather(bucket, flat_params)
         p = bst.projector
         if projected:
-            r_g = _gather(bucket, flat_grads)
+            r_g = (stacked_grads[bi] if stacked_grads is not None
+                   else _gather(bucket, flat_grads))
         else:
-            g = _gather(bucket, flat_grads)
+            g = (stacked_grads[bi] if stacked_grads is not None
+                 else _gather(bucket, flat_grads))
             r_g = update_ops.bucketed_project(g, p)
         if cfg.inner == "msgd":
             w_new, m_new = update_ops.bucketed_msgd_update(
@@ -423,6 +478,7 @@ def bucketed_refresh(
     group: int,
     momentum_carry: str,
     stacked_refresh_fn=None,  # (g_stack, keys, old_p_stack, rank) -> stack
+    stacked_grads: Optional[Sequence[jax.Array]] = None,
 ) -> Tuple[Tuple[BucketState, ...], List[jax.Array]]:
     """Refresh the projectors of one static refresh ``group`` directly in
     the bucket stacks.
@@ -445,13 +501,19 @@ def bucketed_refresh(
     non-refreshed slices keep their exact old moments (static selection,
     not a where over approximate C ~= I).
 
+    ``stacked_grads`` (one canonical ``(B, d, n)`` stack per bucket, e.g.
+    the psum'd payload of the compressed-DP refresh step) short-circuits
+    the per-leaf gather: hot-entry gradients are sliced out of the stack
+    instead of re-concatenated from leaves.
+
     Returns (new_bucket_states, per-leaf overlap diagnostics).  Keys fold
     the *global* leaf index, so trajectories are bit-identical with the
     reference engine's per-leaf refresh.
     """
     new_states: List[BucketState] = []
     overlaps: List[jax.Array] = []
-    for bucket, bst in zip(layout.plan.buckets, bucket_states):
+    for bi, (bucket, bst) in enumerate(zip(layout.plan.buckets,
+                                           bucket_states)):
         parts: List[jax.Array] = []
         refreshed: List[bool] = []
         if stacked_refresh_fn is not None:
@@ -461,8 +523,11 @@ def bucketed_refresh(
             ]
             new_slices: Dict[int, jax.Array] = {}
             if hot:
-                g_stack = _gather(bucket._replace(entries=tuple(hot)),
-                                  flat_grads)
+                if stacked_grads is not None:
+                    g_stack = _slice_entries(bucket, stacked_grads[bi], hot)
+                else:
+                    g_stack = _gather(bucket._replace(entries=tuple(hot)),
+                                      flat_grads)
                 old_stack = _slice_entries(bucket, bst.projector, hot)
                 keys = jnp.concatenate([
                     _entry_slice_keys(
@@ -507,9 +572,14 @@ def bucketed_refresh(
                     tmpl = layout.templates[e.leaf_idx].projector
                     old_p = old_slice.reshape(tmpl.shape)
                     lkey = jax.random.fold_in(subkey, e.leaf_idx)
-                    new_p = refresh_fn(
-                        flat_grads[e.leaf_idx], lkey, old_p, spec
-                    )
+                    if stacked_grads is not None:
+                        g_leaf = _unstack_entry(
+                            stacked_grads[bi], bucket, e,
+                            layout.templates[e.leaf_idx],
+                        )
+                    else:
+                        g_leaf = flat_grads[e.leaf_idx]
+                    new_p = refresh_fn(g_leaf, lkey, old_p, spec)
                     # overlap diagnostic (GARD18): ||P_new^T P_old||_F^2 /
                     # r, same per-leaf reduction as the reference path.
                     c = jnp.einsum("...dn,...do->...no", new_p, old_p)
@@ -758,3 +828,71 @@ def modeled_refresh_hbm_bytes(
             bucket_bytes += 2 * n_slices * dn  # gradient stack concat r/w
         total += bucket_bytes * itemsize
     return total
+
+
+# ---------------------------------------------------------------------------
+# DP gradient-reduction accounting (compressed project-then-reduce)
+# ---------------------------------------------------------------------------
+
+
+def dp_comm_model(
+    plan: BucketPlan,
+    flat_params: Sequence,
+) -> Dict[str, Any]:
+    """Modeled per-replica DP gradient-reduction payload per step.
+
+    Three schedules (bytes = per-replica all-reduce operand bytes,
+    collectives = reduction operands dispatched before XLA combining):
+
+    * ``standard``            -- every gradient leaf reduces full-rank,
+      one operand per leaf (what SPMD inserts for the uncompressed step);
+    * ``compressed_hot``      -- low-rank leaves reduce as ONE contiguous
+      f32 ``(B, r, n)`` R-space stack per bucket (project-then-reduce);
+      full-rank leaves unchanged.  The low-rank payload shrinks by exactly
+      d/r per bucket;
+    * ``compressed_refresh``  -- low-rank leaves reduce full-rank but
+      stacked: same bytes as standard, one operand per bucket.
+
+    Full-rank grads count at their param dtype; R-space stacks are f32
+    (what ``bucketed_project`` emits).  Recorded by ``launch/dryrun.py``
+    and regression-gated via ``benchmarks/kernels_micro``'s
+    ``dp_compression_bench``.
+    """
+    rest_bytes = 0
+    n_rest = 0
+    for i, leaf in enumerate(flat_params):
+        if i in plan.bucketed:
+            continue
+        rest_bytes += leaf.size * jnp.dtype(leaf.dtype).itemsize
+        n_rest += 1
+    lowrank_full = 0
+    lowrank_rspace = 0
+    n_lowrank_leaves = 0
+    for bk in plan.buckets:
+        for e in bk.entries:
+            leaf = flat_params[e.leaf_idx]
+            lowrank_full += (
+                e.batch * bk.d * bk.n
+                * jnp.dtype(leaf.dtype).itemsize
+            )
+            n_lowrank_leaves += 1
+        lowrank_rspace += bk.batch * bk.rank * bk.n * 4
+    return {
+        "standard": {
+            "bytes": rest_bytes + lowrank_full,
+            "collectives": n_rest + n_lowrank_leaves,
+        },
+        "compressed_hot": {
+            "bytes": rest_bytes + lowrank_rspace,
+            "collectives": n_rest + len(plan.buckets),
+        },
+        "compressed_refresh": {
+            "bytes": rest_bytes + lowrank_full,
+            "collectives": n_rest + len(plan.buckets),
+        },
+        "lowrank_bytes_standard": lowrank_full,
+        "lowrank_bytes_compressed_hot": lowrank_rspace,
+        "lowrank_compression_ratio": (
+            lowrank_full / lowrank_rspace if lowrank_rspace else 1.0
+        ),
+    }

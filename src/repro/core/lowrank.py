@@ -193,6 +193,25 @@ class LowRankOptState(NamedTuple):
     buckets: Any = ()
 
 
+class StackedGrads(NamedTuple):
+    """Bucket-native gradient layout for the distributed path.
+
+    ``buckets`` holds one contiguous stack per bucket of the optimizer's
+    ``BucketPlan`` (in plan order): f32 ``(B, r, n)`` R-space stacks on
+    the hot project-then-reduce path, or full ``(B, d, n)`` stacks
+    (canonical orientation) on refresh steps.  ``rest`` holds the
+    gradients of every NON-bucketed leaf, in ascending leaf-index order
+    (the indices are static -- ``LowRankOptimizer`` recovers them from its
+    plan).  The whole structure is a pytree of dense arrays, so
+    ``jax.lax.pmean`` over it dispatches exactly ``len(buckets) +
+    len(rest)`` reduction operands -- the fewer, larger collectives the
+    compressed-DP schedule exists for.
+    """
+
+    buckets: Tuple[jax.Array, ...]
+    rest: Tuple[jax.Array, ...]
+
+
 class AuxInfo(NamedTuple):
     """Diagnostics returned by update (all scalars / small)."""
 
@@ -314,6 +333,13 @@ def make_lowrank_optimizer(
                 spec_treedef.flatten_up_to(params_like),
                 inner_name=cfg.inner, projector_dtype=cfg.projector_dtype,
             )
+    # Static leaf indices NOT covered by any bucket -- the ``rest`` order
+    # of ``StackedGrads`` (full-rank leaves; with a bucket-native layout
+    # every low-rank leaf is bucketed).
+    rest_indices: Tuple[int, ...] = tuple(
+        i for i in range(len(flat_specs_static))
+        if bucket_plan is None or i not in bucket_plan.bucketed
+    )
 
     def init(params: PyTree) -> LowRankOptState:
         def leaf_init(spec: LeafSpec, p: jax.Array) -> LeafState:
@@ -414,6 +440,14 @@ def make_lowrank_optimizer(
         traffic by ~d/r.  Incompatible with refresh (SVD needs full G) and
         with Fira (the residual needs full G).
 
+        ``grads`` may also be a ``StackedGrads`` (bucket-native optimizers
+        only): per-bucket ``(B, r, n)`` R-space stacks with
+        ``projected=True`` (the hot project-then-reduce payload,
+        ``project_grads_stacked``), or per-bucket full ``(B, d, n)``
+        stacks with ``refresh=True`` (``stack_grads``).  Either way the
+        stacks feed the fused engine directly -- compressed gradients
+        never round-trip through per-leaf layout.
+
         ``apply=True``: return NEW PARAMS instead of updates -- the fused
         kernels of the bucketed engine emit W' directly, so no full-space
         update pytree is ever materialized and the separate
@@ -424,6 +458,27 @@ def make_lowrank_optimizer(
             raise ValueError("projected gradients cannot drive a refresh step")
         if projected and cfg.fira:
             raise ValueError("Fira needs full-rank grads (residual term)")
+        stacked_in = isinstance(grads, StackedGrads)
+        if stacked_in:
+            if state_layout is None:
+                raise ValueError(
+                    "StackedGrads need a bucket-native optimizer "
+                    "(engine='bucketed' with a fused inner, no Fira)"
+                )
+            if not (projected or refresh):
+                raise ValueError(
+                    "StackedGrads hold R-space stacks (projected=True) or "
+                    "full-rank refresh stacks (refresh=True); a plain hot "
+                    "step takes the per-leaf gradient tree"
+                )
+            if (len(grads.buckets) != len(bucket_plan.buckets)
+                    or len(grads.rest) != len(rest_indices)):
+                raise ValueError(
+                    "StackedGrads shape mismatch: expected "
+                    f"{len(bucket_plan.buckets)} bucket stacks + "
+                    f"{len(rest_indices)} rest leaves, got "
+                    f"{len(grads.buckets)} + {len(grads.rest)}"
+                )
         step = state.step + 1  # 1-indexed for bias correction
         lr = _lr_at(state.step)
 
@@ -440,7 +495,16 @@ def make_lowrank_optimizer(
 
         flat_specs = flat_specs_static
         flat_states = spec_treedef.flatten_up_to(state.leaves)
-        flat_grads = spec_treedef.flatten_up_to(grads)
+        if stacked_in:
+            # bucketed leaves live in ``grads.buckets``; their per-leaf
+            # slots stay None (the fused engine never reads them).
+            flat_grads = [None] * len(flat_specs)
+            for j, i in enumerate(rest_indices):
+                flat_grads[i] = grads.rest[j]
+            stacked_grads = grads.buckets
+        else:
+            flat_grads = spec_treedef.flatten_up_to(grads)
+            stacked_grads = None
         flat_params = spec_treedef.flatten_up_to(params)
 
         overlaps = []
@@ -483,6 +547,7 @@ def make_lowrank_optimizer(
                         group=group % max(cfg.refresh_groups, 1),
                         momentum_carry=cfg.momentum_carry,
                         stacked_refresh_fn=_stacked_fn,
+                        stacked_grads=stacked_grads,
                     )
                 )
                 overlaps.extend(bucket_overlaps)
@@ -491,6 +556,7 @@ def make_lowrank_optimizer(
                     bucket_plan, cfg, new_bucket_states, flat_grads,
                     flat_params, step, lr, projected=projected, apply=apply,
                     track_norm=cfg.track_update_norm,
+                    stacked_grads=stacked_grads,
                 )
             )
 
@@ -616,6 +682,70 @@ def project_grads(
         else:
             out.append(g)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _flatten_for_buckets(optimizer: "LowRankOptimizer", grads: PyTree):
+    """(flat_grads, rest tuple) in the optimizer's static leaf order."""
+    is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
+    _, treedef = jax.tree_util.tree_flatten(optimizer.specs, is_leaf=is_spec)
+    flat_grads = treedef.flatten_up_to(grads)
+    bucketed = optimizer.bucket_plan.bucketed
+    rest = tuple(
+        g for i, g in enumerate(flat_grads) if i not in bucketed
+    )
+    return flat_grads, rest
+
+
+def _require_bucket_native(optimizer: "LowRankOptimizer", what: str):
+    if optimizer.state_layout is None:
+        raise ValueError(
+            f"{what} needs a bucket-native optimizer (engine='bucketed' "
+            "with a fused inner, no Fira); the reference engine uses the "
+            "per-leaf project_grads path"
+        )
+
+
+def project_grads_stacked(
+    optimizer: "LowRankOptimizer", grads: PyTree, state: LowRankOptState
+) -> StackedGrads:
+    """Bucket-native project-then-reduce payload: one batched ``P^T G``
+    per bucket, producing f32 ``(B, r, n)`` R-space stacks straight from
+    the bucket projector buffers (kernels/galore_project's batch grid on
+    TPU, batched einsum elsewhere).
+
+    The distributed path psums the returned structure -- ONE contiguous
+    operand per bucket plus the full-rank leaves -- then hands it to
+    ``optimizer.update(..., projected=True)`` unchanged: R-space
+    gradients never round-trip through per-leaf layout.  By linearity
+    psum(P^T G_local) == P^T psum(G_local) since P is replicated.
+    """
+    _require_bucket_native(optimizer, "project_grads_stacked")
+    if not state.buckets:
+        raise ValueError(
+            "bucket-native optimizer got a canonical per-leaf state; "
+            "convert with storage_opt_state(optimizer, state)"
+        )
+    flat_grads, rest = _flatten_for_buckets(optimizer, grads)
+    stacks = buckets_lib.bucketed_project_grads(
+        optimizer.state_layout.plan, state.buckets, flat_grads
+    )
+    return StackedGrads(buckets=stacks, rest=rest)
+
+
+def stack_grads(optimizer: "LowRankOptimizer", grads: PyTree) -> StackedGrads:
+    """Full-rank gradients in bucket-native layout: one ``(B, d, n)``
+    stack per bucket (canonical orientation) plus the non-bucketed
+    leaves.  The compressed-DP refresh step psums this form -- same bytes
+    as the per-leaf tree, one operand per bucket -- and
+    ``optimizer.update(..., refresh=True)`` consumes the stacks directly
+    (``bucketed_refresh`` slices hot entries out instead of
+    re-concatenating leaves)."""
+    _require_bucket_native(optimizer, "stack_grads")
+    flat_grads, rest = _flatten_for_buckets(optimizer, grads)
+    stacks = buckets_lib.bucketed_stack_grads(
+        optimizer.state_layout.plan, flat_grads
+    )
+    return StackedGrads(buckets=stacks, rest=rest)
 
 
 # ---------------------------------------------------------------------------

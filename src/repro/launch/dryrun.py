@@ -114,6 +114,25 @@ def _build_cell(arch: str, shape_name: str, args, mesh=None):
     return out
 
 
+def _dp_comm_model(cell) -> dict:
+    """Modeled per-replica DP gradient-reduction bytes/collectives for the
+    three reduction schedules of this train cell's optimizer (the
+    bucket plan is rebuilt for accounting when the optimizer runs the
+    reference engine)."""
+    from repro.core import buckets as buckets_lib
+
+    opt = cell["opt"]
+    is_spec = lambda x: hasattr(x, "lowrank")  # noqa: E731
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        opt.specs, is_leaf=is_spec
+    )
+    flat_params = treedef.flatten_up_to(cell["params_shape"])
+    plan = opt.bucket_plan or buckets_lib.build_bucket_plan(
+        flat_specs, flat_params
+    )
+    return buckets_lib.dp_comm_model(plan, flat_params)
+
+
 def _compile_cell(cell, mesh, args):
     from repro.launch import sharding as shd
 
@@ -211,6 +230,14 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, args) -> dict:
     mb = ra.model_bytes(cfg, shape, cell["total_params"])
     corrections = ra.scan_corrections(cfg, shape)
     corrections["layer_scan"] = layer_corr
+    # Modeled DP gradient-reduction payload (core/buckets.dp_comm_model):
+    # the compressed project-then-reduce schedule's ~d/r traffic saving as
+    # a recorded number next to the HLO-measured collective bytes, for all
+    # three schedules (standard / compressed hot / compressed refresh).
+    dp_comm = None
+    if shape.kind == "train":
+        dp_comm = _dp_comm_model(cell)
+        dp_comm["requested_mode"] = getattr(args, "compressed_dp", "") or ""
     report = ra.analyze(
         compiled,
         arch=arch, shape=shape_name, mesh_name=mesh_name, n_chips=n_chips,
@@ -226,6 +253,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, args) -> dict:
             "variant": args.variant,
             "n_micro": n_micro,
             "collective_bytes_body_corrected": c1 + body_c * (layers - 1),
+            "dp_comm_model": dp_comm,
         },
     )
     # Collectives inside the layer loop are also single-counted in the HLO

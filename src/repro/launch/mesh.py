@@ -38,10 +38,29 @@ def batch_axes(mesh) -> Tuple[str, ...]:
 def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names):
     """``jax.shard_map`` across jax generations.
 
-    New jax: top-level ``jax.shard_map(..., axis_names=..., check_vma=...)``.
-    Old jax (<= 0.4.x): ``jax.experimental.shard_map.shard_map`` with the
-    manual/auto split expressed through ``auto`` (complement of the manual
-    ``axis_names``) and replication checking via ``check_rep``.
+    New jax: top-level ``jax.shard_map(..., axis_names=..., check_vma=...)``
+    -- partial-auto is first-class, so axes outside ``axis_names`` stay
+    auto/SPMD (TP keeps its sharding inside the region).
+
+    Old jax (<= 0.4.x): ``jax.experimental.shard_map.shard_map``.  The
+    legacy ``auto=...`` partial-auto surface CANNOT lower regions whose
+    auto axes carry real shardings -- XLA's SPMD partitioner dies on a
+    ``CHECK failed: sharding.IsManualSubgroup()`` as soon as an auto-axis
+    (TP) sharded operand appears inside the manual region.  So on old jax
+    every mesh axis goes MANUAL instead: the specs keep naming only the
+    requested ``axis_names``, spec-unmentioned axes mean replicated, so
+    EVERY would-be-auto axis's sharding is gathered at region entry and
+    its dimension computed redundantly per rank -- identical replicated
+    operands produce identical outputs, which is exactly what
+    ``out_specs`` promising replication needs.  That covers TP
+    (``model``) always, and in ``compressed='pod'`` mode also the
+    intra-pod ``data`` axis: each data rank redoes the whole per-pod
+    fwd+bwd (a data-way step-FLOP multiplier on this fallback -- the
+    hierarchical mode keeps only its bandwidth win on old jax).
+    Correctness-first: the memory/compute redundancy is the price of a
+    *working* lowering on the legacy surface; new jax takes the
+    partial-auto fast path above.  Callers that already request every
+    axis manual (e.g. the MoE EP region) are unaffected.
     """
     if hasattr(jax, "shard_map"):
         return jax.shard_map(
@@ -50,8 +69,7 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names):
         )
     from jax.experimental.shard_map import shard_map as _sm
 
-    auto = frozenset(mesh.axis_names) - set(axis_names)
     return _sm(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False, auto=auto,
+        check_rep=False,
     )

@@ -177,6 +177,29 @@ def chunked_cross_entropy(
 # ---------------------------------------------------------------------------
 
 
+def manual_axis_names(mesh) -> set:
+    """Mesh axes MANUAL in the current trace context -- i.e. we are inside
+    a ``shard_map`` body over them (e.g. the compressed-DP step, fully
+    manual on old jax).  Manual axes must not be named in sharding
+    constraints: placement over them is already pinned by the enclosing
+    shard_map, and naming one raises at lowering time.
+
+    The trace-context axis env also lists vmap/pmap ``axis_name``
+    bindings, which are not mesh axes and must not suppress constraints:
+    an axis counts as manual only if its name AND bound size match the
+    mesh axis (shard_map always binds the mesh extent).  A vmap axis
+    colliding in both would merely skip the constraint -- a lost layout
+    hint, never wrong numerics -- and no such binding exists in-tree."""
+    try:
+        bound = dict(jax.core.trace_ctx.axis_env.axis_sizes)
+    except Exception:  # axis-env introspection moved; constraints still
+        return set()   # have the call-site try/except as a backstop
+    return {
+        name for name, size in bound.items()
+        if name in mesh.axis_names and size == mesh.shape[name]
+    }
+
+
 def shard_activations(x: jax.Array, cfg=None) -> jax.Array:
     """Annotate activation sharding at block boundaries (no-op off-mesh).
 
@@ -185,6 +208,9 @@ def shard_activations(x: jax.Array, cfg=None) -> jax.Array:
     ``model`` -- the remat-saved layer-boundary activations then cost 1/TP
     the memory, at the price of per-layer all-gathers entering attention
     (the Megatron-SP trade; measured in EXPERIMENTS.md §Perf).
+
+    Axes that are manual in the current trace context are skipped: inside
+    a shard_map region only the still-auto axes can be constrained.
     """
     from jax.sharding import PartitionSpec as P
     from jax.interpreters import pxla
@@ -192,7 +218,11 @@ def shard_activations(x: jax.Array, cfg=None) -> jax.Array:
     mesh = pxla.thread_resources.env.physical_mesh
     if mesh.empty or mesh.size == 1:
         return x
-    axes = [n for n in ("pod", "data") if n in mesh.axis_names]
+    manual = manual_axis_names(mesh)
+    axes = [
+        n for n in ("pod", "data")
+        if n in mesh.axis_names and n not in manual
+    ]
     if not axes:
         return x
     batch_axes = tuple(axes) if len(axes) > 1 else axes[0]
@@ -207,6 +237,7 @@ def shard_activations(x: jax.Array, cfg=None) -> jax.Array:
         and getattr(cfg, "seq_shard_activations", False)
         and x.ndim >= 3
         and "model" in mesh.axis_names
+        and "model" not in manual
         and x.shape[1] % mesh.shape["model"] == 0
         and x.shape[1] >= 2 * mesh.shape["model"]
     ):

@@ -166,21 +166,32 @@ def _shard_ssm_heads(x: jax.Array, cfg: ModelConfig, head_axis: int):
     from jax.sharding import PartitionSpec as P
     from jax.interpreters import pxla
 
+    from repro.models.layers import manual_axis_names
+
     mesh = pxla.thread_resources.env.physical_mesh
     if mesh.empty or "model" not in mesh.axis_names:
+        return x
+    manual = manual_axis_names(mesh)
+    if "model" in manual:
         return x
     n = mesh.shape["model"]
     if x.shape[head_axis] % n != 0:
         return x
     spec = [None] * x.ndim
     spec[head_axis] = "model"
-    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp = [a for a in ("pod", "data")
+          if a in mesh.axis_names and a not in manual]
     total = 1
     for a in dp:
         total *= mesh.shape[a]
-    if x.shape[0] % total == 0 and x.shape[0] >= total:
+    if dp and x.shape[0] % total == 0 and x.shape[0] >= total:
         spec[0] = tuple(dp) if len(dp) > 1 else dp[0]
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except ValueError:
+        # inside a manual region whose axes the introspection missed --
+        # placement is already pinned by the enclosing shard_map; skip.
+        return x
 
 
 def apply_ssm_mixer(

@@ -7,11 +7,15 @@ Two training-step flavors:
   TP over ``model``, DP over ``pod``+``data``).
 
 * ``compressed`` -- the beyond-paper *project-then-reduce* schedule: the step
-  is a ``shard_map`` manual over the DP axes (``model`` stays auto/SPMD).
-  Per-shard gradients of low-rank leaves are projected to R-space (r x n)
-  BEFORE the cross-replica mean, shrinking DP gradient traffic by ~d/r on
-  every non-refresh step (exact by linearity; P is replicated).  Refresh
-  steps (1/tau of steps) reduce full-rank and recompute projectors.
+  is a ``shard_map`` manual over the DP axes (``model`` stays auto/SPMD on
+  new jax; old jax lowers the region fully manual -- see
+  ``launch/mesh.shard_map_compat``).  Per-shard gradients of low-rank
+  leaves are projected to R-space BEFORE the cross-replica mean, shrinking
+  DP gradient traffic by ~d/r on every non-refresh step (exact by
+  linearity; P is replicated).  With a bucket-native optimizer the
+  reduction payload is bucket-native too (DESIGN.md §2.7): ONE contiguous
+  f32 (B, r, n) stack per bucket hot, one (B, d, n) full stack per bucket
+  on refresh steps (which recompute projectors from the reduced stacks).
   In this mode params are NOT FSDP-sharded over the DP axes (they must be
   replica-identical inside the manual region); memory-for-bandwidth trade
   documented in EXPERIMENTS.md §Perf.
@@ -47,8 +51,18 @@ from repro.train.state import TrainState
 PyTree = Any
 
 
-def _value_and_grad(model: Model, microbatch: int):
-    """(params, batch) -> ((loss, metrics), grads), with optional accum."""
+def _value_and_grad(model: Model, microbatch: int, accum_dtype=jnp.float32):
+    """(params, batch) -> ((loss, metrics), grads), with optional accum.
+
+    Accumulation sums per-microbatch gradients in ``accum_dtype``
+    (``TrainConfig.accum_dtype``, f32 by default -- bf16 partial sums lose
+    low-order bits across many microbatches) and returns them cast back to
+    the parameter dtype, matching the non-accumulated path.  The global
+    batch must divide evenly into microbatches: a silent floor-division
+    reshape would drop the trailing samples.  ``microbatch >= batch`` is
+    the lossless degenerate case (one microbatch, no accumulation) and
+    stays allowed -- a production microbatch meeting a smoke-sized batch.
+    """
 
     def single(params, batch):
         return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
@@ -56,22 +70,39 @@ def _value_and_grad(model: Model, microbatch: int):
     if microbatch <= 0:
         return single
 
+    acc_dt = jnp.dtype(accum_dtype)
+
     def accumulated(params, batch):
         gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
-        n_micro = max(gb // microbatch, 1)
+        if microbatch >= gb:
+            # a production microbatch meeting a smaller (smoke) batch:
+            # one microbatch holds the whole batch -- unaccumulated,
+            # lossless (the pre-fix clamp, kept on purpose).
+            n_micro, mb_size = 1, gb
+        elif gb % microbatch != 0:
+            raise ValueError(
+                f"global batch {gb} is not divisible by microbatch "
+                f"{microbatch}: {gb % microbatch} trailing samples would "
+                "be silently dropped -- pick a microbatch that divides "
+                "the batch"
+            )
+        else:
+            n_micro, mb_size = gb // microbatch, microbatch
         mb = jax.tree_util.tree_map(
-            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+            lambda x: x.reshape((n_micro, mb_size) + x.shape[1:]),
             batch,
         )
 
         def body(carry, micro):
             (loss_sum, grads_sum) = carry
             (loss, metrics), grads = single(params, micro)
-            grads_sum = jax.tree_util.tree_map(jnp.add, grads_sum, grads)
+            grads_sum = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dt), grads_sum, grads
+            )
             return (loss_sum + loss, grads_sum), metrics
 
         zeros = jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params
+            lambda p: jnp.zeros(p.shape, acc_dt), params
         )
         # rolled scan: the point of accumulation is the activation-memory
         # saving; the dry-run corrects the while-body cost undercount with
@@ -79,7 +110,9 @@ def _value_and_grad(model: Model, microbatch: int):
         (loss_sum, grads_sum), metrics = jax.lax.scan(
             body, (jnp.zeros(()), zeros), mb
         )
-        grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads_sum)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: (g / n_micro).astype(p.dtype), grads_sum, params
+        )
         last_metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
         return (loss_sum / n_micro, last_metrics), grads
 
@@ -98,9 +131,34 @@ def make_train_step(
     """Returns {'step': f(state, batch), 'refresh_step': f, 'jit_*': jitted}.
 
     The jitted versions carry in/out shardings when a mesh is given.
+
+    ``compressed`` selects the project-then-reduce schedule: ``False``/''
+    disables it, ``True`` is normalized to ``"flat"`` (all DP axes
+    manual), ``"pod"`` compresses only the inter-pod axis.  Anything else
+    raises immediately -- a typo like ``"pods"`` must not silently fall
+    through to the flat-DP axis set.  The normalized mode is surfaced as
+    ``fns["compressed_mode"]``.
     """
+    # normalize the legacy bool form in ONE place, validate early
+    compressed = "flat" if compressed is True else (compressed or "")
+    if compressed not in ("", "flat", "pod"):
+        raise ValueError(
+            f"unknown compressed mode {compressed!r}: expected "
+            "False/''/True/'flat'/'pod'"
+        )
+    if compressed and mesh is None:
+        raise ValueError(
+            f"compressed={compressed!r} needs a mesh (the project-then-"
+            "reduce schedule is a shard_map over the DP axes)"
+        )
+    if compressed == "pod" and "pod" not in mesh.axis_names:
+        raise ValueError(
+            "'pod' compression needs a pod axis; mesh has "
+            f"{mesh.axis_names}"
+        )
     micro = train_cfg.microbatch if train_cfg else 0
-    vg = _value_and_grad(model, micro)
+    accum_dtype = getattr(train_cfg, "accum_dtype", jnp.float32) or jnp.float32
+    vg = _value_and_grad(model, micro, accum_dtype)
 
     def step_fn(state: TrainState, batch, *, refresh: bool, group: int = 0):
         (loss, metrics), grads = vg(state.params, batch)
@@ -128,16 +186,8 @@ def make_train_step(
         # FSDP/TP over (data, model) stay fully auto inside each pod.  This
         # is the hierarchical schedule the flat-compressed experiments showed
         # is needed at scale (EXPERIMENTS.md §Perf cell 3).
-        if compressed == "pod":
-            dp = tuple(a for a in ("pod",) if a in mesh.axis_names)
-            if not dp:
-                raise ValueError("'pod' compression needs a pod axis")
-        else:
-            dp = batch_axes(mesh)
-        nrep = 1
-        for a in dp:
-            nrep *= mesh.shape[a]
-
+        # the pod axis is validated at build time in make_train_step
+        dp = ("pod",) if compressed == "pod" else batch_axes(mesh)
         if compressed == "pod":
             # manual only over 'pod': dim0 splits across pods; the intra-pod
             # data sharding of the per-pod view stays auto.
@@ -151,18 +201,37 @@ def make_train_step(
                 lambda x: shd.batch_spec(x.shape, mesh), batch
             )
 
+        # Bucket-native optimizers reduce in the stacked layout: ONE
+        # contiguous buffer per bucket crosses the wire (plus the
+        # full-rank leaves) instead of a ragged per-leaf tree -- fewer,
+        # larger collectives for both 'flat' and 'pod' modes.  The
+        # reference engine keeps the per-leaf project_grads path.
+        stacked = optimizer.state_layout is not None
+
         def shard_body(state, batch):
             (loss, metrics), grads = vg(state.params, batch)
             if refresh:
+                if stacked:
+                    # full-rank (B, d, n) stacks: same bytes as the leaf
+                    # tree, one psum operand per bucket; the bucketed
+                    # refresh engine consumes the reduced stacks directly.
+                    grads = lowrank_lib.stack_grads(optimizer, grads)
                 grads = jax.lax.pmean(grads, dp)
                 params, opt_state, aux = optimizer.update(
                     grads, state.opt_state, state.params,
                     refresh=True, group=group, apply=True,
                 )
             else:
-                rgrads = lowrank_lib.project_grads(
-                    optimizer, grads, state.opt_state
-                )
+                if stacked:
+                    # batched P^T G per bucket: f32 (B, r, n) stacks, ~d/r
+                    # less DP traffic, straight from the projector buffers.
+                    rgrads = lowrank_lib.project_grads_stacked(
+                        optimizer, grads, state.opt_state
+                    )
+                else:
+                    rgrads = lowrank_lib.project_grads(
+                        optimizer, grads, state.opt_state
+                    )
                 rgrads = jax.lax.pmean(rgrads, dp)
                 # projected R-space grads feed the bucketed engine too: the
                 # per-bucket projection stage is skipped, only the fused
@@ -189,7 +258,6 @@ def make_train_step(
         )(state, batch)
 
     base = compressed_step_fn if compressed else step_fn
-    # normalize legacy bool
 
     fns = {
         "step": functools.partial(base, refresh=False),
@@ -213,6 +281,10 @@ def make_train_step(
     fns["engine"] = optimizer.config.engine
     fns["bucket_plan"] = optimizer.bucket_plan
     fns["state_layout"] = optimizer.state_layout
+    # The normalized project-then-reduce mode ('' | 'flat' | 'pod') --
+    # launchers/benchmarks report what actually compiled, not the raw
+    # legacy-bool kwarg.
+    fns["compressed_mode"] = compressed
     return fns
 
 

@@ -14,14 +14,6 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-# Old jax (<= 0.4.x, no top-level jax.shard_map): partial-auto shard_map
-# lowers through the legacy experimental surface and XLA's
-# ``IsManualSubgroup`` check rejects the compressed-DP step on CPU meshes.
-# Tracked in ROADMAP.md ("Old-jax partial-auto shard_map" /
-# ``IsManualSubgroup`` entry); the API rename itself is shimmed by
-# ``launch/mesh.shard_map_compat``.
-OLD_JAX_SHARD_MAP = not hasattr(jax, "shard_map")
-
 
 def run_sub(body: str, timeout=420):
     code = textwrap.dedent(
@@ -75,13 +67,11 @@ def test_sharded_train_step_runs_and_matches_single_device():
     assert "OK" in out
 
 
-@pytest.mark.xfail(
-    OLD_JAX_SHARD_MAP,
-    strict=False,
-    reason="old-jax partial-auto shard_map hits XLA IsManualSubgroup on "
-           "CPU meshes (ROADMAP.md IsManualSubgroup entry)",
-)
 def test_compressed_dp_equals_standard():
+    # On old jax (no top-level jax.shard_map) this exercises
+    # shard_map_compat's FULLY-MANUAL fallback lowering -- the legacy
+    # partial-auto surface dies in XLA's IsManualSubgroup check; see
+    # launch/mesh.py.  On new jax it takes the partial-auto fast path.
     out = run_sub("""
     cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32,
                                                     n_layers=2)
@@ -219,6 +209,202 @@ def test_production_mesh_shapes():
     assert batch_axes(m) == ("data",)
     m3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
     assert batch_axes(m3) == ("pod", "data")
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_parity_matrix_bucketed():
+    """ISSUE 4 matrix: engine=bucketed x mode {flat, pod} x {hot, refresh}
+    on a 4-device mesh, fp32.
+
+    Two claims per cell:
+    * the stacked (bucket-native) reduction is BIT-FOR-BIT with the
+      per-leaf reference-engine reduction -- psum is elementwise, so
+      reducing one (B, r, n)/(B, d, n) stack per bucket must change
+      nothing vs reducing the ragged leaf tree;
+    * vs the UNCOMPRESSED step the hot cell agrees to 1e-5 (reduction
+      order differs at fp32 last-bit), and the refresh cell to 1e-3 --
+      the randomized-SVD + Gumbel-top-k chain squares the spectrum and
+      amplifies those last-bit gradient differences.
+    """
+    out = run_sub("""
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32,
+                                                    n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_train_batch(cfg, 8, 32)
+
+    def maxdiff(a, b):
+        return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+            jax.tree_util.tree_leaves(a.params),
+            jax.tree_util.tree_leaves(b.params)))
+
+    kw = dict(rank=8, tau=5, lr=1e-3, svd_backend="randomized")
+    for mode, mesh_shape, axes in (
+        ("flat", (2, 2), ("data", "model")),
+        ("pod", (2, 2, 1), ("pod", "data", "model")),
+    ):
+        mesh = make_mesh(mesh_shape, axes)
+        opt_b = make_optimizer("galore-sara-adam", params,
+                               engine="bucketed", **kw)
+        opt_r = make_optimizer("galore-sara-adam", params,
+                               engine="reference", **kw)
+        assert opt_b.state_layout is not None  # stacked psum payload
+        with mesh:
+            st_b, _ = shard_train_state(
+                TrainState(params, opt_b.init(params)), mesh)
+            st_r, _ = shard_train_state(
+                TrainState(params, opt_r.init(params)), mesh)
+            bsh = jax.device_put(batch, shd.batch_shardings(batch, mesh))
+            fstd = make_train_step(model, opt_b, mesh=mesh, donate=False)
+            fcmp = make_train_step(model, opt_b, mesh=mesh,
+                                   compressed=mode, donate=False)
+            fref = make_train_step(model, opt_r, mesh=mesh,
+                                   compressed=mode, donate=False)
+            assert fcmp["compressed_mode"] == mode
+            for kind, tol in (("jit_step", 1e-5),
+                              ("jit_refresh_step", 1e-3)):
+                s_cmp, _ = fcmp[kind](st_b, bsh)
+                s_ref, _ = fref[kind](st_r, bsh)
+                d_bit = maxdiff(s_cmp, s_ref)
+                assert d_bit == 0.0, (mode, kind, d_bit)
+                s_std, _ = fstd[kind](st_b, bsh)
+                d_std = maxdiff(s_cmp, s_std)
+                assert d_std < tol, (mode, kind, d_std)
+                print("cell", mode, kind, d_bit, d_std)
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_resume_crosses_engines(tmp_path):
+    """A checkpoint written mid-run by the compressed bucketed path resumes
+    under the uncompressed reference engine (canonical layout on disk) and
+    training continues within the per-step DP tolerance."""
+    ckpt = str(tmp_path / "cross")
+    out = run_sub(f"""
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.state import checkpoint_converters
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32,
+                                                    n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_train_batch(cfg, 8, 32)
+    mesh = make_mesh((2, 2))
+
+    def maxdiff(a, b):
+        return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+            jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+    kw = dict(rank=8, tau=5, lr=1e-3, svd_backend="randomized")
+    opt_b = make_optimizer("galore-sara-adam", params, engine="bucketed",
+                           **kw)
+    opt_r = make_optimizer("galore-sara-adam", params, engine="reference",
+                           **kw)
+    with mesh:
+        bsh = jax.device_put(batch, shd.batch_shardings(batch, mesh))
+        # compressed bucketed run: refresh + hot step, then checkpoint
+        st, _ = shard_train_state(TrainState(params, opt_b.init(params)),
+                                  mesh)
+        fcmp = make_train_step(model, opt_b, mesh=mesh, compressed="flat",
+                               donate=False)
+        s, _ = fcmp["jit_refresh_step"](st, bsh)
+        s, _ = fcmp["jit_step"](s, bsh)
+        can, loc = checkpoint_converters(opt_b)
+        mgr = CheckpointManager({ckpt!r}, keep=1, canonicalize=can,
+                                localize=loc)
+        mgr.save(s, 2)
+        # resume A: UNCOMPRESSED under the reference engine (canonical
+        # layout on disk loads without conversion)
+        skel_r = TrainState(params, opt_r.init(params))
+        res_r = CheckpointManager({ckpt!r}, keep=1).load(
+            skel_r, shardings=shd.tree_shardings(skel_r, mesh))
+        # the checkpointed params resume bit-for-bit
+        d0 = maxdiff(res_r.params, s.params)
+        assert d0 == 0.0, d0
+        fstd = make_train_step(model, opt_r, mesh=mesh, donate=False)
+        cA, _ = fstd["jit_step"](res_r, bsh)
+        # resume B: COMPRESSED bucketed again (localize converts back to
+        # the storage layout)
+        skel_b = TrainState(params, opt_b.init(params))
+        res_b = mgr.load(skel_b)  # localize -> storage layout
+        cB, _ = fcmp["jit_step"](res_b, bsh)
+        # one hot step after the crossing: compressed vs uncompressed
+        # continuations agree to the hot-step DP tolerance
+        d1 = maxdiff(cA.params, cB.params)
+        assert d1 < 1e-5, d1
+    print("OK", d0, d1)
+    """)
+    assert "OK" in out
+
+
+def test_compressed_step_psums_one_operand_per_bucket():
+    """jaxpr verification of the ISSUE 4 acceptance criterion: the
+    compressed step's DP reduction carries ONE contiguous operand per
+    bucket -- (B, r, n) R-space stacks hot, (B, d, n) full stacks on
+    refresh -- and NO per-leaf low-rank payload crosses the wire."""
+    out = run_sub("""
+    from repro.core import projectors as proj_lib
+    cfg = get_config("llama3-8b", smoke=True).with_(dtype=jnp.float32,
+                                                    n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_optimizer("galore-sara-adam", params, rank=8, tau=5,
+                         lr=1e-3, engine="bucketed")
+    state = TrainState(params, opt.init(params))
+    batch = concrete_train_batch(cfg, 8, 32)
+    mesh = make_mesh((4, 2))
+
+    def psum_operands(jaxpr, out):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "psum":
+                out.extend(tuple(v.aval.shape) for v in eqn.invars)
+            for val in eqn.params.values():
+                vals = val if isinstance(val, (list, tuple)) else [val]
+                for v in vals:
+                    inner = getattr(v, "jaxpr", None)
+                    if hasattr(v, "eqns"):
+                        psum_operands(v, out)
+                    elif inner is not None and hasattr(inner, "eqns"):
+                        psum_operands(inner, out)
+        return out
+
+    is_spec = lambda x: hasattr(x, "lowrank")
+    flat_specs, treedef = jax.tree_util.tree_flatten(opt.specs,
+                                                     is_leaf=is_spec)
+    flat_params = treedef.flatten_up_to(params)
+    perleaf_rspace = set()
+    for spec, p in zip(flat_specs, flat_params):
+        if spec.lowrank:  # the ragged per-leaf shapes the old path psum'd
+            perleaf_rspace.add(tuple(
+                jax.eval_shape(lambda g: proj_lib.project(
+                    g, jnp.zeros(p.shape[:-2] + (
+                        min(p.shape[-2], p.shape[-1]), spec.rank)),
+                    spec.side), p).shape))
+            perleaf_rspace.add(tuple(p.shape))  # old refresh payload
+
+    plan = opt.bucket_plan
+    with mesh:
+        fns = make_train_step(model, opt, mesh=mesh, compressed="flat",
+                              donate=False)
+        for refresh in (False, True):
+            fn = fns["refresh_step" if refresh else "step"]
+            shapes = psum_operands(jax.make_jaxpr(fn)(state, batch).jaxpr,
+                                   [])
+            from collections import Counter
+            want = Counter(
+                (bk.batch, bk.d, bk.n) if refresh
+                else (bk.batch, bk.rank, bk.n)
+                for bk in plan.buckets
+            )
+            got = Counter(shapes)
+            for shape, n in want.items():
+                assert got[shape] == n, (refresh, shape, shapes)
+            leaked = [s for s in shapes if s in perleaf_rspace]
+            assert not leaked, (refresh, leaked)
+            print("psum operands", "refresh" if refresh else "hot",
+                  len(shapes))
     print("OK")
     """)
     assert "OK" in out

@@ -172,3 +172,100 @@ def test_microbatched_step_equals_full_batch(setup):
         jax.tree_util.tree_leaves(s2.params),
     ):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4 satellites: microbatch accumulation + compressed-kwarg hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_microbatch_non_divisible_batch_raises(setup):
+    """batch % microbatch != 0 must raise, not silently drop samples --
+    but microbatch >= batch (lossless degenerate: one microbatch) stays
+    allowed, e.g. a production microbatch meeting a smoke batch."""
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    st = TrainState(params, opt.init(params))
+    batch = data.batch_at(0)  # global batch 8
+    fns = make_train_step(
+        model, opt, donate=False, train_cfg=TrainConfig(microbatch=3),
+    )
+    with pytest.raises(ValueError, match="not divisible"):
+        fns["jit_step"](st, batch)
+    big = make_train_step(
+        model, opt, donate=False, train_cfg=TrainConfig(microbatch=16),
+    )
+    full = make_train_step(model, opt, donate=False)
+    s_big, _ = big["jit_step"](st, batch)
+    s_full, _ = full["jit_step"](st, batch)
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(s_big.params),
+        jax.tree_util.tree_leaves(s_full.params)))
+    assert d < 2e-5, d
+
+
+def test_microbatch_accum_dtype_matches_unaccumulated():
+    """Accumulated grads come back in the PARAM dtype (bf16 params ->
+    bf16 grads, like the non-accumulated path), while partial sums stay
+    in the configurable accum dtype."""
+    from types import SimpleNamespace
+
+    from repro.train.step import _value_and_grad
+
+    def loss(params, batch):
+        h = batch["x"].astype(params["w"].dtype) @ params["w"]
+        return jnp.mean(jnp.square(h.astype(jnp.float32))), {}
+
+    model = SimpleNamespace(loss=loss)
+    params = {"w": (jnp.ones((4, 4)) * 0.5).astype(jnp.bfloat16)}
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(0), (8, 4))}
+
+    (_, _), g_single = _value_and_grad(model, 0)(params, batch)
+    (_, _), g_accum = _value_and_grad(model, 2)(params, batch)
+    assert g_single["w"].dtype == jnp.bfloat16
+    assert g_accum["w"].dtype == jnp.bfloat16  # was f32 before the fix
+    np.testing.assert_allclose(
+        np.asarray(g_accum["w"], np.float32),
+        np.asarray(g_single["w"], np.float32),
+        atol=0.05,  # bf16 quantization of per-microbatch grads
+    )
+    # f32 accumulation beats bf16 accumulation at approximating the
+    # full-batch f32 gradient
+    params32 = {"w": jnp.ones((4, 4)) * 0.5}
+    (_, _), g32 = _value_and_grad(model, 0)(params32, batch)
+    (_, _), acc32 = _value_and_grad(model, 2, jnp.float32)(params32, batch)
+    (_, _), acc16 = _value_and_grad(model, 2, jnp.bfloat16)(params32, batch)
+    assert acc32["w"].dtype == acc16["w"].dtype == jnp.float32
+    e32 = float(jnp.max(jnp.abs(acc32["w"] - g32["w"])))
+    e16 = float(jnp.max(jnp.abs(acc16["w"] - g32["w"])))
+    assert e32 <= e16
+
+
+def test_compressed_kwarg_normalization(setup):
+    from repro.launch.mesh import single_device_mesh
+
+    cfg, model, opt, data = setup
+    mesh = single_device_mesh()
+    # legacy bool normalizes to 'flat' in one place
+    fns = make_train_step(model, opt, mesh=mesh, compressed=True,
+                          donate=False)
+    assert fns["compressed_mode"] == "flat"
+    pod_mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    fns = make_train_step(model, opt, mesh=pod_mesh, compressed="pod",
+                          donate=False)
+    assert fns["compressed_mode"] == "pod"
+    # 'pod' mode on a pod-less mesh is rejected at BUILD time
+    with pytest.raises(ValueError, match="pod axis"):
+        make_train_step(model, opt, mesh=mesh, compressed="pod",
+                        donate=False)
+    for off in (False, None, ""):
+        fns = make_train_step(model, opt, mesh=mesh, compressed=off,
+                              donate=False)
+        assert fns["compressed_mode"] == ""
+    # a typo must raise, not fall through to the flat-DP axis set
+    with pytest.raises(ValueError, match="pods"):
+        make_train_step(model, opt, mesh=mesh, compressed="pods",
+                        donate=False)
+    # compressed modes need a mesh to shard over
+    with pytest.raises(ValueError, match="mesh"):
+        make_train_step(model, opt, compressed="flat", donate=False)

@@ -589,3 +589,111 @@ def test_pick_block_divisor_safety():
     for dim, block in [(11008, 512), (1000, 512), (4224, 256), (96, 128)]:
         b = pick_block(dim, block)
         assert dim % b == 0 and (b % 128 == 0 or b == dim)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4: stacked project-then-reduce (StackedGrads)
+# ---------------------------------------------------------------------------
+
+
+def _maxdiff(a, b):
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(
+            jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        )
+    )
+
+
+def _bucketed_opt(params, **kw):
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=16, lr=1e-2, alpha=0.5,
+        min_dim=8, engine="bucketed", **kw,
+    )
+    assert opt.state_layout is not None
+    return opt
+
+
+def test_stacked_projection_hot_step_bit_exact():
+    """project_grads_stacked + update(projected=True) is bit-for-bit (fp32)
+    with BOTH the per-leaf projected path and the unprojected hot step --
+    stacked R-space grads never round-trip through per-leaf layout."""
+    from repro.core.lowrank import project_grads_stacked
+
+    params = _mixed_params()
+    opt = _bucketed_opt(params)
+    st = opt.init(params)
+    g0 = _grads(params, 0)
+    _, st, _ = opt.update(g0, st, params, refresh=True, apply=True)
+    g = _grads(params, 1)
+
+    p_full, s_full, a_full = opt.update(
+        g, st, params, refresh=False, apply=True
+    )
+    rg_leaf = project_grads(opt, g, st)
+    p_leaf, s_leaf, _ = opt.update(
+        rg_leaf, st, params, refresh=False, projected=True, apply=True
+    )
+    rg_stacked = project_grads_stacked(opt, g, st)
+    assert len(rg_stacked.buckets) == len(opt.bucket_plan.buckets)
+    for stack, bk in zip(rg_stacked.buckets, opt.bucket_plan.buckets):
+        assert stack.shape == (bk.batch, bk.rank, bk.n)
+        assert stack.dtype == jnp.float32
+    p_st, s_st, _ = opt.update(
+        rg_stacked, st, params, refresh=False, projected=True, apply=True
+    )
+    assert _maxdiff(p_st, p_leaf) == 0.0
+    assert _maxdiff(p_st, p_full) == 0.0
+    assert _maxdiff(s_st.buckets, s_leaf.buckets) == 0.0
+    assert _maxdiff(s_st.buckets, s_full.buckets) == 0.0
+
+
+@pytest.mark.parametrize("backend", ["randomized", "exact"])
+def test_stacked_refresh_bit_exact(backend):
+    """stack_grads + update(refresh=True) == the per-leaf gradient tree,
+    bit-for-bit, on both the batched chain (randomized) and the per-leaf
+    fallback (exact) -- the refresh engine consumes the reduced stacks."""
+    from repro.core.lowrank import stack_grads
+
+    params = _mixed_params()
+    opt = _bucketed_opt(params, svd_backend=backend, sara_pool_factor=2)
+    st = opt.init(params)
+    g = _grads(params, 3)
+    p_tree, s_tree, a_tree = opt.update(g, st, params, refresh=True, apply=True)
+    sg = stack_grads(opt, g)
+    for stack, bk in zip(sg.buckets, opt.bucket_plan.buckets):
+        assert stack.shape == (bk.batch, bk.d, bk.n)
+    p_st, s_st, a_st = opt.update(sg, st, params, refresh=True, apply=True)
+    assert _maxdiff(p_st, p_tree) == 0.0
+    assert _maxdiff(s_st.buckets, s_tree.buckets) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(a_st.mean_refresh_overlap),
+        np.asarray(a_tree.mean_refresh_overlap),
+    )
+
+
+def test_stacked_grads_validation():
+    from repro.core.lowrank import (
+        StackedGrads, project_grads_stacked, stack_grads,
+    )
+
+    params = _mixed_params()
+    g = _grads(params, 0)
+    ref = make_optimizer(
+        "galore-sara-adam", params, rank=16, min_dim=8, engine="reference"
+    )
+    with pytest.raises(ValueError, match="bucket-native"):
+        project_grads_stacked(ref, g, ref.init(params))
+    with pytest.raises(ValueError, match="bucket-native"):
+        stack_grads(ref, g)
+
+    opt = _bucketed_opt(params)
+    st = opt.init(params)
+    sg = stack_grads(opt, g)
+    # full-rank stacks cannot drive a plain (unprojected) hot step
+    with pytest.raises(ValueError, match="StackedGrads"):
+        opt.update(sg, st, params, refresh=False, apply=True)
+    # structure mismatch is caught early
+    bad = StackedGrads(buckets=sg.buckets[:-1], rest=sg.rest)
+    with pytest.raises(ValueError, match="mismatch"):
+        opt.update(bad, st, params, refresh=True, apply=True)
