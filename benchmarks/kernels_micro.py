@@ -250,6 +250,95 @@ def update_engine_bench() -> List[Row]:
     return rows
 
 
+def quantized_update_engine_bench() -> List[Row]:
+    """The fused quantized inners (DESIGN.md §2.8): bucketed adam8bit /
+    adam_mini hot steps on the bench transformer, vs the same inner on the
+    per-leaf reference loop they previously fell back to.
+
+    The gated fields are the analytic ones: dispatched ops (one fused
+    kernel chain per side-homogeneous bucket vs a 6-7-op chain per leaf),
+    modeled hot-step HBM (adam8bit's uint8 codes cut the moment traffic
+    ~4x vs fused adam and delete the reference path's dequantized f32
+    round-trip), and the resident optimizer-state bytes of the paper's
+    memory claim (``modeled_state_bytes``: ~2 bytes/param of moments for
+    adam8bit vs 8 for adam)."""
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+
+    L, d_model, rank = 4, 256, 64
+    params, grads = _bench_transformer(L=L, d_model=d_model)
+    rows: List[Row] = []
+
+    adam_plan = make_optimizer(
+        "galore-sara-adam", params, rank=rank, engine="bucketed"
+    ).bucket_plan
+    adam_hbm = buckets_lib.modeled_hbm_bytes(adam_plan, "bucketed")
+    adam_state = buckets_lib.modeled_state_bytes(adam_plan, "adam")
+
+    state_bytes = {}
+    for inner in ("adam8bit", "adam_mini"):
+        for engine in ("reference", "bucketed"):
+            opt = make_optimizer(
+                f"galore-sara-{inner}", params, rank=rank, lr=1e-3,
+                alpha=0.25, engine=engine, track_update_norm=False,
+            )
+            state = opt.init(params)
+            _, state, _ = opt.update(grads, state, params, refresh=True)
+            hot = jax.jit(
+                lambda g, s, p, _o=opt: _o.update(
+                    g, s, p, refresh=False, apply=True
+                )
+            )
+            us = _time(lambda g: hot(g, state, params), grads, iters=5)
+            plan = opt.bucket_plan
+            if engine == "bucketed":
+                assert opt.state_layout is not None  # bucket-native storage
+                n_ops = buckets_lib.update_num_ops(plan, inner)
+            else:
+                plan = make_optimizer(
+                    f"galore-sara-{inner}", params, rank=rank,
+                    engine="bucketed",
+                ).bucket_plan
+                n_ops = buckets_lib.reference_num_ops(plan, inner=inner)
+            hbm = buckets_lib.modeled_hbm_bytes(plan, engine, inner=inner)
+            sb = buckets_lib.modeled_state_bytes(plan, inner)
+            state_bytes[inner] = sb
+            name = f"engine/update_{engine}_{inner}_L{L}_d{d_model}_r{rank}"
+            extra = {}
+            derived = (
+                f"dispatched_ops={n_ops} modeled_hbm={hbm / 1e6:.1f}MB "
+                f"buckets={len(plan.buckets)} "
+                f"moment_bytes_per_param={sb['moment_bytes_per_param']:.2f}"
+            )
+            if engine == "bucketed":
+                hbm_perleaf = buckets_lib.modeled_hbm_bytes(
+                    plan, engine, state_layout="perleaf", inner=inner
+                )
+                extra["modeled_hbm_bytes_perleaf_state"] = hbm_perleaf
+                derived += (
+                    f" vs_fused_adam_hbm={100 * hbm / adam_hbm:.0f}% "
+                    f"state_vs_adam="
+                    f"{100 * sb['total'] / adam_state['total']:.0f}%"
+                )
+            rows.append((name, us, derived))
+            common.record(
+                name, us, roofline_us=hbm / hw.HBM_BW * 1e6, engine=engine,
+                state_layout="bucketed" if engine == "bucketed" else "perleaf",
+                dispatched_ops=n_ops, modeled_hbm_bytes=hbm,
+                modeled_state_bytes=int(sb["total"]),
+                moment_bytes_per_param=round(sb["moment_bytes_per_param"], 3),
+                **extra,
+            )
+    rows.append((
+        "engine/update_quantized_memory", 0.0,
+        f"moment_bytes_per_param: adam8bit="
+        f"{state_bytes['adam8bit']['moment_bytes_per_param']:.2f} "
+        f"adam_mini={state_bytes['adam_mini']['moment_bytes_per_param']:.2f} "
+        f"adam={adam_state['moment_bytes_per_param']:.2f}",
+    ))
+    return rows
+
+
 def refresh_engine_bench() -> List[Row]:
     """The refresh executable: per-leaf loop vs the bucket-native batched
     randomized-subspace-iteration engine (DESIGN.md §2.6), same bench
@@ -403,5 +492,6 @@ def run() -> List[Row]:
     return (
         lowrank_update_bench() + galore_project_bench()
         + attention_bench() + rmsnorm_bench() + update_engine_bench()
+        + quantized_update_engine_bench()
         + refresh_engine_bench() + dp_compression_bench()
     )

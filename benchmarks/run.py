@@ -15,12 +15,15 @@ import traceback
 # Analytic (machine-independent) fields gated by --check; wall_us is
 # deliberately excluded -- CPU container timings are too noisy to gate.
 # modeled_collective_bytes / dispatched_collectives gate the compressed-DP
-# reduction schedule (dp_compression_bench) exactly like update/refresh ops.
+# reduction schedule (dp_compression_bench) exactly like update/refresh
+# ops; modeled_state_bytes gates the resident optimizer-state memory of
+# the quantized fused inners (the paper's Table-1 claim).
 _CHECK_FIELDS = (
     "modeled_hbm_bytes",
     "dispatched_ops",
     "modeled_collective_bytes",
     "dispatched_collectives",
+    "modeled_state_bytes",
 )
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 

@@ -53,11 +53,19 @@ import jax.numpy as jnp
 
 from repro.core import inner as inner_lib
 from repro.kernels.lowrank_update import ops as update_ops
+from repro.kernels.lowrank_update import quantize as qz
 
 PyTree = Any
 
 # Inner optimizers with a fused kernel (kernels/lowrank_update/kernel.py).
-FUSED_INNERS = ("adam", "msgd")
+FUSED_INNERS = ("adam", "msgd", "adam8bit", "adam_mini")
+
+# Inners whose storage layout is orientation-sensitive: adam_mini's
+# per-row v and adam8bit's per-row-chunk scales follow the PER-LEAF rows,
+# which a mixed left/right bucket cannot stack into one buffer.  Their
+# bucket plans split by side (``build_bucket_plan(split_sides=True)``) so
+# every bucket is side-homogeneous; adam/msgd keep the mixed buckets.
+SIDE_HOMOGENEOUS_INNERS = ("adam8bit", "adam_mini")
 
 
 class BucketEntry(NamedTuple):
@@ -75,6 +83,10 @@ class Bucket(NamedTuple):
     n: int  # free dim after orientation
     rank: int
     entries: Tuple[BucketEntry, ...]
+    # 'left' | 'right' for side-homogeneous plans (split_sides=True);
+    # 'any' when the bucket may mix sides (adam / msgd plans).
+    side: str = "any"
+
 
     @property
     def batch(self) -> int:
@@ -90,8 +102,19 @@ class BucketPlan(NamedTuple):
         return len(self.buckets) * (1 if projected else 2)
 
 
-def build_bucket_plan(flat_specs: Sequence, flat_params: Sequence) -> BucketPlan:
-    """Static bucketing: group low-rank leaves by (d, n, rank, dtype)."""
+def build_bucket_plan(
+    flat_specs: Sequence,
+    flat_params: Sequence,
+    *,
+    split_sides: bool = False,
+) -> BucketPlan:
+    """Static bucketing: group low-rank leaves by (d, n, rank, dtype).
+
+    ``split_sides=True`` adds the projection side to the key (and stamps it
+    on the bucket) for the orientation-sensitive quantized inners
+    (``SIDE_HOMOGENEOUS_INNERS``) -- a (96, 32) down-projection then gets
+    its own bucket instead of sharing the (32, 96) up-projection's.
+    """
     groups: Dict[Tuple, List[BucketEntry]] = {}
     for i, (spec, leaf) in enumerate(zip(flat_specs, flat_params)):
         if not spec.lowrank:
@@ -102,10 +125,15 @@ def build_bucket_plan(flat_specs: Sequence, flat_params: Sequence) -> BucketPlan
         for s in leaf.shape[:-2]:
             b *= s
         key = (d_c, n_c, spec.rank, jnp.dtype(leaf.dtype).name)
+        if split_sides:
+            key = key + (spec.side,)
         groups.setdefault(key, []).append(BucketEntry(i, spec.side, b))
     buckets = tuple(
-        Bucket(d=k[0], n=k[1], rank=k[2], entries=tuple(es))
-        for k, es in sorted(groups.items(), key=lambda kv: kv[0][:3])
+        Bucket(
+            d=k[0], n=k[1], rank=k[2], entries=tuple(es),
+            side=k[4] if split_sides else "any",
+        )
+        for k, es in sorted(groups.items(), key=lambda kv: kv[0])
     )
     covered = frozenset(e.leaf_idx for bk in buckets for e in bk.entries)
     return BucketPlan(buckets=buckets, bucketed=covered)
@@ -120,15 +148,30 @@ class BucketState(NamedTuple):
     """One bucket's optimizer state in storage (stacked) layout.
 
     ``projector`` is (B, d, r) in canonical orientation (projectors are
-    (d, r) for BOTH sides, never transposed); moments are (B, r, n) f32 in
+    (d, r) for BOTH sides, never transposed); moments are (B, r, n) in
     the canonical 'left' orientation (side='right' slices enter
-    transposed, exactly like the param/grad operands).  ``v`` is None for
-    inner optimizers without a second moment (msgd).
+    transposed, exactly like the param/grad operands).  Per inner
+    optimizer (DESIGN.md §2.5/§2.8):
+
+      adam       m, v       (B, r, n) f32
+      msgd       m          (B, r, n) f32; v is None
+      adam_mini  m          (B, r, n) f32; v is the per-row second moment
+                 -- (B, r) for 'left' buckets, (B, n) for 'right' ones
+                 (per-leaf rows; the reduction axis transposes with the
+                 slices, so buckets are side-homogeneous for this inner)
+      adam8bit   m, v       (B, r, n) uint8 codes element-aligned with the
+                 canonical stack; ``m_scale``/``v_scale`` hold the f32
+                 per-row-chunk scales in per-leaf row order -- (B, r, nb)
+                 'left', (B, n, nb_r) 'right' (quantize.py's partition).
+
+    ``m_scale``/``v_scale`` are None for the unquantized inners.
     """
 
     projector: jax.Array
     m: jax.Array
     v: Optional[jax.Array]
+    m_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
 
 
 class LeafStateTemplate(NamedTuple):
@@ -138,6 +181,8 @@ class LeafStateTemplate(NamedTuple):
     projector: jax.ShapeDtypeStruct
     m: jax.ShapeDtypeStruct
     v: Optional[jax.ShapeDtypeStruct]
+    m_scale: Optional[jax.ShapeDtypeStruct] = None
+    v_scale: Optional[jax.ShapeDtypeStruct] = None
 
 
 class StateLayout(NamedTuple):
@@ -145,7 +190,7 @@ class StateLayout(NamedTuple):
     plus everything needed to convert in BOTH directions (save/load)."""
 
     plan: BucketPlan
-    inner_name: str  # 'adam' | 'msgd'
+    inner_name: str  # 'adam' | 'msgd' | 'adam_mini' | 'adam8bit'
     has_v: bool
     templates: Dict[int, LeafStateTemplate]  # keyed by leaf_idx (static)
 
@@ -160,6 +205,13 @@ def build_state_layout(
 ) -> StateLayout:
     """Canonical per-leaf templates for every bucketed leaf."""
     has_v = inner_lib.fused_has_second_moment(inner_name)
+    if inner_name in SIDE_HOMOGENEOUS_INNERS:
+        for bucket in plan.buckets:
+            if bucket.side not in ("left", "right"):
+                raise ValueError(
+                    f"{inner_name!r} needs a side-homogeneous bucket plan "
+                    "(build_bucket_plan(split_sides=True))"
+                )
     templates: Dict[int, LeafStateTemplate] = {}
     for bucket in plan.buckets:
         for e in bucket.entries:
@@ -172,9 +224,24 @@ def build_state_layout(
                 mshape = lead + (bucket.rank, p.shape[-1])
             else:
                 mshape = lead + (p.shape[-2], bucket.rank)
-            m = jax.ShapeDtypeStruct(mshape, jnp.float32)
-            v = m if has_v else None
-            templates[e.leaf_idx] = LeafStateTemplate(proj, m, v)
+            m_scale = v_scale = None
+            if inner_name == "adam8bit":
+                m = jax.ShapeDtypeStruct(mshape, jnp.uint8)
+                v = m
+                nb = qz.num_blocks(mshape[-1])
+                m_scale = jax.ShapeDtypeStruct(
+                    mshape[:-1] + (nb,), jnp.float32
+                )
+                v_scale = m_scale
+            elif inner_name == "adam_mini":
+                m = jax.ShapeDtypeStruct(mshape, jnp.float32)
+                v = jax.ShapeDtypeStruct(mshape[:-1], jnp.float32)
+            else:
+                m = jax.ShapeDtypeStruct(mshape, jnp.float32)
+                v = m if has_v else None
+            templates[e.leaf_idx] = LeafStateTemplate(
+                proj, m, v, m_scale, v_scale
+            )
     return StateLayout(
         plan=plan, inner_name=inner_name, has_v=has_v, templates=templates
     )
@@ -182,14 +249,27 @@ def build_state_layout(
 
 def init_bucket_states(layout: StateLayout) -> Tuple[BucketState, ...]:
     """Stacked equivalent of the per-leaf init: eye projectors (the first
-    refresh installs the real ones), zero moments."""
+    refresh installs the real ones), zero moments (quantized zeros for
+    adam8bit -- identical codes/scales to ``inner.adam8bit().init``)."""
     out = []
     for bucket in layout.plan.buckets:
         B, d, n, r = bucket.batch, bucket.d, bucket.n, bucket.rank
         pdtype = layout.templates[bucket.entries[0].leaf_idx].projector.dtype
         eye = jnp.broadcast_to(jnp.eye(d, r, dtype=pdtype), (B, d, r))
+        if layout.inner_name == "adam8bit":
+            z = jnp.zeros((B, r, n), jnp.float32)
+            mc, ms = qz.quantize_stacked(z, bucket.side, signed=True)
+            vc, vs = qz.quantize_stacked(z, bucket.side, signed=False)
+            out.append(BucketState(
+                projector=eye, m=mc, v=vc, m_scale=ms, v_scale=vs
+            ))
+            continue
         m = jnp.zeros((B, r, n), jnp.float32)
-        v = jnp.zeros((B, r, n), jnp.float32) if layout.has_v else None
+        if layout.inner_name == "adam_mini":
+            rows = r if bucket.side == "left" else n
+            v = jnp.zeros((B, rows), jnp.float32)
+        else:
+            v = jnp.zeros((B, r, n), jnp.float32) if layout.has_v else None
         out.append(BucketState(projector=eye, m=m, v=v))
     return tuple(out)
 
@@ -199,25 +279,40 @@ def leaf_states_to_bucketed(
 ) -> Tuple[BucketState, ...]:
     """Per-leaf canonical -> storage: stack projectors and moments.
 
-    ``flat_states`` holds objects with ``.projector`` and ``.inner`` (with
-    ``.m`` / optionally ``.v``) at the bucketed indices; other entries are
-    ignored.  Pure layout: reshape/transpose/concat only.
+    ``flat_states`` holds objects with ``.projector`` and ``.inner`` at the
+    bucketed indices; other entries are ignored.  Pure layout:
+    reshape/transpose/concat only -- quantized codes transpose like
+    moments (elementwise layout), scales and per-row v buffers stack in
+    per-leaf row order with no transpose, so nothing is re-quantized.
     """
     out = []
     for bucket in layout.plan.buckets:
         proj = _gather_proj(
             bucket, [getattr(st, "projector", None) for st in flat_states]
         )
-        ms: Dict[int, jax.Array] = {}
-        vs: Dict[int, jax.Array] = {}
-        for e in bucket.entries:
-            m_leaf, v_leaf = inner_lib.fused_moments(
+        fm: Dict[int, inner_lib.FusedMoments] = {
+            e.leaf_idx: inner_lib.fused_moments(
                 layout.inner_name, flat_states[e.leaf_idx].inner
             )
-            ms[e.leaf_idx], vs[e.leaf_idx] = m_leaf, v_leaf
-        m = _gather(bucket, ms)
-        v = _gather(bucket, vs) if layout.has_v else None
-        out.append(BucketState(projector=proj, m=m, v=v))
+            for e in bucket.entries
+        }
+        m = _gather(bucket, {i: x.m for i, x in fm.items()})
+        m_scale = v_scale = v = None
+        if layout.inner_name == "adam8bit":
+            v = _gather(bucket, {i: x.v for i, x in fm.items()})
+            m_scale = _gather_proj(
+                bucket, {i: x.m_scale for i, x in fm.items()}
+            )
+            v_scale = _gather_proj(
+                bucket, {i: x.v_scale for i, x in fm.items()}
+            )
+        elif layout.inner_name == "adam_mini":
+            v = _gather_vec(bucket, {i: x.v for i, x in fm.items()})
+        elif layout.has_v:
+            v = _gather(bucket, {i: x.v for i, x in fm.items()})
+        out.append(BucketState(
+            projector=proj, m=m, v=v, m_scale=m_scale, v_scale=v_scale
+        ))
     return tuple(out)
 
 
@@ -230,27 +325,35 @@ def bucketed_to_leaf_states(
     """
     out: Dict[int, Tuple[jax.Array, Any]] = {}
     for bucket, bst in zip(layout.plan.buckets, bucket_states):
+        tmpl = {e.leaf_idx: layout.templates[e.leaf_idx]
+                for e in bucket.entries}
         projs = _scatter_proj(
-            bucket, bst.projector,
-            {e.leaf_idx: layout.templates[e.leaf_idx].projector
-             for e in bucket.entries},
+            bucket, bst.projector, {i: t.projector for i, t in tmpl.items()}
         )
-        ms = _scatter(
-            bucket, bst.m,
-            {e.leaf_idx: layout.templates[e.leaf_idx].m
-             for e in bucket.entries},
-        )
-        vs = None
-        if layout.has_v:
-            vs = _scatter(
-                bucket, bst.v,
-                {e.leaf_idx: layout.templates[e.leaf_idx].v
-                 for e in bucket.entries},
+        ms = _scatter(bucket, bst.m, {i: t.m for i, t in tmpl.items()})
+        vs = mss = vss = None
+        if layout.inner_name == "adam8bit":
+            vs = _scatter(bucket, bst.v, {i: t.v for i, t in tmpl.items()})
+            mss = _scatter_proj(
+                bucket, bst.m_scale, {i: t.m_scale for i, t in tmpl.items()}
             )
+            vss = _scatter_proj(
+                bucket, bst.v_scale, {i: t.v_scale for i, t in tmpl.items()}
+            )
+        elif layout.inner_name == "adam_mini":
+            vs = _scatter_proj(
+                bucket, bst.v, {i: t.v for i, t in tmpl.items()}
+            )
+        elif layout.has_v:
+            vs = _scatter(bucket, bst.v, {i: t.v for i, t in tmpl.items()})
         for e in bucket.entries:
             i = e.leaf_idx
             inner_state = inner_lib.fused_state(
-                layout.inner_name, ms[i], vs[i] if vs is not None else None
+                layout.inner_name,
+                ms[i],
+                vs[i] if vs is not None else None,
+                mss[i] if mss is not None else None,
+                vss[i] if vss is not None else None,
             )
             out[i] = (projs[i], inner_state)
     return out
@@ -290,10 +393,21 @@ def _gather(bucket: Bucket, leaves) -> jax.Array:
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
-def _gather_proj(bucket: Bucket, projs: Sequence[jax.Array]) -> jax.Array:
-    """Projectors are (.., d, r) for BOTH sides -- never transposed."""
+def _gather_proj(bucket: Bucket, projs) -> jax.Array:
+    """Plain (never-transposed) stack of 2-trailing-dim buffers: projectors
+    ((.., d, r) for BOTH sides) and the quantized scale buffers (already in
+    per-leaf row order).  ``projs`` is anything indexable by leaf_idx."""
     parts = [
         projs[e.leaf_idx].reshape((-1,) + projs[e.leaf_idx].shape[-2:])
+        for e in bucket.entries
+    ]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def _gather_vec(bucket: Bucket, leaves) -> jax.Array:
+    """Stack of 1-trailing-dim buffers (adam_mini's per-row v)."""
+    parts = [
+        leaves[e.leaf_idx].reshape((-1,) + leaves[e.leaf_idx].shape[-1:])
         for e in bucket.entries
     ]
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
@@ -320,7 +434,9 @@ def _scatter(
 def _scatter_proj(
     bucket: Bucket, stacked: jax.Array, likes: Dict[int, Any]
 ) -> Dict[int, jax.Array]:
-    """Split a (B, d, r) projector stack per leaf -- never transposed."""
+    """Split a plain (never-transposed) stack per leaf: projectors, the
+    quantized scale buffers, and adam_mini's (B, rows) per-row v --
+    ``reshape(like.shape)`` restores any trailing rank."""
     out: Dict[int, jax.Array] = {}
     off = 0
     for e in bucket.entries:
@@ -416,6 +532,7 @@ def bucketed_update(
     """
     lr_alpha = lr * cfg.alpha
     lr_wd = lr * cfg.weight_decay if cfg.weight_decay else 0.0
+    ik = cfg.inner_kwargs()
     out_leaves: Dict[int, jax.Array] = {}
     new_states: List[BucketState] = []
     norm_sq: List[jax.Array] = []
@@ -431,20 +548,34 @@ def bucketed_update(
             r_g = update_ops.bucketed_project(g, p)
         if cfg.inner == "msgd":
             w_new, m_new = update_ops.bucketed_msgd_update(
-                w, p, r_g, bst.m, lr_alpha, lr_wd, b1=cfg.b1
+                w, p, r_g, bst.m, lr_alpha, lr_wd, **ik
             )
-            v_new = None
+            new_bst = BucketState(projector=p, m=m_new, v=None)
+        elif cfg.inner == "adam_mini":
+            w_new, m_new, v_new = update_ops.bucketed_adam_mini_update(
+                w, p, r_g, bst.m, bst.v, step, lr_alpha, lr_wd,
+                side=bucket.side, **ik,
+            )
+            new_bst = BucketState(projector=p, m=m_new, v=v_new)
+        elif cfg.inner == "adam8bit":
+            w_new, mc, ms, vc, vs = update_ops.bucketed_adam8bit_update(
+                w, p, r_g, bst.m, bst.m_scale, bst.v, bst.v_scale,
+                step, lr_alpha, lr_wd, side=bucket.side, **ik,
+            )
+            new_bst = BucketState(
+                projector=p, m=mc, v=vc, m_scale=ms, v_scale=vs
+            )
         else:
             w_new, m_new, v_new = update_ops.bucketed_adam_update(
-                w, p, r_g, bst.m, bst.v, step, lr_alpha, lr_wd,
-                b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+                w, p, r_g, bst.m, bst.v, step, lr_alpha, lr_wd, **ik
             )
+            new_bst = BucketState(projector=p, m=m_new, v=v_new)
         out = w_new if apply else w_new - w
         if track_norm:
             delta = (w_new - w) if apply else out
             norm_sq.append(jnp.sum(jnp.square(delta.astype(jnp.float32))))
         out_leaves.update(_scatter(bucket, out, flat_params))
-        new_states.append(BucketState(projector=p, m=m_new, v=v_new))
+        new_states.append(new_bst)
     return out_leaves, tuple(new_states), norm_sq
 
 
@@ -598,26 +729,44 @@ def bucketed_refresh(
         new_proj = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
         m, v = bst.m, bst.v
+        ms_, vs_ = bst.m_scale, bst.v_scale
         if any(refreshed):
             if momentum_carry == "reset":
                 # reference semantics: the WHOLE inner state resets (m and
-                # second moment) for refreshed leaves.
+                # second moment -- for adam8bit, codes AND scales) for
+                # refreshed leaves.
                 m = _select_slices(bucket, refreshed, jnp.zeros_like(m), m)
                 if v is not None:
                     v = _select_slices(
                         bucket, refreshed, jnp.zeros_like(v), v
                     )
-            elif momentum_carry == "reproject":
+                if ms_ is not None:
+                    ms_ = _select_slices(
+                        bucket, refreshed, jnp.zeros_like(ms_), ms_
+                    )
+                if vs_ is not None:
+                    vs_ = _select_slices(
+                        bucket, refreshed, jnp.zeros_like(vs_), vs_
+                    )
+            elif momentum_carry == "reproject" and (
+                layout.inner_name != "adam8bit"
+            ):
                 # C = P_new^T P_old for every slice, then M' = C M: two
                 # batched einsums per bucket.  In canonical orientation the
                 # single left-side formula covers both sides exactly
-                # (side='right' moments are stored transposed).
+                # (side='right' moments are stored transposed).  adam8bit
+                # is excluded: its first moment lives as quantized codes,
+                # which have no linear reprojection -- exactly the
+                # reference path's behavior (Adam8bitState has no ``.m``
+                # for ``_refresh_leaf`` to reproject), stated in §2.8.
                 c = jnp.einsum("bdn,bdo->bno", new_proj, bst.projector)
                 # m stays f32 (the einsum promotes c), matching the
                 # reference path's precision exactly.
                 m2 = jnp.einsum("bno,bok->bnk", c, m).astype(m.dtype)
                 m = _select_slices(bucket, refreshed, m2, m)
-        new_states.append(BucketState(projector=new_proj, m=m, v=v))
+        new_states.append(BucketState(
+            projector=new_proj, m=m, v=v, m_scale=ms_, v_scale=vs_
+        ))
     return tuple(new_states), overlaps
 
 
@@ -654,6 +803,34 @@ def _select_slices(
 # ---------------------------------------------------------------------------
 
 
+def _moment_traffic_bytes(bk: Bucket, inner: str, engine: str) -> int:
+    """Moment-buffer HBM traffic of one hot step for one bucket.
+
+    adam: M, V f32 read + write.  msgd: M only.  adam_mini: M r/w + the
+    per-row v statistic's extra R read (it crosses n-blocks, so the engine
+    reads the R stack once more) + the tiny v r/w.  adam8bit fused: uint8
+    codes r/w for both moments + scales -- the f32 moments live only in
+    VMEM.  adam8bit on the reference path ALSO materializes the dequantized
+    f32 M and V as XLA temporaries (write + read each): that round-trip is
+    exactly what the fused kernel deletes.
+    """
+    B, n, r = bk.batch, bk.n, bk.rank
+    rn = B * r * n * 4
+    if inner == "msgd":
+        return 2 * rn
+    if inner == "adam_mini":
+        rows = r if bk.side != "right" else n
+        return 2 * rn + rn + 2 * B * rows * 4
+    if inner == "adam8bit":
+        rows, rowlen = (r, n) if bk.side != "right" else (n, r)
+        codes = 4 * B * r * n  # M, V codes read + write, 1 byte each
+        scales = 4 * B * rows * qz.num_blocks(rowlen) * 4
+        if engine != "bucketed":
+            codes += 4 * rn  # dequantized f32 M, V temporaries, w + r
+        return codes + scales
+    return 4 * rn  # adam
+
+
 def modeled_hbm_bytes(
     plan: BucketPlan,
     engine: str,
@@ -661,9 +838,11 @@ def modeled_hbm_bytes(
     projected: bool = False,
     state_layout: str = "bucketed",
     track_update_norm: bool = False,
+    inner: str = "adam",
 ) -> int:
     """Modeled optimizer-path HBM traffic per hot step for the bucketed
-    leaves (moment dtype f32).
+    leaves (moment traffic per ``inner`` -- see ``_moment_traffic_bytes``;
+    default adam keeps the pre-§2.8 numbers).
 
     reference: G read (project) + R written+read, moments r/w, direction N
     materialized d x n (write + read), params read + update written, then
@@ -682,7 +861,7 @@ def modeled_hbm_bytes(
         wn = B * d * n * itemsize
         pr = B * d * r * 4
         rn = B * r * n * 4
-        moments = 4 * rn  # M, V read + write
+        moments = _moment_traffic_bytes(bk, inner, engine)
         if engine == "bucketed":
             proj = 0 if projected else (wn + pr + rn)  # read G,P; write R
             upd = wn + pr + rn + moments + wn  # W r, P, R, moments, W' w
@@ -697,19 +876,71 @@ def modeled_hbm_bytes(
             total += proj + upd + extra
         else:
             proj = 0 if projected else (wn + pr + rn)
-            inner = rn + moments  # R read, moments r/w
-            direction = rn + moments // 2  # N = f(M', V') read, write N_r
+            inner_tr = rn + moments  # R read, moments r/w
+            direction = rn + 2 * rn  # N = f(M', V') r-space write + read
             backproj = pr + rn + 2 * wn  # P, N_r -> full-space dir d x n
             apply = 3 * wn  # params read + dir read + params write
-            total += proj + inner + direction + backproj + apply
+            total += proj + inner_tr + direction + backproj + apply
     return total
 
 
-def reference_num_ops(plan: BucketPlan, projected: bool = False) -> int:
+def modeled_state_bytes(plan: BucketPlan, inner: str = "adam") -> Dict[str, float]:
+    """Modeled RESIDENT optimizer-state bytes of the bucketed leaves (the
+    paper's Table-1 memory claim, per storage layout §2.5/§2.8): projector
+    stacks (f32) + moment buffers.  ``moment_bytes_per_param`` is the
+    moment cost per low-rank R-space element -- 8.0 for adam (two f32
+    moments), ~2.0 for adam8bit (two uint8 code planes + scales)."""
+    projectors = 0
+    moments = 0
+    n_elems = 0
+    for bk in plan.buckets:
+        B, d, n, r = bk.batch, bk.d, bk.n, bk.rank
+        projectors += B * d * r * 4
+        n_elems += B * r * n
+        if inner == "msgd":
+            moments += B * r * n * 4
+        elif inner == "adam_mini":
+            rows = r if bk.side != "right" else n
+            moments += B * r * n * 4 + B * rows * 4
+        elif inner == "adam8bit":
+            rows, rowlen = (r, n) if bk.side != "right" else (n, r)
+            moments += 2 * B * r * n + 2 * B * rows * qz.num_blocks(rowlen) * 4
+        else:
+            moments += 2 * B * r * n * 4
+    return {
+        "total": float(projectors + moments),
+        "projectors": float(projectors),
+        "moments": float(moments),
+        "moment_bytes_per_param": moments / max(n_elems, 1),
+    }
+
+
+def update_num_ops(
+    plan: BucketPlan, inner: str = "adam", projected: bool = False
+) -> int:
+    """Dispatched ops per bucketed hot step: projection (unless grads
+    arrive projected) + the fused update per bucket, plus adam_mini's
+    per-row v statistic (one small jnp reduction per bucket -- it crosses
+    n-blocks, so it cannot fold into the kernel grid)."""
+    per_bucket = (1 if projected else 2)
+    if inner == "adam_mini":
+        per_bucket += 1
+    return len(plan.buckets) * per_bucket
+
+
+def reference_num_ops(
+    plan: BucketPlan, projected: bool = False, inner: str = "adam"
+) -> int:
     """Per-leaf chain length on the reference path: project, moment update,
-    direction, back-project (+ the apply_updates add) per low-rank leaf."""
+    direction, back-project (+ the apply_updates add) per low-rank leaf;
+    adam8bit adds the dequant and requant passes, adam_mini the per-row
+    statistic."""
     n_leaves = sum(len(bk.entries) for bk in plan.buckets)
     per_leaf = 4 if projected else 5
+    if inner == "adam8bit":
+        per_leaf += 2
+    elif inner == "adam_mini":
+        per_leaf += 1
     return n_leaves * per_leaf
 
 

@@ -18,6 +18,12 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.lowrank_update.quantize import (
+    dequantize_blockwise,
+    num_blocks,
+    quantize_blockwise,
+)
+
 
 class InnerOptimizer(NamedTuple):
     name: str
@@ -26,10 +32,10 @@ class InnerOptimizer(NamedTuple):
     # Rough per-element optimizer-state memory multiplier (for accounting).
     state_bytes_per_param: float = 8.0
     # Whether the bucketed engine has a fused kernel for this optimizer
-    # (kernels/lowrank_update): the moment layout must be plain dense
-    # tensors of the projected-gradient shape (adam, msgd).  Factored /
-    # quantized states (adafactor, adam8bit, adam_mini) stay on the
-    # reference path.
+    # (kernels/lowrank_update): adam and msgd (dense moments), plus the
+    # quantized layouts adam8bit (blockwise uint8 codes + scales) and
+    # adam_mini (per-row second moment) -- DESIGN.md §2.8.  Adafactor's
+    # factored state stays on the reference path.
     fused_eligible: bool = False
 
 
@@ -194,58 +200,23 @@ def adam_mini(
         direction = mhat / (jnp.sqrt(vhat) + eps)
         return direction, AdamMiniState(m=m, v=v)
 
-    return InnerOptimizer("adam_mini", init, update, state_bytes_per_param=4.0)
+    return InnerOptimizer(
+        "adam_mini", init, update, state_bytes_per_param=4.0,
+        fused_eligible=True,
+    )
 
 
 # ---------------------------------------------------------------------------
 # 8-bit Adam (blockwise-quantized moments, after Dettmers et al.)
 # ---------------------------------------------------------------------------
-
-_QBLOCK = 256
-
-
-def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
-    flat = x.reshape(-1)
-    pad = (-flat.shape[0]) % _QBLOCK
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, _QBLOCK), pad
-
-
-def quantize_blockwise(x: jax.Array, signed: bool) -> Tuple[jax.Array, jax.Array]:
-    """Blockwise 8-bit quantization with per-block absmax scale.
-
-    Signed values (first moment) use linear codes.  Unsigned values (second
-    moment) use SQRT-mapped codes -- code = round(sqrt(v/s)*255) -- because
-    Adam divides by sqrt(v): linear codes round small v to 0 and the
-    denominator collapses (observed divergence); the sqrt map allocates
-    resolution near zero like Dettmers' dynamic code.
-    Returns (codes (nb, B) uint8, scales (nb,) f32).
-    """
-    blocks, _ = _pad_to_block(x.astype(jnp.float32))
-    absmax = jnp.max(jnp.abs(blocks), axis=-1)
-    scale = jnp.where(absmax > 0, absmax, 1.0)
-    if signed:
-        q = jnp.clip(jnp.round(blocks / scale[:, None] * 127.0), -127, 127)
-        codes = (q + 127).astype(jnp.uint8)
-    else:
-        rel = jnp.sqrt(jnp.clip(blocks / scale[:, None], 0.0, 1.0))
-        codes = jnp.clip(jnp.round(rel * 255.0), 0, 255).astype(jnp.uint8)
-    return codes, scale
-
-
-def dequantize_blockwise(
-    codes: jax.Array, scale: jax.Array, shape, signed: bool
-) -> jax.Array:
-    if signed:
-        vals = (codes.astype(jnp.float32) - 127.0) / 127.0 * scale[:, None]
-    else:
-        rel = codes.astype(jnp.float32) / 255.0
-        vals = rel * rel * scale[:, None]
-    n = 1
-    for d in shape:
-        n *= d
-    return vals.reshape(-1)[:n].reshape(shape)
+#
+# Quantization lives in kernels/lowrank_update/quantize.py (shared with the
+# fused bucketed kernels): blocks are 256-element chunks within each row of
+# the last axis, never crossing rows or leading dims, so the partition is
+# invariant to how leading dims are stacked -- the property the
+# bucket-native quantized state layout (DESIGN.md §2.8) relies on for its
+# lossless canonical <-> storage conversion.  ``codes`` is uint8 of the
+# moment's shape; ``scale`` is f32 of shape[:-1] + (ceil(last/256),).
 
 
 class Adam8bitState(NamedTuple):
@@ -266,8 +237,8 @@ def adam8bit(
 
     def update(g, state, step):
         g = g.astype(jnp.float32)
-        m = dequantize_blockwise(state.m_codes, state.m_scale, g.shape, True)
-        v = dequantize_blockwise(state.v_codes, state.v_scale, g.shape, False)
+        m = dequantize_blockwise(state.m_codes, state.m_scale, True)
+        v = dequantize_blockwise(state.v_codes, state.v_scale, False)
         m = b1 * m + (1.0 - b1) * g
         v = b2 * v + (1.0 - b2) * g * g
         t = step.astype(jnp.float32)
@@ -278,7 +249,10 @@ def adam8bit(
         vc, vs = quantize_blockwise(v, signed=False)
         return direction, Adam8bitState(m_codes=mc, m_scale=ms, v_codes=vc, v_scale=vs)
 
-    return InnerOptimizer("adam8bit", init, update, state_bytes_per_param=2.0)
+    return InnerOptimizer(
+        "adam8bit", init, update, state_bytes_per_param=2.0,
+        fused_eligible=True,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -287,11 +261,24 @@ def adam8bit(
 
 # The bucketed engine stores fused-eligible moments in per-bucket stacked
 # buffers (core/buckets.BucketState) rather than per-leaf inner states;
-# these helpers are the canonical <-> stacked boundary: which plain dense
-# moment buffers each fused inner carries, and how to rebuild its per-leaf
-# state NamedTuple from them (checkpoint serialization, engine switching).
+# these helpers are the canonical <-> stacked boundary: which moment
+# buffers each fused inner carries (dense f32 for adam/msgd, per-row f32 v
+# for adam_mini, uint8 codes + f32 blockwise scales for adam8bit), and how
+# to rebuild its per-leaf state NamedTuple from them (checkpoint
+# serialization, engine switching).  ``FusedMoments`` is the generalized
+# 4-buffer view: for adam8bit, ``m``/``v`` hold the code buffers and
+# ``m_scale``/``v_scale`` the scales; otherwise the scales are None.
 
-_FUSED_SECOND_MOMENT = {"adam": True, "msgd": False}
+_FUSED_SECOND_MOMENT = {
+    "adam": True, "msgd": False, "adam_mini": True, "adam8bit": True,
+}
+
+
+class FusedMoments(NamedTuple):
+    m: jax.Array
+    v: Optional[jax.Array] = None
+    m_scale: Optional[jax.Array] = None
+    v_scale: Optional[jax.Array] = None
 
 
 def fused_has_second_moment(name: str) -> bool:
@@ -300,22 +287,49 @@ def fused_has_second_moment(name: str) -> bool:
     return _FUSED_SECOND_MOMENT[name]
 
 
-def fused_state(name: str, m: jax.Array, v: Optional[jax.Array] = None):
+def fused_quantized(name: str) -> bool:
+    """Whether the fused layout stores codes + scales instead of f32."""
+    fused_has_second_moment(name)  # raises for non-fused inners
+    return name == "adam8bit"
+
+
+def fused_state(
+    name: str,
+    m: jax.Array,
+    v: Optional[jax.Array] = None,
+    m_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+):
     """Per-leaf inner state from canonical moment buffers."""
     if name == "adam":
         assert v is not None
         return AdamState(m=m, v=v)
     if name == "msgd":
         return MSGDState(m=m)
+    if name == "adam_mini":
+        assert v is not None
+        return AdamMiniState(m=m, v=v)
+    if name == "adam8bit":
+        assert v is not None and m_scale is not None and v_scale is not None
+        return Adam8bitState(
+            m_codes=m, m_scale=m_scale, v_codes=v, v_scale=v_scale
+        )
     raise ValueError(f"{name!r} has no fused (bucket-native) state layout")
 
 
-def fused_moments(name: str, state) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Canonical moment buffers (m, v-or-None) from a per-leaf inner state."""
+def fused_moments(name: str, state) -> FusedMoments:
+    """Canonical moment buffers from a per-leaf inner state."""
     if name == "adam":
-        return state.m, state.v
+        return FusedMoments(m=state.m, v=state.v)
     if name == "msgd":
-        return state.m, None
+        return FusedMoments(m=state.m)
+    if name == "adam_mini":
+        return FusedMoments(m=state.m, v=state.v)
+    if name == "adam8bit":
+        return FusedMoments(
+            m=state.m_codes, v=state.v_codes,
+            m_scale=state.m_scale, v_scale=state.v_scale,
+        )
     raise ValueError(f"{name!r} has no fused (bucket-native) state layout")
 
 

@@ -35,9 +35,11 @@ DESIGN.md §2):
     ``update(..., apply=True)`` returns new params directly; that is the
     mode ``train/step.py`` uses so param buffers are read/written once and
     can be donated.
-  * With ``engine="bucketed"`` and a fused-eligible inner optimizer, the
-    bucketed layout is also the **storage** layout (DESIGN.md §2.5):
-    moments and projectors live in per-bucket stacked ``(B, r, n)`` /
+  * With ``engine="bucketed"`` and a fused-eligible inner optimizer
+    (adam, msgd, adam8bit, adam_mini -- adafactor's factored state stays
+    on the reference path), the bucketed layout is also the **storage**
+    layout (DESIGN.md §2.5, quantized layouts §2.8): moments and
+    projectors live in per-bucket stacked ``(B, r, n)`` /
     ``(B, d, r)`` buffers (``LowRankOptState.buckets``) and the per-leaf
     ``LeafState`` entries of covered leaves are empty placeholders.  The
     hot step consumes/produces optimizer state with NO per-step
@@ -111,9 +113,10 @@ class OptimizerConfig:
     refresh_groups: int = 1
     # Hot-path update engine: "reference" (per-leaf einsum loop) or
     # "bucketed" (stacked fused kernels with bucket-native state storage
-    # when the inner optimizer is fused-eligible; Fira and non-fused
-    # inner optimizers fall back to the reference loop with per-leaf
-    # state, so the flag is always safe to enable).
+    # when the inner optimizer is fused-eligible: adam, msgd, and the
+    # quantized adam8bit / adam_mini layouts of DESIGN.md §2.8; Fira and
+    # adafactor fall back to the reference loop with per-leaf state, so
+    # the flag is always safe to enable).
     engine: str = "reference"
     # Bucket-native batched refresh: with engine="bucketed" (+ bucket-native
     # state), all same-group entries of a bucket refresh as ONE batched
@@ -155,17 +158,23 @@ class OptimizerConfig:
             dtype=self.projector_dtype,
         )
 
-    def make_inner(self) -> inner_lib.InnerOptimizer:
-        kw: Dict[str, Any] = {}
+    def inner_kwargs(self) -> Dict[str, Any]:
+        """Inner-optimizer hyperparameters -- the ONE place the per-inner
+        defaults live, shared by ``make_inner`` (reference path) and the
+        fused bucketed engine (core/buckets.bucketed_update) so the two
+        can never drift (e.g. adam_mini's b2 cap)."""
         if self.inner in ("adam", "adam8bit"):
-            kw = dict(b1=self.b1, b2=self.b2, eps=self.eps)
-        elif self.inner == "msgd":
-            kw = dict(b1=self.b1)
-        elif self.inner == "adam_mini":
-            kw = dict(b1=self.b1, b2=min(self.b2, 0.95), eps=self.eps)
-        elif self.inner == "adafactor":
-            kw = dict(b1=self.b1)
-        return inner_lib.make_inner(self.inner, **kw)
+            return dict(b1=self.b1, b2=self.b2, eps=self.eps)
+        if self.inner == "msgd":
+            return dict(b1=self.b1)
+        if self.inner == "adam_mini":
+            return dict(b1=self.b1, b2=min(self.b2, 0.95), eps=self.eps)
+        if self.inner == "adafactor":
+            return dict(b1=self.b1)
+        return {}
+
+    def make_inner(self) -> inner_lib.InnerOptimizer:
+        return inner_lib.make_inner(self.inner, **self.inner_kwargs())
 
 
 class LeafSpec(NamedTuple):
@@ -320,13 +329,18 @@ def make_lowrank_optimizer(
     state_layout: Optional[buckets_lib.StateLayout] = None
     if cfg.engine == "bucketed":
         bucket_plan = buckets_lib.build_bucket_plan(
-            flat_specs_static, spec_treedef.flatten_up_to(params_like)
+            flat_specs_static, spec_treedef.flatten_up_to(params_like),
+            # quantized inners need side-homogeneous buckets: adam_mini's
+            # per-row v and adam8bit's scales follow the per-leaf rows,
+            # which transpose with the slices (DESIGN.md §2.8)
+            split_sides=cfg.inner in buckets_lib.SIDE_HOMOGENEOUS_INNERS,
         )
         # Bucket-native storage: when the fused engine covers EVERY hot
-        # step of EVERY low-rank leaf (fused inner, no Fira), moments and
-        # projectors live stacked.  Otherwise (adafactor / adam-mini /
-        # 8-bit / Fira fall through to the reference loop) state stays
-        # per-leaf and the plan is used for accounting only.
+        # step of EVERY low-rank leaf (fused inner: adam / msgd /
+        # adam8bit / adam_mini, no Fira), moments and projectors live
+        # stacked.  Otherwise (adafactor / Fira fall through to the
+        # reference loop) state stays per-leaf and the plan is used for
+        # accounting only.
         if bucket_plan.buckets and inner.fused_eligible and not cfg.fira:
             state_layout = buckets_lib.build_state_layout(
                 bucket_plan, flat_specs_static,

@@ -27,8 +27,15 @@ thin reshaping wrappers.
 Scalar operands (step, lr_alpha, lr_wd) arrive via scalar prefetch so no
 retrace happens when the learning-rate schedule moves.
 
-Two inner optimizers are fused (DESIGN.md §2): ``adam`` (M, V moments,
-bias-corrected) and ``msgd`` (single moment, the optimizer of Theorem 3.4).
+Four inner optimizers are fused (DESIGN.md §2.3/§2.8): ``adam`` (M, V
+moments, bias-corrected), ``msgd`` (single moment, the optimizer of
+Theorem 3.4), ``adam8bit`` (blockwise uint8 codes + f32 scales dequantized
+/ requantized inside the moment phase, so the f32 moments never touch
+HBM), and ``adam_mini`` (per-row second moment; the tiny cross-n row
+statistic is computed by the caller, the kernel consumes the resulting
+denominator).  Quantized variants take a static ``side``: their scale /
+per-row layouts follow the PER-LEAF orientation while the stacked operands
+are canonical (side='right' buckets are side-homogeneous by construction).
 """
 from __future__ import annotations
 
@@ -41,6 +48,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import compat
+from repro.kernels.lowrank_update.quantize import QBLOCK, num_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -280,3 +288,364 @@ def lowrank_msgd_update_batched(
         interpret=interpret,
     )(scalars, w, p, r_g, m)
     return w_new, m_new
+
+
+# ---------------------------------------------------------------------------
+# Adam-mini (per-row second moment; DESIGN.md §2.8)
+#
+# The v statistic is one scalar per PER-LEAF row: a cross-n reduction for
+# side='left' buckets, which no single (batch, n-block) grid step can see.
+# It is also tiny -- (B, r) or (B, n) f32 -- so the batched entry point
+# computes v' and the direction denominator with one jnp reduction over the
+# R stack (one extra R read, r/d of a parameter pass) and the kernel fuses
+# the rest: moment update, bias-corrected direction against the broadcast
+# denominator, back-projection, W'.
+# ---------------------------------------------------------------------------
+
+
+def _adam_mini_kernel(
+    scalars,  # SMEM: (3,) f32 [step, lr_alpha, lr_wd]
+    w_ref,  # (1, bd, bn)
+    p_ref,  # (1, bd, r)
+    r_ref,  # (1, r, bn)
+    m_ref,  # (1, r, bn)
+    den_ref,  # (1, r) side='left' | (1, bn) side='right'
+    w_out,  # (1, bd, bn)
+    m_out,  # (1, r, bn)
+    n_scr,  # VMEM scratch (r, bn) f32
+    *,
+    b1: float,
+    side: str,
+):
+    i_d = pl.program_id(2)
+
+    @pl.when(i_d == 0)
+    def _update_moment():
+        r32 = r_ref[0].astype(jnp.float32)
+        m_new = b1 * m_ref[0].astype(jnp.float32) + (1.0 - b1) * r32
+        t = scalars[0]
+        bc1 = 1.0 - b1**t
+        den = den_ref[0]
+        den = den[:, None] if side == "left" else den[None, :]
+        n_scr[...] = (m_new / bc1) / den
+        m_out[0] = m_new.astype(m_out.dtype)
+
+    lr_alpha = scalars[1]
+    lr_wd = scalars[2]
+    delta = jnp.dot(
+        p_ref[0].astype(jnp.float32),
+        n_scr[...],
+        preferred_element_type=jnp.float32,
+    )
+    w_out[0] = (
+        (1.0 - lr_wd) * w_ref[0].astype(jnp.float32) - lr_alpha * delta
+    ).astype(w_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "side", "block_d", "block_n",
+                     "interpret"),
+)
+def lowrank_adam_mini_update_batched(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m: jax.Array,  # (B, r, n)
+    v: jax.Array,  # (B, r) 'left' | (B, n) 'right'
+    step: jax.Array,  # int32 scalar
+    lr_alpha: jax.Array,  # f32 scalar
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    side: str = "left",
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    from repro.kernels.lowrank_update.ref import adam_mini_stats_ref
+
+    bsz, d, r = p.shape
+    _, rr, n = r_g.shape
+    assert rr == r and w.shape == (bsz, d, n) and m.shape == (bsz, r, n)
+    assert v.shape == ((bsz, r) if side == "left" else (bsz, n))
+    bd = compat.pick_block(d, block_d)
+    bn = compat.pick_block(n, block_n)
+    grid = (bsz, n // bn, d // bd)
+
+    v_new, denom = adam_mini_stats_ref(r_g, v, step, b2=b2, eps=eps, side=side)
+    if side == "left":
+        den_op = denom[..., 0]  # (B, r)
+        den_spec = pl.BlockSpec((1, r), lambda b, i, j, s: (b, 0))
+    else:
+        den_op = denom[..., 0, :]  # (B, n)
+        den_spec = pl.BlockSpec((1, bn), lambda b, i, j, s: (b, i))
+
+    scalars = jnp.stack([
+        step.astype(jnp.float32),
+        jnp.asarray(lr_alpha, jnp.float32),
+        jnp.asarray(lr_wd, jnp.float32),
+    ])
+
+    kernel = functools.partial(_adam_mini_kernel, b1=b1, side=side)
+    w_new, m_new = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),  # W
+                pl.BlockSpec((1, bd, r), lambda b, i, j, s: (b, j, 0)),  # P
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # R
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # M
+                den_spec,  # denom
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),
+            ],
+            scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scalars, w, p, r_g, m, den_op)
+    return w_new, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam (blockwise-quantized moments; DESIGN.md §2.8)
+#
+# M and V live in HBM as uint8 codes (element-aligned with the canonical
+# (B, r, n) stack) plus f32 per-row-chunk scales in PER-LEAF row order
+# (quantize.py).  The moment phase dequantizes the (r, bn) slab in VMEM,
+# updates, stashes the bias-corrected direction, and requantizes -- the
+# f32 moments never touch HBM; the back-projection reads the VMEM scratch
+# like the other variants.  Chunks must tile the slab: side='left' needs
+# n % QBLOCK == 0 (bn is picked 256-aligned), side='right' needs
+# r <= QBLOCK or r % QBLOCK == 0 (ops.py falls back to the jnp ref
+# otherwise -- same math, moments round-tripping HBM as XLA temporaries).
+# ---------------------------------------------------------------------------
+
+
+def _dq_slab(codes, scale, side: str, signed: bool):
+    """Dequantize a canonical (r, bn) code slab against its scale slab."""
+    r, bn = codes.shape
+    c = codes.astype(jnp.float32)
+    if side == "left":
+        nb = scale.shape[-1]  # (r, nb), nb = bn // QBLOCK
+        c = c.reshape(r, nb, QBLOCK)
+        s = scale[:, :, None]
+        if signed:
+            vals = (c - 127.0) / 127.0 * s
+        else:
+            rel = c / 255.0
+            vals = rel * rel * s
+        return vals.reshape(r, bn)
+    nb_r = scale.shape[-1]  # (bn, nb_r): chunks along the r axis
+    s = jnp.broadcast_to(
+        scale.T[:, None, :], (nb_r, QBLOCK, bn)
+    ).reshape(nb_r * QBLOCK, bn)[:r]
+    if signed:
+        return (c - 127.0) / 127.0 * s
+    rel = c / 255.0
+    return rel * rel * s
+
+
+def _q_slab(x, side: str, signed: bool):
+    """Requantize a canonical (r, bn) f32 slab -> (codes, scale slab)."""
+    r, bn = x.shape
+    if side == "left":
+        nb = bn // QBLOCK
+        xb = x.reshape(r, nb, QBLOCK)
+        absmax = jnp.max(jnp.abs(xb), axis=-1)
+        scale = jnp.where(absmax > 0, absmax, 1.0)  # (r, nb)
+        sb = scale[:, :, None]
+        if signed:
+            codes = (
+                jnp.clip(jnp.round(xb / sb * 127.0), -127, 127) + 127
+            ).astype(jnp.uint8)
+        else:
+            rel = jnp.sqrt(jnp.clip(xb / sb, 0.0, 1.0))
+            codes = jnp.clip(jnp.round(rel * 255.0), 0, 255).astype(jnp.uint8)
+        return codes.reshape(r, bn), scale
+    nb_r = num_blocks(r)
+    if nb_r == 1:
+        # one (possibly short) chunk per per-leaf row of length r
+        absmax = jnp.max(jnp.abs(x), axis=0)
+        scale = jnp.where(absmax > 0, absmax, 1.0)  # (bn,)
+        s_full = scale[None, :]
+        scale_out = scale[:, None]  # (bn, 1)
+    else:  # r % QBLOCK == 0 (enforced by the dispatcher)
+        xb = x.reshape(nb_r, QBLOCK, bn)
+        absmax = jnp.max(jnp.abs(xb), axis=1)
+        scale = jnp.where(absmax > 0, absmax, 1.0)  # (nb_r, bn)
+        s_full = jnp.broadcast_to(
+            scale[:, None, :], (nb_r, QBLOCK, bn)
+        ).reshape(r, bn)
+        scale_out = scale.T  # (bn, nb_r)
+    if signed:
+        codes = (
+            jnp.clip(jnp.round(x / s_full * 127.0), -127, 127) + 127
+        ).astype(jnp.uint8)
+    else:
+        rel = jnp.sqrt(jnp.clip(x / s_full, 0.0, 1.0))
+        codes = jnp.clip(jnp.round(rel * 255.0), 0, 255).astype(jnp.uint8)
+    return codes, scale_out
+
+
+def _adam8bit_kernel(
+    scalars,  # SMEM: (3,) f32 [step, lr_alpha, lr_wd]
+    w_ref,  # (1, bd, bn)
+    p_ref,  # (1, bd, r)
+    r_ref,  # (1, r, bn)
+    mc_ref,  # (1, r, bn) uint8
+    ms_ref,  # (1, r, nb) 'left' | (1, bn, nb_r) 'right'
+    vc_ref,  # (1, r, bn) uint8
+    vs_ref,
+    w_out,
+    mc_out,
+    ms_out,
+    vc_out,
+    vs_out,
+    n_scr,  # VMEM scratch (r, bn) f32
+    *,
+    b1: float,
+    b2: float,
+    eps: float,
+    side: str,
+):
+    i_d = pl.program_id(2)
+
+    @pl.when(i_d == 0)
+    def _update_moments():
+        r32 = r_ref[0].astype(jnp.float32)
+        m = _dq_slab(mc_ref[0], ms_ref[0], side, signed=True)
+        v = _dq_slab(vc_ref[0], vs_ref[0], side, signed=False)
+        m_new = b1 * m + (1.0 - b1) * r32
+        v_new = b2 * v + (1.0 - b2) * r32 * r32
+        t = scalars[0]
+        mhat = m_new / (1.0 - b1**t)
+        vhat = v_new / (1.0 - b2**t)
+        n_scr[...] = mhat / (jnp.sqrt(vhat) + eps)
+        mc, ms = _q_slab(m_new, side, signed=True)
+        vc, vs = _q_slab(v_new, side, signed=False)
+        mc_out[0] = mc
+        ms_out[0] = ms
+        vc_out[0] = vc
+        vs_out[0] = vs
+
+    lr_alpha = scalars[1]
+    lr_wd = scalars[2]
+    delta = jnp.dot(
+        p_ref[0].astype(jnp.float32),
+        n_scr[...],
+        preferred_element_type=jnp.float32,
+    )
+    w_out[0] = (
+        (1.0 - lr_wd) * w_ref[0].astype(jnp.float32) - lr_alpha * delta
+    ).astype(w_out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b1", "b2", "eps", "side", "block_d", "block_n",
+                     "interpret"),
+)
+def lowrank_adam8bit_update_batched(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m_codes: jax.Array,  # (B, r, n) uint8
+    m_scale: jax.Array,  # (B, r, n//QBLOCK) 'left' | (B, n, nb_r) 'right'
+    v_codes: jax.Array,  # (B, r, n) uint8
+    v_scale: jax.Array,
+    step: jax.Array,  # int32 scalar
+    lr_alpha: jax.Array,  # f32 scalar
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    side: str = "left",
+    block_d: int = 256,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    bsz, d, r = p.shape
+    _, rr, n = r_g.shape
+    assert rr == r and w.shape == (bsz, d, n)
+    assert m_codes.shape == (bsz, r, n) and m_codes.dtype == jnp.uint8
+    bd = compat.pick_block(d, block_d)
+    if side == "left":
+        assert n % QBLOCK == 0, "left-side 8-bit kernel needs n % 256 == 0"
+        bn = compat.pick_block(n, block_n, align=QBLOCK)
+        assert bn % QBLOCK == 0
+        nb = n // QBLOCK
+        assert m_scale.shape == (bsz, r, nb)
+        scale_spec = pl.BlockSpec(
+            (1, r, bn // QBLOCK), lambda b, i, j, s: (b, 0, i)
+        )
+    else:
+        nb_r = num_blocks(r)
+        assert r <= QBLOCK or r % QBLOCK == 0, (
+            "right-side 8-bit kernel needs r <= 256 or r % 256 == 0"
+        )
+        bn = compat.pick_block(n, block_n)
+        assert m_scale.shape == (bsz, n, nb_r)
+        scale_spec = pl.BlockSpec((1, bn, nb_r), lambda b, i, j, s: (b, i, 0))
+    grid = (bsz, n // bn, d // bd)
+
+    scalars = jnp.stack([
+        step.astype(jnp.float32),
+        jnp.asarray(lr_alpha, jnp.float32),
+        jnp.asarray(lr_wd, jnp.float32),
+    ])
+
+    code_spec = pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i))
+    kernel = functools.partial(
+        _adam8bit_kernel, b1=b1, b2=b2, eps=eps, side=side
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),  # W
+                pl.BlockSpec((1, bd, r), lambda b, i, j, s: (b, j, 0)),  # P
+                pl.BlockSpec((1, r, bn), lambda b, i, j, s: (b, 0, i)),  # R
+                code_spec,  # M codes
+                scale_spec,  # M scales
+                code_spec,  # V codes
+                scale_spec,  # V scales
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bd, bn), lambda b, i, j, s: (b, j, i)),
+                code_spec,
+                scale_spec,
+                code_spec,
+                scale_spec,
+            ],
+            scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(m_codes.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(m_scale.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v_codes.shape, jnp.uint8),
+            jax.ShapeDtypeStruct(v_scale.shape, jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scalars, w, p, r_g, m_codes, m_scale, v_codes, v_scale)
+    return tuple(outs)

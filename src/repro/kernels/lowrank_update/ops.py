@@ -21,10 +21,13 @@ import jax.numpy as jnp
 
 from repro.kernels.lowrank_update import ref as ref_lib
 from repro.kernels.lowrank_update.kernel import (
+    lowrank_adam8bit_update_batched,
+    lowrank_adam_mini_update_batched,
     lowrank_adam_update,
     lowrank_adam_update_batched,
     lowrank_msgd_update_batched,
 )
+from repro.kernels.lowrank_update.quantize import QBLOCK
 
 
 def _on_tpu() -> bool:
@@ -128,4 +131,82 @@ def bucketed_msgd_update(
         )
     return ref_lib.lowrank_msgd_update_ref(
         w, p, r_g, m, b1=b1, lr_alpha=lr_alpha, lr_wd=lr_wd
+    )
+
+
+def bucketed_adam_mini_update(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m: jax.Array,  # (B, r, n)
+    v: jax.Array,  # (B, r) 'left' | (B, n) 'right'
+    step: jax.Array,
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    side: str = "left",
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Adam-mini with the per-row second moment in storage layout.  The
+    tiny v statistic runs as one jnp reduction either way (it crosses
+    n-blocks on side='left'); the kernel fuses the rest."""
+    if force_pallas or _on_tpu():
+        return lowrank_adam_mini_update_batched(
+            w, p, r_g, m, v, step, lr_alpha, lr_wd,
+            b1=b1, b2=b2, eps=eps, side=side,
+            interpret=interpret or not _on_tpu(),
+        )
+    return ref_lib.lowrank_adam_mini_update_ref(
+        w, p, r_g, m, v, step, lr_alpha, lr_wd,
+        b1=b1, b2=b2, eps=eps, side=side,
+    )
+
+
+def adam8bit_kernel_supported(side: str, n: int, r: int) -> bool:
+    """Whether the quantization chunks tile the kernel's (r, bn) slabs:
+    side='left' chunks run along n (need n % 256 == 0 so a 256-aligned bn
+    exists); side='right' chunks run along r (need one chunk per per-leaf
+    row, r <= 256, or whole chunks, r % 256 == 0)."""
+    if side == "left":
+        return n % QBLOCK == 0
+    return r <= QBLOCK or r % QBLOCK == 0
+
+
+def bucketed_adam8bit_update(
+    w: jax.Array,  # (B, d, n)
+    p: jax.Array,  # (B, d, r)
+    r_g: jax.Array,  # (B, r, n)
+    m_codes: jax.Array,  # (B, r, n) uint8
+    m_scale: jax.Array,  # (B, r, nb) 'left' | (B, n, nb_r) 'right'
+    v_codes: jax.Array,
+    v_scale: jax.Array,
+    step: jax.Array,
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    side: str = "left",
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """8-bit Adam with codes/scales resident in VMEM: dequant -> moment
+    update -> direction -> requant -> W' in one pass.  Falls back to the
+    jnp ref (same math, same codes) when the chunk partition cannot tile
+    the slab -- coverage is selected, never failed."""
+    n, r = r_g.shape[-1], p.shape[-1]
+    if (force_pallas or _on_tpu()) and adam8bit_kernel_supported(side, n, r):
+        return lowrank_adam8bit_update_batched(
+            w, p, r_g, m_codes, m_scale, v_codes, v_scale, step,
+            lr_alpha, lr_wd, b1=b1, b2=b2, eps=eps, side=side,
+            interpret=interpret or not _on_tpu(),
+        )
+    return ref_lib.lowrank_adam8bit_update_ref(
+        w, p, r_g, m_codes, m_scale, v_codes, v_scale, step,
+        lr_alpha, lr_wd, b1=b1, b2=b2, eps=eps, side=side,
     )

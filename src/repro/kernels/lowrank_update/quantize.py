@@ -1,0 +1,119 @@
+"""Blockwise 8-bit quantization shared by the 8-bit Adam inner optimizer
+(core/inner.py) and the fused quantized update kernels (kernel.py / ref.py).
+
+Block partition invariant (DESIGN.md §2.8): blocks are 256-element chunks
+**within each row of the last axis** -- a block never crosses a row or a
+leading (batch/stack) dim.  The partition is therefore a pure refinement of
+the tensor's row-major flattening that is invariant to how leading dims are
+stacked: quantizing a ``(L, a, b)`` scan leaf equals quantizing its L
+``(a, b)`` slices, and a bucket stack holding those slices carries exactly
+the per-leaf codes/scales.  That is what makes the bucket-native quantized
+state layout (core/buckets.py) *lossless* relative to the per-leaf
+reference: canonical <-> storage conversion moves codes and scales around
+(reshape/transpose/concat) without ever re-quantizing.
+
+Signed values (first moment) use linear codes; unsigned values (second
+moment) use SQRT-mapped codes -- ``code = round(sqrt(v/s) * 255)`` --
+because Adam divides by sqrt(v): linear codes round small v to 0 and the
+denominator collapses (observed divergence); the sqrt map allocates
+resolution near zero like Dettmers' dynamic code.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Quantization block: 256 elements along the last axis (a short final
+# chunk when the row length is not a multiple -- no cross-row padding).
+QBLOCK = 256
+
+
+def num_blocks(row: int) -> int:
+    """Blocks per row of length ``row`` (last one possibly short)."""
+    return -(-row // QBLOCK)
+
+
+def _row_blocks(x: jax.Array) -> jax.Array:
+    """(..., n) -> (..., nb, QBLOCK), zero-padding the short final chunk."""
+    n = x.shape[-1]
+    nb = num_blocks(n)
+    pad = nb * QBLOCK - n
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(x.shape[:-1] + (nb, QBLOCK))
+
+
+def _unblock(xb: jax.Array, n: int) -> jax.Array:
+    """(..., nb, QBLOCK) -> (..., n), dropping the pad."""
+    return xb.reshape(xb.shape[:-2] + (-1,))[..., :n]
+
+
+def quantize_blockwise(x: jax.Array, signed: bool) -> Tuple[jax.Array, jax.Array]:
+    """Per-row-chunk absmax 8-bit quantization.
+
+    Returns ``(codes, scales)`` with ``codes`` uint8 of ``x.shape`` and
+    ``scales`` f32 of ``x.shape[:-1] + (num_blocks(x.shape[-1]),)``.
+    """
+    n = x.shape[-1]
+    xb = _row_blocks(x.astype(jnp.float32))
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    if signed:
+        q = jnp.clip(jnp.round(xb / scale[..., None] * 127.0), -127, 127)
+        codes = (q + 127).astype(jnp.uint8)
+    else:
+        rel = jnp.sqrt(jnp.clip(xb / scale[..., None], 0.0, 1.0))
+        codes = jnp.clip(jnp.round(rel * 255.0), 0, 255).astype(jnp.uint8)
+    return _unblock(codes, n), scale
+
+
+def dequantize_blockwise(
+    codes: jax.Array, scale: jax.Array, signed: bool
+) -> jax.Array:
+    """Inverse map: uint8 codes + per-chunk scales -> f32 of codes.shape."""
+    n = codes.shape[-1]
+    cb = _row_blocks(codes).astype(jnp.float32)
+    if signed:
+        vals = (cb - 127.0) / 127.0 * scale[..., None]
+    else:
+        rel = cb / 255.0
+        vals = rel * rel * scale[..., None]
+    return _unblock(vals, n)
+
+
+# ---------------------------------------------------------------------------
+# canonical (stacked) orientation helpers -- the bucket-native layout
+# ---------------------------------------------------------------------------
+#
+# Bucket stacks hold moments in the canonical side='left' orientation
+# (core/buckets.py): side='right' slices enter transposed.  Quantization
+# blocks follow the PER-LEAF rows (the invariant above), so a side='right'
+# stack quantizes through a transpose: codes come back element-aligned with
+# the canonical (B, r, n) moment stack, scales stay indexed by per-leaf row
+# -- (B, r, nb) for 'left' buckets, (B, n, nb_r) for 'right' buckets.
+
+
+def quantize_stacked(
+    x: jax.Array, side: str, signed: bool
+) -> Tuple[jax.Array, jax.Array]:
+    """Canonical (B, r, n) f32 -> (canonical uint8 codes, per-leaf scales)."""
+    if side == "right":
+        x = jnp.swapaxes(x, -1, -2)
+    codes, scale = quantize_blockwise(x, signed)
+    if side == "right":
+        codes = jnp.swapaxes(codes, -1, -2)
+    return codes, scale
+
+
+def dequantize_stacked(
+    codes: jax.Array, scale: jax.Array, side: str, signed: bool
+) -> jax.Array:
+    """Inverse of ``quantize_stacked``: canonical codes -> canonical f32."""
+    if side == "right":
+        codes = jnp.swapaxes(codes, -1, -2)
+    x = dequantize_blockwise(codes, scale, signed)
+    if side == "right":
+        x = jnp.swapaxes(x, -1, -2)
+    return x

@@ -14,6 +14,18 @@ leading batch dims (the bucketed engine's stacked (B, d, n) layout):
     W' = (1 - lr_wd) W - lr_alpha * (P @ M')
 
 with bc1 = 1-b1^t, bc2 = 1-b2^t.  Returns (W', M', V') / (W', M').
+
+The quantized variants (DESIGN.md §2.8) take a ``side`` parameter because
+their second-moment / scale layouts follow the PER-LEAF orientation while
+the stacked operands are canonical (side='right' slices enter transposed):
+
+  Adam-mini: V is one scalar per per-leaf row -- ``(.., r)`` for 'left'
+    buckets (reduced over n), ``(.., n)`` for 'right' buckets (reduced over
+    the r axis, which is the per-leaf last axis).
+  8-bit Adam: M and V are uint8 codes element-aligned with the canonical
+    stack plus f32 per-row-chunk scales in per-leaf row order
+    (kernels/lowrank_update/quantize.py) -- dequant -> moment update ->
+    direction -> requant, bit-identical to inner.adam8bit per leaf.
 """
 from __future__ import annotations
 
@@ -21,6 +33,8 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.lowrank_update import quantize as qz
 
 
 def lowrank_adam_update_ref(
@@ -65,3 +79,108 @@ def lowrank_msgd_update_ref(
         "...dr,...rn->...dn", p.astype(jnp.float32), m_new
     )
     return w_new.astype(w.dtype), m_new
+
+
+def adam_mini_stats_ref(
+    r_g: jax.Array,  # (..., r, n) canonical projected gradient
+    v: jax.Array,  # (..., r) side='left' | (..., n) side='right'
+    step: jax.Array,
+    *,
+    b2: float,
+    eps: float,
+    side: str = "left",
+) -> Tuple[jax.Array, jax.Array]:
+    """Adam-mini's per-row second-moment update + direction denominator.
+
+    Per-leaf semantics (inner.adam_mini): one v entry per row of the
+    PER-LEAF projected gradient, reduced over its last axis.  In canonical
+    orientation that is a reduction over n for 'left' buckets and over r
+    for 'right' buckets (the transpose makes the per-leaf last axis the
+    canonical r axis).  Returns ``(v_new, denom)`` with ``denom``
+    broadcastable against the canonical (..., r, n) moment:
+    ``N = (M'/bc1) / denom``.
+    """
+    r32 = r_g.astype(jnp.float32)
+    t = step.astype(jnp.float32)
+    if side == "left":
+        blk = jnp.mean(r32 * r32, axis=-1)  # (..., r)
+        v_new = b2 * v + (1.0 - b2) * blk
+        vb = v_new[..., :, None]
+    else:
+        # reduce in per-leaf orientation so the summation order (and hence
+        # the fp32 result) is bit-identical to the per-leaf loop
+        rt = jnp.swapaxes(r32, -1, -2)
+        blk = jnp.mean(rt * rt, axis=-1)  # (..., n)
+        v_new = b2 * v + (1.0 - b2) * blk
+        vb = v_new[..., None, :]
+    vhat = vb / (1.0 - b2**t)
+    denom = jnp.sqrt(vhat) + eps
+    return v_new, denom
+
+
+def lowrank_adam_mini_update_ref(
+    w: jax.Array,  # (..., d, n)
+    p: jax.Array,  # (..., d, r)
+    r_g: jax.Array,  # (..., r, n)
+    m: jax.Array,  # (..., r, n)
+    v: jax.Array,  # (..., r) 'left' | (..., n) 'right'
+    step: jax.Array,
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float,
+    b2: float,
+    eps: float,
+    side: str = "left",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    r32 = r_g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * r32
+    v_new, denom = adam_mini_stats_ref(
+        r_g, v, step, b2=b2, eps=eps, side=side
+    )
+    t = step.astype(jnp.float32)
+    n_dir = (m_new / (1.0 - b1**t)) / denom
+    w_new = (1.0 - lr_wd) * w.astype(jnp.float32) - lr_alpha * jnp.einsum(
+        "...dr,...rn->...dn", p.astype(jnp.float32), n_dir
+    )
+    return w_new.astype(w.dtype), m_new, v_new
+
+
+def lowrank_adam8bit_update_ref(
+    w: jax.Array,  # (..., d, n)
+    p: jax.Array,  # (..., d, r)
+    r_g: jax.Array,  # (..., r, n)
+    m_codes: jax.Array,  # (..., r, n) uint8, canonical orientation
+    m_scale: jax.Array,  # (..., r, nb) 'left' | (..., n, nb_r) 'right'
+    v_codes: jax.Array,  # (..., r, n) uint8
+    v_scale: jax.Array,
+    step: jax.Array,
+    lr_alpha: jax.Array,
+    lr_wd: jax.Array | float = 0.0,
+    *,
+    b1: float,
+    b2: float,
+    eps: float,
+    side: str = "left",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused dequant -> Adam moment update -> direction -> requant -> W'.
+
+    Codes are element-aligned with the canonical stack; scales follow the
+    per-leaf row-chunk partition (quantize.py), so every slice is
+    bit-identical to inner.adam8bit run on the per-leaf orientation.
+    """
+    r32 = r_g.astype(jnp.float32)
+    m = qz.dequantize_stacked(m_codes, m_scale, side, signed=True)
+    v = qz.dequantize_stacked(v_codes, v_scale, side, signed=False)
+    m_new = b1 * m + (1.0 - b1) * r32
+    v_new = b2 * v + (1.0 - b2) * r32 * r32
+    t = step.astype(jnp.float32)
+    mhat = m_new / (1.0 - b1**t)
+    vhat = v_new / (1.0 - b2**t)
+    n_dir = mhat / (jnp.sqrt(vhat) + eps)
+    w_new = (1.0 - lr_wd) * w.astype(jnp.float32) - lr_alpha * jnp.einsum(
+        "...dr,...rn->...dn", p.astype(jnp.float32), n_dir
+    )
+    mc, ms = qz.quantize_stacked(m_new, side, signed=True)
+    vc, vs = qz.quantize_stacked(v_new, side, signed=False)
+    return w_new.astype(w.dtype), mc, ms, vc, vs

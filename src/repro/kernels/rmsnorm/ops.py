@@ -1,0 +1,39 @@
+"""Backend dispatch for the fused RMSNorm kernel.
+
+Same contract as the other kernel families (lowrank_update, galore_project,
+power_iter):
+
+* TPU backend: the Pallas kernel (kernel.py) -- one HBM read + one write
+  per row block instead of the three passes of the unfused form.
+* everywhere else: the pure-jnp reference (ref.py) -- identical math (fp32
+  statistics, input-dtype output), so models are backend-agnostic and CI
+  proves kernel parity in interpret mode.
+
+``models/layers.rmsnorm`` routes through here, so every architecture in
+models/ picks up the fused kernel on TPU without touching model code.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm import kernel as kernel_lib
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm(
+    x: jax.Array,  # (..., D)
+    scale: jax.Array,  # (D,)
+    eps: float = 1e-5,
+    *,
+    force_pallas: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    if force_pallas or _on_tpu():
+        return kernel_lib.rmsnorm(
+            x, scale, eps=eps, interpret=interpret or not _on_tpu()
+        )
+    return rmsnorm_ref(x, scale, eps)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.rmsnorm import ops as rmsnorm_ops
 
 PyTree = Any
 
@@ -46,11 +47,10 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
 
 
 def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
-    dt = x.dtype
-    x32 = x.astype(jnp.float32)
-    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
-    y = x32 * jax.lax.rsqrt(var + eps)
-    return (y * scale.astype(jnp.float32)).astype(dt)
+    # Backend-dispatched like every other kernel family: the fused Pallas
+    # kernel on TPU (one read + one write per row block), the jnp ref
+    # elsewhere (kernels/rmsnorm/ops.py) -- identical numerics.
+    return rmsnorm_ops.rmsnorm(x, scale, eps)
 
 
 def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,

@@ -118,6 +118,45 @@ def train_loop(
     history: List[Dict[str, float]] = []
     losses: List[float] = []
 
+    # Per-step metrics stay ON DEVICE between fetch points: ``float(m)``
+    # forces a device->host sync every step, serializing dispatch against
+    # the accelerator.  Steps buffer (step, device_metrics, health) here
+    # and one batched fetch drains the buffer at log_every cadence (and at
+    # refresh / checkpoint / preemption / final steps, keeping the buffer
+    # small and the checkpoint-adjacent history consistent).  ``losses``
+    # and ``history`` come out identical to the per-step fetch -- only the
+    # moment the NaN sentinel can raise moves to the fetch point
+    # (StepMonitor.note_loss; counters behave identically).
+    pending: List = []  # (step, device metrics dict, health floats)
+
+    def _flush_metrics(cur_state, swallow_nan_abort=False):
+        # drains entry-by-entry so a NaN abort mid-flush never re-processes
+        # (or drops) already-fetched losses; the finally-path flush
+        # swallows the abort instead of masking an in-flight exception
+        while pending:
+            s, m, health = pending.pop(0)
+            loss = float(m["loss"])
+            losses.append(loss)
+            try:
+                monitor.note_loss(s, loss)
+            except FloatingPointError:
+                if not swallow_nan_abort:
+                    raise
+            if s % log_every == 0 or s == train_cfg.total_steps - 1:
+                rec = {
+                    "step": float(s),
+                    "loss": loss,
+                    "grad_norm": float(m.get("grad_norm", np.nan)),
+                    "update_norm": float(m.get("update_norm", np.nan)),
+                    **{k: float(v) for k, v in health.items()},
+                }
+                if eval_fn is not None:
+                    # a log step always flushes itself immediately, so the
+                    # only log-step entry in the buffer is the current one
+                    # -- eval_fn sees the same state as per-step fetching
+                    rec.update(eval_fn(cur_state, s))
+                history.append(rec)
+
     step = start_step
     try:
         for step in range(start_step, train_cfg.total_steps):
@@ -128,17 +167,17 @@ def train_loop(
             # Staggered refresh: group g refreshes at steps where
             # step % (tau/groups) == 0, cycling groups (DESIGN.md §2).
             sub_tau = max(tau // groups, 1)
-            if step % sub_tau == 0:
+            is_refresh = step % sub_tau == 0
+            if is_refresh:
                 group = (step // sub_tau) % groups
                 state, m = step_fns["jit_refresh_step"](
                     state, batch, group=group
                 )
             else:
                 state, m = step_fns["jit_step"](state, batch)
-            loss = float(m["loss"])
-            losses.append(loss)
-            health = monitor.end_step(step, loss)
-            if tracker is not None and step % sub_tau == 0:
+            health = monitor.end_step(step)
+            pending.append((step, m, health))
+            if tracker is not None and is_refresh:
                 projs = metrics_lib.collect_projectors(
                     state.opt_state, optimizer.specs,
                     layout=optimizer.state_layout,
@@ -146,21 +185,19 @@ def train_loop(
                 tracker.observe(
                     {k: np.asarray(v) for k, v in projs.items()}
                 )
-            if step % log_every == 0 or step == train_cfg.total_steps - 1:
-                rec = {
-                    "step": float(step),
-                    "loss": loss,
-                    "grad_norm": float(m.get("grad_norm", np.nan)),
-                    "update_norm": float(m.get("update_norm", np.nan)),
-                    **{k: float(v) for k, v in health.items()},
-                }
-                if eval_fn is not None:
-                    rec.update(eval_fn(state, step))
-                history.append(rec)
-            if (
+            checkpoint_due = (
                 train_cfg.checkpoint_every > 0
                 and (step + 1) % train_cfg.checkpoint_every == 0
+            )
+            if (
+                is_refresh
+                or checkpoint_due
+                or guard.requested
+                or step % log_every == 0
+                or step == train_cfg.total_steps - 1
             ):
+                _flush_metrics(state)
+            if checkpoint_due:
                 manager.save(
                     state, step + 1, blocking=not train_cfg.async_checkpoint
                 )
@@ -170,6 +207,7 @@ def train_loop(
         else:
             step = train_cfg.total_steps - 1
     finally:
+        _flush_metrics(state, swallow_nan_abort=True)
         manager.wait()
         guard.restore()
 

@@ -38,7 +38,16 @@ class StepMonitor:
     def start_step(self) -> None:
         self._t_start = self._clock()
 
-    def end_step(self, step: int, loss: float) -> Dict[str, float]:
+    def end_step(
+        self, step: int, loss: Optional[float] = None
+    ) -> Dict[str, float]:
+        """Close the step's wall-time window (straggler bookkeeping).
+
+        ``loss`` may be omitted when the caller defers the device->host
+        metric fetch (train/loop.py fetches at ``log_every`` cadence to
+        avoid a per-step sync) and feeds the NaN sentinel later via
+        ``note_loss`` -- the timing path never needs the loss value.
+        """
         dt = self._clock() - (self._t_start or self._clock())
         self._times.append(dt)
         if len(self._times) > self.window:
@@ -50,6 +59,21 @@ class StepMonitor:
         )
         if is_straggler:
             self.stragglers.append(step)
+        if loss is not None:
+            self.note_loss(step, loss)
+        return {
+            "step_time_s": dt,
+            "median_step_time_s": med,
+            "straggler": float(is_straggler),
+        }
+
+    def note_loss(self, step: int, loss: float) -> None:
+        """NaN/Inf sentinel: consecutive non-finite losses abort the run.
+
+        Counters behave identically whether losses arrive per step or in
+        deferred batches (the counter resets on every finite loss either
+        way); only the *moment* the abort raises moves to the fetch point.
+        """
         if not math.isfinite(loss):
             self.bad_loss_count += 1
             if self.bad_loss_count > self.max_bad_losses:
@@ -59,11 +83,6 @@ class StepMonitor:
                 )
         else:
             self.bad_loss_count = 0
-        return {
-            "step_time_s": dt,
-            "median_step_time_s": med,
-            "straggler": float(is_straggler),
-        }
 
 
 class HeartbeatRegistry:

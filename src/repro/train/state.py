@@ -4,6 +4,12 @@ Checkpoints always serialize the **canonical per-leaf** optimizer-state
 layout (DESIGN.md §2.5): a run training with the bucket-native storage
 layout (``engine="bucketed"`` + fused inner) converts on save/load, so a
 checkpoint written under one engine resumes bit-for-bit under the other.
+This covers the quantized layouts too (§2.8): adam8bit's uint8 codes and
+f32 blockwise scales, and adam_mini's per-row second moment, round-trip
+through the canonical ``Adam8bitState`` / ``AdamMiniState`` leaves without
+re-quantization -- the conversion is reshape/transpose/concat only, so the
+on-disk manifest is identical whether the run used the reference loop or
+the fused quantized kernels.
 """
 from __future__ import annotations
 

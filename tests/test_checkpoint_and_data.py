@@ -128,9 +128,9 @@ def _lr_grads(params, seed):
     )
 
 
-def _make_opt(engine, params):
+def _make_opt(engine, params, inner="adam"):
     return make_optimizer(
-        "galore-sara-adam", params, rank=8, lr=1e-2, alpha=0.5, min_dim=8,
+        f"galore-sara-{inner}", params, rank=8, lr=1e-2, alpha=0.5, min_dim=8,
         momentum_carry="reproject", engine=engine,
     )
 
@@ -144,18 +144,22 @@ def _steps(opt, state, params, step_range):
     return params, state
 
 
+@pytest.mark.parametrize("inner", ["adam", "adam8bit", "adam_mini"])
 @pytest.mark.parametrize(
     "engine_a,engine_b",
     [("bucketed", "reference"), ("reference", "bucketed")],
 )
 def test_checkpoint_cross_engine_resume_bit_identical(
-    tmp_ckpt, engine_a, engine_b
+    tmp_ckpt, engine_a, engine_b, inner
 ):
     """Save under one engine, resume under the other: the fp32 trajectory
     (params AND canonical optimizer state) is bit-identical with never
-    having switched -- the on-disk layout is engine-independent."""
+    having switched -- the on-disk layout is engine-independent.  For the
+    quantized inners (ISSUE 5) that includes the uint8 codes and f32
+    blockwise scales surviving the canonical <-> storage round-trip
+    without re-quantization."""
     params = _lr_params()
-    opt_a = _make_opt(engine_a, params)
+    opt_a = _make_opt(engine_a, params, inner)
     p_a, st_a = _steps(opt_a, opt_a.init(params), params, range(3))
     can_a, loc_a = checkpoint_converters(opt_a)
     mgr_a = CheckpointManager(
@@ -168,10 +172,17 @@ def test_checkpoint_cross_engine_resume_bit_identical(
     with open(os.path.join(tmp_ckpt, "step_00000003", "manifest.json")) as f:
         manifest = json.load(f)
     assert not any("buckets" in k for k in manifest["leaves"])
-    assert any(".inner" in k and ".m" in k for k in manifest["leaves"])
+    if inner == "adam8bit":
+        # quantized canonical leaves: codes + scales, not f32 moments
+        assert any(".inner" in k and "m_codes" in k
+                   for k in manifest["leaves"])
+        assert any(".inner" in k and "m_scale" in k
+                   for k in manifest["leaves"])
+    else:
+        assert any(".inner" in k and ".m" in k for k in manifest["leaves"])
 
     # resume under engine B from the checkpoint
-    opt_b = _make_opt(engine_b, params)
+    opt_b = _make_opt(engine_b, params, inner)
     can_b, loc_b = checkpoint_converters(opt_b)
     mgr_b = CheckpointManager(
         tmp_ckpt, keep=2, canonicalize=can_b, localize=loc_b
@@ -193,6 +204,7 @@ def test_checkpoint_cross_engine_resume_bit_identical(
         jax.tree_util.tree_leaves(canonical_opt_state(opt_b, st_b)),
         jax.tree_util.tree_leaves(canonical_opt_state(opt_b, st_ref)),
     ):
+        assert a.dtype == b.dtype  # uint8 codes stay uint8 through disk
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -89,7 +89,7 @@ def test_adam_mini_rowwise_v():
 def test_quantize_roundtrip_error_bounded():
     x = jax.random.normal(KEY, (1000,)) * 3.0
     codes, scale = inner_lib.quantize_blockwise(x, signed=True)
-    x2 = inner_lib.dequantize_blockwise(codes, scale, x.shape, signed=True)
+    x2 = inner_lib.dequantize_blockwise(codes, scale, signed=True)
     err = np.abs(np.asarray(x - x2))
     # linear 8-bit: error < absmax/127 per block
     assert err.max() < float(jnp.max(jnp.abs(x))) / 127 + 1e-6
@@ -98,7 +98,7 @@ def test_quantize_roundtrip_error_bounded():
 def test_quantize_unsigned_nonneg():
     x = jnp.abs(jax.random.normal(KEY, (512,)))
     codes, scale = inner_lib.quantize_blockwise(x, signed=False)
-    x2 = inner_lib.dequantize_blockwise(codes, scale, x.shape, signed=False)
+    x2 = inner_lib.dequantize_blockwise(codes, scale, signed=False)
     assert (np.asarray(x2) >= 0).all()
     # sqrt-mapped codes: |err| <= 2*sqrt(v*max)/255 + max/255^2
     mx = float(jnp.max(x))
@@ -110,7 +110,7 @@ def test_quantize_unsigned_preserves_small_values():
     """The reason for sqrt codes: tiny v must not collapse to zero."""
     x = jnp.array([1e-6, 1e-4, 1e-2, 1.0])
     codes, scale = inner_lib.quantize_blockwise(x, signed=False)
-    x2 = inner_lib.dequantize_blockwise(codes, scale, x.shape, signed=False)
+    x2 = inner_lib.dequantize_blockwise(codes, scale, signed=False)
     assert float(x2[1]) > 0  # linear codes would round 1e-4/1.0 to 0
 
 

@@ -36,6 +36,34 @@ def test_rmsnorm_unit_variance_rows():
     np.testing.assert_allclose(rms, np.ones(16), atol=1e-3)
 
 
+@pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256)])
+def test_rmsnorm_ops_dispatch(shape):
+    """The ops.py backend dispatch (like every other kernel family): the
+    jnp ref off-TPU, the Pallas kernel under force_pallas -- parity in
+    interpret mode; models/layers.rmsnorm routes through it."""
+    from repro.kernels.rmsnorm import ops as rms_ops
+    from repro.models import layers as L
+
+    x = (jax.random.normal(KEY, shape) * 2.0).astype(jnp.bfloat16)
+    scale = jax.random.normal(jax.random.fold_in(KEY, 2), (shape[-1],))
+    ref = rmsnorm_ref(x, scale)
+    # CPU dispatch: the ref path, bit-identical
+    np.testing.assert_array_equal(
+        np.asarray(rms_ops.rmsnorm(x, scale), np.float32),
+        np.asarray(ref, np.float32),
+    )
+    # forced kernel path (interpret): parity within bf16 tolerance
+    out = rms_ops.rmsnorm(x, scale, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=2e-2
+    )
+    # the model-layer entry point routes through the dispatch
+    np.testing.assert_array_equal(
+        np.asarray(L.rmsnorm(x, scale), np.float32),
+        np.asarray(ref, np.float32),
+    )
+
+
 @pytest.mark.parametrize("d,n,r", [
     (256, 512, 128), (512, 1024, 64), (100, 200, 16), (384, 768, 256),
 ])

@@ -111,6 +111,91 @@ def test_bucketed_loop_resumes_across_engines(setup, tmp_path):
     )
 
 
+class _ProbeLoss:
+    """Records WHEN (at which loop step) the device->host fetch happens."""
+
+    def __init__(self, value, step, log, now):
+        self.value = value
+        self.step = step
+        self._log = log
+        self._now = now
+
+    def __float__(self):
+        # now[0] is the NEXT step index by flush time (the producing step
+        # already incremented it), so the current loop step is now[0] - 1
+        self._log.append((self.step, self._now[0] - 1))
+        return self.value
+
+
+def test_loop_fetches_metrics_at_log_cadence(setup, tmp_path):
+    """The loop must not force a device->host sync every step: losses are
+    fetched in batches at log_every / refresh / final steps, and the
+    observable outputs (losses list, order, history recs) are identical
+    to per-step fetching."""
+    cfg, model, opt, data = setup  # opt: tau=10, refresh_groups=1
+    total, log_every = 12, 5
+    tc = TrainConfig(
+        total_steps=total, checkpoint_every=0,
+        checkpoint_dir=str(tmp_path / "cad"),
+    )
+    conversions = []  # (step whose loss was fetched, step at fetch time)
+    now = [0]
+
+    def fake_step(state, batch, group=0):
+        m = {"loss": _ProbeLoss(1.0 + now[0], now[0], conversions, now)}
+        st = TrainState(state.params, state.opt_state._replace(
+            step=state.opt_state.step + 1))
+        now[0] += 1
+        return st, m
+
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params))
+    fns = {"jit_step": fake_step, "jit_refresh_step": fake_step}
+    res = train_loop(
+        model, opt, data, tc, fns, state=state, log_every=log_every,
+        handle_signals=False,
+    )
+    # observable behavior identical to per-step fetching
+    assert res.losses == [1.0 + s for s in range(total)]
+    assert [r["step"] for r in res.history] == [0.0, 5.0, 10.0, 11.0]
+    assert [r["loss"] for r in res.history] == [1.0, 6.0, 11.0, 12.0]
+    # every fetch happened at a flush step (log / refresh / final), and
+    # most steps were NOT fetched at their own step -- no per-step sync
+    sub_tau = 10  # tau=10, one group
+    assert len(conversions) == total
+    for fetched_step, at_step in conversions:
+        assert fetched_step <= at_step
+        assert (
+            at_step % log_every == 0
+            or at_step % sub_tau == 0
+            or at_step == total - 1
+        ), (fetched_step, at_step)
+    deferred = sum(1 for s, at in conversions if at > s)
+    assert deferred >= total // 2  # the buffer really defers
+
+
+def test_loop_nan_sentinel_still_aborts(setup, tmp_path):
+    """Deferred fetching keeps the NaN abort: it raises at the batched
+    fetch point instead of the bad step, counters unchanged."""
+    cfg, model, opt, data = setup
+    tc = TrainConfig(
+        total_steps=30, checkpoint_every=0,
+        checkpoint_dir=str(tmp_path / "nan"),
+    )
+
+    def nan_step(state, batch, group=0):
+        return state, {"loss": jnp.asarray(float("nan"))}
+
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params))
+    fns = {"jit_step": nan_step, "jit_refresh_step": nan_step}
+    with pytest.raises(FloatingPointError):
+        train_loop(
+            model, opt, data, tc, fns, state=state, log_every=3,
+            handle_signals=False,
+        )
+
+
 def test_subspace_tracking(setup, tmp_path):
     cfg, model, opt, data = setup
     tc = TrainConfig(

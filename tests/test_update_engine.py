@@ -104,10 +104,11 @@ def _assert_trees(a, b, atol=0.0):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("inner", ["adam", "msgd"])
+@pytest.mark.parametrize("inner", ["adam", "msgd", "adam8bit", "adam_mini"])
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_bucketed_matches_reference_fp32_exact(inner, seed):
-    """fp32, no weight decay: bit-for-bit across params AND moments."""
+    """fp32, no weight decay: bit-for-bit across params AND moments --
+    including the quantized inners' codes/scales (ISSUE 5)."""
     params = _mixed_params()
     pr, sr, _ = _run("reference", params, inner, apply=False, seed=seed)
     pb, sb, _ = _run("bucketed", params, inner, apply=True, seed=seed)
@@ -115,7 +116,9 @@ def test_bucketed_matches_reference_fp32_exact(inner, seed):
     _assert_trees(sr.leaves, sb.leaves, atol=0.0)
 
 
-@pytest.mark.parametrize("inner", ["adam", "msgd"])
+@pytest.mark.parametrize(
+    "inner", ["adam", "msgd", "adam8bit", "adam_mini"]
+)
 def test_bucketed_matches_reference_weight_decay(inner):
     params = _mixed_params()
     pr, _, _ = _run("reference", params, inner, apply=False, wd=0.1)
@@ -243,9 +246,10 @@ def test_non_fused_inner_keeps_per_leaf_state():
     assert fira.state_layout is None
 
 
-def test_canonical_storage_roundtrip_exact():
+@pytest.mark.parametrize("inner", ["adam", "adam8bit", "adam_mini"])
+def test_canonical_storage_roundtrip_exact(inner):
     params = _mixed_params()
-    _, buck = _opts_pair(params)
+    _, buck = _opts_pair(params, inner=inner)
     st = buck.init(params)
     g = _grads(params)
     _, st, _ = buck.update(g, st, params, refresh=True, apply=True)
@@ -388,6 +392,161 @@ def test_bucket_native_rejects_canonical_state():
     canon = canonical_opt_state(buck, buck.init(params))
     with pytest.raises(ValueError, match="storage_opt_state"):
         buck.update(_grads(params), canon, params, refresh=False)
+
+
+# ---------------------------------------------------------------------------
+# quantized bucket-native state (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_plans_are_side_homogeneous():
+    """adam8bit/adam_mini split buckets by side (their v / scale layouts
+    follow the per-leaf rows); adam keeps the mixed-side plan."""
+    params = _mixed_params()
+    adam = make_optimizer(
+        "galore-sara-adam", params, rank=16, min_dim=8, engine="bucketed"
+    )
+    sides = {b.side for b in adam.bucket_plan.buckets}
+    assert sides == {"any"}
+    # the (32, 96) bucket mixes up_proj (left) and down_proj (right)
+    assert any(
+        len({e.side for e in b.entries}) == 2
+        for b in adam.bucket_plan.buckets
+    )
+    for inner in ("adam8bit", "adam_mini"):
+        opt = make_optimizer(
+            f"galore-sara-{inner}", params, rank=16, min_dim=8,
+            engine="bucketed",
+        )
+        assert opt.state_layout is not None  # bucket-native storage
+        for b in opt.bucket_plan.buckets:
+            assert b.side in ("left", "right")
+            assert {e.side for e in b.entries} == {b.side}
+        # same leaves covered, one extra bucket from the side split
+        assert opt.bucket_plan.bucketed == adam.bucket_plan.bucketed
+        assert len(opt.bucket_plan.buckets) == (
+            len(adam.bucket_plan.buckets) + 1
+        )
+
+
+def test_quantized_state_is_bucket_native():
+    """Storage shapes of the quantized layouts: uint8 code stacks +
+    per-leaf-row scales for adam8bit, per-row v for adam_mini."""
+    from repro.kernels.lowrank_update.quantize import num_blocks
+
+    params = _mixed_params()
+    _, b8 = _opts_pair(params, inner="adam8bit")
+    st = b8.init(params)
+    assert len(st.buckets) == len(b8.bucket_plan.buckets)
+    for bucket, bst in zip(b8.bucket_plan.buckets, st.buckets):
+        B, n, r = bucket.batch, bucket.n, bucket.rank
+        assert bst.m.shape == (B, r, n) and bst.m.dtype == jnp.uint8
+        assert bst.v.shape == (B, r, n) and bst.v.dtype == jnp.uint8
+        rows, rowlen = (r, n) if bucket.side == "left" else (n, r)
+        assert bst.m_scale.shape == (B, rows, num_blocks(rowlen))
+        assert bst.v_scale.shape == (B, rows, num_blocks(rowlen))
+        assert bst.m_scale.dtype == jnp.float32
+
+    _, bm = _opts_pair(params, inner="adam_mini")
+    st = bm.init(params)
+    for bucket, bst in zip(bm.bucket_plan.buckets, st.buckets):
+        B, n, r = bucket.batch, bucket.n, bucket.rank
+        assert bst.m.shape == (B, r, n) and bst.m.dtype == jnp.float32
+        rows = r if bucket.side == "left" else n
+        assert bst.v.shape == (B, rows)
+        assert bst.m_scale is None and bst.v_scale is None
+
+    # the quantized state is actually small: moments well under half of
+    # what fused adam stores for the same plan
+    adam_bytes = sum(
+        x.size * x.dtype.itemsize
+        for bst in _opts_pair(params)[1].init(params).buckets
+        for x in jax.tree_util.tree_leaves(bst[1:])
+    )
+    q_bytes = sum(
+        x.size * x.dtype.itemsize
+        for bst in b8.init(params).buckets
+        for x in jax.tree_util.tree_leaves(bst[1:])
+    )
+    assert q_bytes < 0.4 * adam_bytes
+
+
+@pytest.mark.parametrize("inner", ["adam8bit", "adam_mini"])
+@pytest.mark.parametrize("carry", ["keep", "reset", "reproject"])
+def test_quantized_staggered_refresh_and_carry_match_reference(inner, carry):
+    """ISSUE 5 acceptance: multi-refresh trajectories (staggered groups,
+    every momentum carry) are bit-for-bit with the per-leaf reference loop
+    -- reset zeroes codes AND scales; reproject is a no-op for adam8bit's
+    quantized first moment exactly like the reference path."""
+    params = _mixed_params()
+    ref, buck = _opts_pair(
+        params, inner=inner, momentum_carry=carry, refresh_groups=2
+    )
+    sr, sb = ref.init(params), buck.init(params)
+    pr = pb = params
+    for step in range(5):
+        g = _grads(params, step)
+        refresh = step % 2 == 0
+        group = step // 2
+        ur, sr, _ = ref.update(g, sr, pr, refresh=refresh, group=group)
+        pr = apply_updates(pr, ur)
+        pb, sb, _ = buck.update(
+            g, sb, pb, refresh=refresh, group=group, apply=True
+        )
+    _assert_trees(pr, pb, atol=0.0)
+    _assert_trees(sr.leaves, canonical_opt_state(buck, sb).leaves, atol=0.0)
+
+
+@pytest.mark.parametrize("inner", ["adam8bit", "adam_mini"])
+def test_quantized_projected_and_stacked_hot_paths(inner):
+    """The compressed-DP payloads feed the quantized fused engine too:
+    per-leaf projected grads and the bucket-native R-space stacks are both
+    bit-for-bit with the full-gradient hot step."""
+    from repro.core.lowrank import project_grads_stacked
+
+    params = _mixed_params()
+    opt = make_optimizer(
+        f"galore-sara-{inner}", params, rank=16, lr=1e-2, alpha=0.5,
+        min_dim=8, engine="bucketed",
+    )
+    st = opt.init(params)
+    _, st, _ = opt.update(_grads(params, 0), st, params, refresh=True,
+                          apply=True)
+    g = _grads(params, 1)
+    p_full, s_full, _ = opt.update(g, st, params, refresh=False, apply=True)
+    rg = project_grads(opt, g, st)
+    p_leaf, s_leaf, _ = opt.update(
+        rg, st, params, refresh=False, projected=True, apply=True
+    )
+    sg = project_grads_stacked(opt, g, st)
+    p_st, s_st, _ = opt.update(
+        sg, st, params, refresh=False, projected=True, apply=True
+    )
+    _assert_trees(p_full, p_leaf, atol=0.0)
+    _assert_trees(p_full, p_st, atol=0.0)
+    _assert_trees(s_full.buckets, s_leaf.buckets, atol=0.0)
+    _assert_trees(s_full.buckets, s_st.buckets, atol=0.0)
+
+
+def test_quantized_hot_step_keeps_state_stacked():
+    """The quantized hot step's jaxpr stacks only params and grads: codes,
+    scales, and the per-row v are consumed in storage layout."""
+    params = _mixed_params()
+    _, buck = _opts_pair(params, inner="adam8bit")
+    st = buck.init(params)
+    g = _grads(params)
+    _, st, _ = buck.update(g, st, params, refresh=True, apply=True)
+    jaxpr = jax.make_jaxpr(
+        lambda g, s, p: buck.update(g, s, p, refresh=False, apply=True)
+    )(g, st, params)
+    n_concat = sum(
+        1 for eqn in jaxpr.jaxpr.eqns if eqn.primitive.name == "concatenate"
+    )
+    multi = sum(
+        1 for bk in buck.bucket_plan.buckets if len(bk.entries) > 1
+    )
+    assert multi >= 1
+    assert n_concat == 2 * multi  # W + G only; no code/scale stacking
 
 
 # ---------------------------------------------------------------------------
