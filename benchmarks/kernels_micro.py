@@ -13,6 +13,7 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
 from benchmarks.common import Row
@@ -488,10 +489,107 @@ def dp_compression_bench() -> List[Row]:
     return rows
 
 
+def recovery_overhead_bench() -> List[Row]:
+    """Cost of the degrade-and-recover runtime (DESIGN.md §2.9).
+
+    Two numbers: (1) the skip-step gate -- the same bucketed hot step
+    compiled with ``skip_nonfinite=True``, whose modeled extra HBM is one
+    fused ``all(isfinite)`` re-read per bucket stack
+    (``core/buckets.finite_check_model``; the stacks are buffers the
+    update reads in the same executable, so there are zero extra writes);
+    the analytic fields are regression-gated by ``benchmarks/run.py
+    --check``.  (2) the rollback reload -- one ``CheckpointManager
+    .load_latest`` of the full train state, reported as a multiple of the
+    hot step so the rollback budget has a price tag."""
+    import shutil
+    import tempfile
+
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.state import TrainState, checkpoint_converters
+
+    L, d_model, rank = 4, 256, 64
+    params, grads = _bench_transformer(L=L, d_model=d_model)
+    rows: List[Row] = []
+
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=rank, lr=1e-3, alpha=0.25,
+        engine="bucketed", track_update_norm=False,
+    )
+    state = opt.init(params)
+    _, state, _ = opt.update(grads, state, params, refresh=True)
+    results = {}
+    for gated in (False, True):
+        hot = jax.jit(
+            lambda g, s, p, _k=gated: opt.update(
+                g, s, p, refresh=False, apply=True, skip_nonfinite=_k
+            )
+        )
+        results[gated] = _time(lambda g: hot(g, state, params), grads,
+                               iters=10)
+
+    plan = opt.bucket_plan
+    gate = buckets_lib.finite_check_model(plan, projected=False)
+    hbm_update = buckets_lib.modeled_hbm_bytes(plan, "bucketed")
+    frac = gate["modeled_hbm_bytes"] / hbm_update
+    name = f"recovery/skip_gate_update_L{L}_d{d_model}_r{rank}"
+    rows.append((
+        name, results[True],
+        f"ungated={results[False]:.1f}us gate_reads="
+        f"{gate['modeled_hbm_bytes'] / 1e6:.1f}MB "
+        f"({100 * frac:.0f}% of update hbm, 0 extra writes) "
+        f"dispatched_ops={gate['dispatched_ops']:.0f}",
+    ))
+    common.record(
+        name, results[True],
+        roofline_us=(hbm_update + gate["modeled_hbm_bytes"])
+        / hw.HBM_BW * 1e6,
+        engine="bucketed", state_layout="bucketed",
+        dispatched_ops=int(gate["dispatched_ops"]),
+        modeled_hbm_bytes=gate["modeled_hbm_bytes"],
+        gate_hbm_fraction=round(frac, 4),
+    )
+
+    # rollback price: reload the newest verified checkpoint
+    can, loc = checkpoint_converters(opt)
+    base = tempfile.mkdtemp(prefix="bench_recovery_ckpt_")
+    try:
+        mgr = CheckpointManager(base, keep=1, canonicalize=can, localize=loc)
+        full = TrainState(params, state)
+        mgr.save(full, 0)
+        ckpt_bytes = sum(
+            np.asarray(x).nbytes for x in jax.tree_util.tree_leaves(
+                can(full) if can is not None else full
+            )
+        )
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            loaded, _step = mgr.load_latest(full)
+            jax.block_until_ready(jax.tree_util.tree_leaves(loaded))
+        us_load = (time.perf_counter() - t0) / iters * 1e6
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+    name = f"recovery/rollback_reload_L{L}_d{d_model}_r{rank}"
+    rows.append((
+        name, us_load,
+        f"ckpt={ckpt_bytes / 1e6:.1f}MB "
+        f"= {us_load / max(results[False], 1e-9):.0f}x hot steps "
+        f"(amortized over max_bad_steps x tau good steps)",
+    ))
+    common.record(
+        name, us_load, engine="bucketed", state_layout="bucketed",
+        checkpoint_bytes=int(ckpt_bytes),
+    )
+    return rows
+
+
 def run() -> List[Row]:
     return (
         lowrank_update_bench() + galore_project_bench()
         + attention_bench() + rmsnorm_bench() + update_engine_bench()
         + quantized_update_engine_bench()
         + refresh_engine_bench() + dp_compression_bench()
+        + recovery_overhead_bench()
     )

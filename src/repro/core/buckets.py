@@ -480,6 +480,28 @@ def bucketed_stack_grads(
     return tuple(_gather(bucket, flat_grads) for bucket in plan.buckets)
 
 
+def bucketed_all_finite(
+    plan: BucketPlan,
+    flat_grads: Optional[Sequence[jax.Array]] = None,
+    stacked_grads: Optional[Sequence[jax.Array]] = None,
+) -> List[jax.Array]:
+    """Per-bucket scalar ``all(isfinite(stack))`` -- the skip-step gate.
+
+    ONE fused reduction per bucket over the contiguous gradient stack
+    (never a per-leaf loop): with ``stacked_grads`` given (the compressed-DP
+    payload, ``(B, r, n)`` or ``(B, d, n)``) the check reads the stacks the
+    update consumes anyway; otherwise the stacks come from ``_gather``,
+    which XLA CSEs against the identical gathers inside ``bucketed_update``
+    so the leaves are still read once.  Non-bucketed leaves are the
+    caller's (cheap, few) responsibility.
+    """
+    if stacked_grads is not None:
+        stacks = stacked_grads
+    else:
+        stacks = [_gather(bucket, flat_grads) for bucket in plan.buckets]
+    return [jnp.all(jnp.isfinite(s)) for s in stacks]
+
+
 def _unstack_entry(
     stacked: jax.Array, bucket: Bucket, entry: BucketEntry, template
 ) -> jax.Array:
@@ -942,6 +964,26 @@ def reference_num_ops(
     elif inner == "adam_mini":
         per_leaf += 1
     return n_leaves * per_leaf
+
+
+def finite_check_model(
+    plan: BucketPlan, projected: bool = False, itemsize: int = 4
+) -> Dict[str, float]:
+    """Modeled cost of the skip-step gate (``bucketed_all_finite``): one
+    fused ``all(isfinite)`` reduction per bucket stack, reading the
+    ``(B, r, n)`` R-space stacks on the projected hot path or the full
+    ``(B, d, n)`` stacks otherwise.  The read is a re-read of buffers the
+    update consumes in the same executable, so on TPU it is HBM-bandwidth
+    bound with zero extra writes -- the overhead the recovery bench gates
+    (benchmarks/kernels_micro.recovery_overhead_bench)."""
+    nbytes = 0
+    for bk in plan.buckets:
+        rows = bk.rank if projected else bk.d
+        nbytes += bk.batch * rows * bk.n * itemsize
+    return {
+        "modeled_hbm_bytes": float(nbytes),
+        "dispatched_ops": float(len(plan.buckets)),
+    }
 
 
 # ---------------------------------------------------------------------------

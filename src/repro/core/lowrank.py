@@ -227,6 +227,9 @@ class AuxInfo(NamedTuple):
     grad_norm: jax.Array
     update_norm: jax.Array
     mean_refresh_overlap: jax.Array  # overlap(P_new, P_old) avg over refreshed
+    # 1.0 when skip_nonfinite gated the update out (non-finite grads seen),
+    # 0.0 otherwise (always 0.0 with the gate disabled)
+    skipped: Any = None
 
 
 def _path_str(path) -> str:
@@ -445,8 +448,20 @@ def make_lowrank_optimizer(
         group: int = 0,
         projected: bool = False,
         apply: bool = False,
+        skip_nonfinite: bool = False,
     ) -> Tuple[PyTree, LowRankOptState, AuxInfo]:
         """Returns (updates, new_state, aux); apply via params + updates.
+
+        ``skip_nonfinite=True`` (the recovery skip-step gate, DESIGN.md
+        §2.9): compute ONE fused all-finite reduction per bucket gradient
+        stack (plus a cheap per-leaf check over the few non-bucketed
+        leaves) and ``jnp.where``-gate the whole update on it -- with any
+        non-finite gradient the params AND optimizer state pass through
+        unchanged (``aux.skipped = 1.0``) instead of poisoning the moments.
+        When every gradient is finite the gate selects the new values
+        exactly -- it adds no numerical perturbation of its own (across a
+        recompile XLA may still fuse differently, so gated vs. ungated
+        *programs* agree only to rounding).
 
         ``projected=True``: low-rank leaves of ``grads`` already hold the
         R-space gradient (P^T G / G P) -- the distributed project-then-reduce
@@ -495,6 +510,34 @@ def make_lowrank_optimizer(
                 )
         step = state.step + 1  # 1-indexed for bias correction
         lr = _lr_at(state.step)
+
+        finite_ok = None
+        if skip_nonfinite:
+            # pre-clip grads: a NaN gnorm makes the clip scale poison every
+            # leaf, so check the raw stacks (one fused reduction per bucket
+            # -- bucketed_all_finite; XLA CSEs the gathers against the
+            # update's own)
+            if stacked_in:
+                checks = list(buckets_lib.bucketed_all_finite(
+                    bucket_plan, stacked_grads=grads.buckets
+                ))
+                checks += [jnp.all(jnp.isfinite(g)) for g in grads.rest]
+            elif bucket_plan is not None and bucket_plan.buckets:
+                flat_g = spec_treedef.flatten_up_to(grads)
+                checks = list(buckets_lib.bucketed_all_finite(
+                    bucket_plan, flat_g
+                ))
+                checks += [
+                    jnp.all(jnp.isfinite(flat_g[i])) for i in rest_indices
+                ]
+            else:
+                checks = [
+                    jnp.all(jnp.isfinite(g))
+                    for g in jax.tree_util.tree_leaves(grads)
+                ]
+            finite_ok = checks[0] if checks else jnp.asarray(True)
+            for c in checks[1:]:
+                finite_ok = jnp.logical_and(finite_ok, c)
 
         gnorm = _global_norm(grads)
         if cfg.grad_clip_norm and cfg.grad_clip_norm > 0:
@@ -650,8 +693,29 @@ def make_lowrank_optimizer(
         new_state = LowRankOptState(
             step=step, key=key, leaves=new_leaves, buckets=new_bucket_states
         )
+        skipped = jnp.zeros(())
+        if skip_nonfinite:
+            # Gate the WHOLE transition on the finite check: params (or
+            # updates) and every piece of optimizer state -- step, refresh
+            # key, moments, projectors -- fall back to their old values on
+            # a bad step.  jnp.where(True, new, old) IS new: the gate
+            # itself never perturbs a fault-free run.
+            ok = finite_ok
+
+            def _keep(new, old):
+                return jnp.where(ok, new, old)
+
+            if apply:
+                out_tree = jax.tree_util.tree_map(_keep, out_tree, params)
+            else:
+                out_tree = jax.tree_util.tree_map(
+                    lambda u: jnp.where(ok, u, jnp.zeros_like(u)), out_tree
+                )
+            new_state = jax.tree_util.tree_map(_keep, new_state, state)
+            skipped = 1.0 - ok.astype(jnp.float32)
         aux = AuxInfo(
-            grad_norm=gnorm, update_norm=unorm, mean_refresh_overlap=mean_overlap
+            grad_norm=gnorm, update_norm=unorm,
+            mean_refresh_overlap=mean_overlap, skipped=skipped,
         )
         return out_tree, new_state, aux
 

@@ -48,6 +48,23 @@ METHODS = (
 # Methods whose refresh is SVD-free and therefore always batchable.
 _SVD_FREE_METHODS = frozenset({"identity", "golore", "grass", "online_pca"})
 
+# Methods whose refresh consumes PRNG entropy.  These are the methods
+# rollback-and-resample (train/recovery.py) works for: folding the recovery
+# attempt into the state key makes the next refresh draw a genuinely
+# different subspace (sara re-runs its Gumbel top-k, golore draws a new
+# random basis, grass re-samples rows).  ``dominant`` is deterministic
+# top-k of the singular spectrum and ``identity`` is fixed -- the key never
+# enters their refresh, so after a rollback they re-select the *same*
+# subspace; ``online_pca``'s incremental update is likewise a deterministic
+# function of (P_prev, G).  That determinism is the frozen-subspace failure
+# mode the paper targets, restated as a recovery limitation.
+STOCHASTIC_REFRESH_METHODS = frozenset({"sara", "golore", "grass"})
+
+
+def refresh_is_stochastic(method: str) -> bool:
+    """Does a new RNG key move this method's refreshed subspace?"""
+    return method in STOCHASTIC_REFRESH_METHODS
+
 
 def batched_refresh_supported(cfg: "ProjectorConfig") -> bool:
     """Can ``refresh_projector_stacked`` cover this config?

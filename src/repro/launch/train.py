@@ -52,6 +52,14 @@ def main() -> None:
                     help="project-then-reduce DP gradient compression")
     ap.add_argument("--refresh-groups", type=int, default=1)
     ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--no-recovery", action="store_true",
+                    help="abort on the first fault (pre-recovery behavior)")
+    ap.add_argument("--max-rollbacks", type=int, default=3)
+    ap.add_argument("--max-bad-steps", type=int, default=3,
+                    help="consecutive bad steps before a rollback")
+    ap.add_argument("--loss-spike-factor", type=float, default=0.0,
+                    help=">0: loss > factor x windowed median is a bad step")
+    ap.add_argument("--heartbeat-timeout", type=float, default=60.0)
     ap.add_argument("--coordinator", default="")
     ap.add_argument("--num-processes", type=int, default=1)
     ap.add_argument("--process-id", type=int, default=0)
@@ -69,6 +77,8 @@ def main() -> None:
     from repro.launch.mesh import make_mesh
     from repro.models import build_model, count_params
     from repro.train.loop import train_loop
+    from repro.train.monitor import HeartbeatRegistry
+    from repro.train.recovery import RecoveryPolicy
     from repro.train.state import TrainState
     from repro.train.step import make_train_step, shard_train_state
 
@@ -108,15 +118,26 @@ def main() -> None:
         total_steps=args.steps, checkpoint_every=args.ckpt_every,
         checkpoint_dir=args.ckpt_dir, microbatch=args.microbatch,
     )
+    recovery = None
+    if not args.no_recovery:
+        recovery = RecoveryPolicy(
+            max_bad_steps=args.max_bad_steps,
+            loss_spike_factor=args.loss_spike_factor,
+            max_rollbacks=args.max_rollbacks,
+            rollback_backoff_s=0.5,
+        )
+    heartbeats = HeartbeatRegistry(timeout_s=args.heartbeat_timeout)
     fns = make_train_step(
         model, opt, mesh=mesh, train_cfg=tc,
-        compressed=args.compressed_dp,
+        compressed=args.compressed_dp, recovery=recovery,
     )
 
     def run():
         return train_loop(
             model, opt, data, tc, fns, state=state, shardings=shardings,
             log_every=max(args.steps // 20, 1),
+            recovery=recovery, heartbeats=heartbeats,
+            worker_name=f"worker{args.process_id}",
         )
 
     if mesh is not None:
@@ -126,6 +147,16 @@ def main() -> None:
         res = run()
     print(f"[train] done: step {res.final_step}, "
           f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}")
+    recs = [r for r in res.history if "skip_steps" in r]
+    if recs:
+        last = recs[-1]
+        events = [r for r in res.history if "event" in r]
+        print(f"[train] recovery: {int(last['skip_steps'])} skipped, "
+              f"{int(last['rollbacks'])} rollbacks, "
+              f"{int(last['save_retries'])} save retries, "
+              f"{int(last['save_failures'])} save failures, "
+              f"{len(events)} recovery events, "
+              f"stale workers: {int(last.get('stale_workers', 0))}")
 
 
 if __name__ == "__main__":

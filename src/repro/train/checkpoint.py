@@ -2,14 +2,25 @@
 
 Properties required at cluster scale, all implemented and tested:
 
-  * **atomicity** -- writes land in ``step_XXXXXXXX.tmp/`` and are renamed
-    only after the manifest (with per-leaf SHA-256) is fsynced; a crash
-    mid-write can never produce a loadable-but-corrupt checkpoint.
+  * **atomicity** -- writes land in ``step_XXXXXXXX.tmp/`` and are committed
+    with ``os.replace`` + parent-dir fsync only after the manifest (with
+    per-leaf SHA-256) is fsynced; a crash mid-write can never produce a
+    loadable-but-corrupt checkpoint.
   * **integrity** -- every leaf file is checksummed; load verifies.
-  * **retention** -- keep the newest ``keep`` checkpoints, delete older.
+  * **retention** -- keep the newest ``keep`` checkpoints, delete older,
+    but NEVER the newest fully-verified one: a later corrupt write cannot
+    leave the directory with zero loadable checkpoints.
   * **async save** -- ``save(..., blocking=False)`` snapshots to host memory
     (device_get) on the caller thread, then writes on a background thread so
-    the train loop overlaps checkpoint I/O with compute.
+    the train loop overlaps checkpoint I/O with compute.  Failed writes are
+    retried with exponential backoff (``save_retries``) before the error is
+    surfaced on the next ``wait()``.
+  * **fallback load** -- ``load_latest`` walks checkpoints newest-to-oldest
+    and returns the first that verifies, so a corrupt/truncated newest
+    checkpoint degrades to the previous one instead of killing the run.
+  * **pluggable I/O** -- every byte to disk goes through a
+    :class:`CheckpointIO`; ``train/faults.py`` substitutes a fault-injecting
+    shim to test all of the above deterministically.
   * **elastic restore** -- leaves are stored logically unsharded with their
     tree *paths* as keys; ``load`` fills a caller-provided state skeleton and
     ``device_put``s each leaf with shardings derived from the *current* mesh,
@@ -32,7 +43,8 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -40,6 +52,48 @@ import numpy as np
 PyTree = Any
 
 _MANIFEST = "manifest.json"
+
+
+class CheckpointIO:
+    """Byte-level checkpoint I/O, pluggable for fault injection.
+
+    ``begin`` is called once per write attempt with the manager's logical
+    save ordinal and the 0-indexed retry attempt; ``commit`` performs the
+    atomic rename (``os.replace``, never ``os.rename`` -- replace is atomic
+    over an existing destination too) and fsyncs the parent directory so
+    the rename itself survives a crash.
+    """
+
+    def begin(self, save_ordinal: int, attempt: int) -> None:
+        pass
+
+    def save_leaf(self, fpath: str, arr) -> None:
+        np.save(fpath, arr, allow_pickle=False)
+
+    def write_manifest(self, mpath: str, manifest: Dict[str, Any]) -> None:
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def commit(self, tmp: str, final: str) -> None:
+        os.replace(tmp, final)
+        _fsync_dir(os.path.dirname(final))
+
+
+def _fsync_dir(path: str) -> None:
+    """Durably record directory-entry changes (renames) -- best effort on
+    filesystems that reject directory fds."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _leaf_paths(tree: PyTree) -> List[str]:
@@ -80,7 +134,32 @@ def latest_step(base: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def _write_checkpoint(base: str, step: int, host_leaves, paths, keep: int):
+def verify_checkpoint(base: str, step: int) -> bool:
+    """Full integrity check: manifest parses and every leaf file's SHA-256
+    matches.  This is the retention-protection predicate -- quick manifest
+    presence is not enough, because post-commit byte corruption (the fault
+    the fallback load exists for) leaves the manifest intact."""
+    cdir = os.path.join(base, f"step_{step:08d}")
+    try:
+        with open(os.path.join(cdir, _MANIFEST)) as f:
+            manifest = json.load(f)
+        for entry in manifest["leaves"].values():
+            if _sha256(os.path.join(cdir, entry["file"])) != entry["sha256"]:
+                return False
+    except (OSError, ValueError, KeyError):
+        return False
+    return True
+
+
+def _write_checkpoint(
+    base: str,
+    step: int,
+    host_leaves,
+    paths,
+    keep: int,
+    io: Optional[CheckpointIO] = None,
+):
+    io = io or CheckpointIO()
     os.makedirs(base, exist_ok=True)
     final = os.path.join(base, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -91,26 +170,31 @@ def _write_checkpoint(base: str, step: int, host_leaves, paths, keep: int):
     for path, arr in zip(paths, host_leaves):
         fname = _sanitize(path) + ".npy"
         fpath = os.path.join(tmp, fname)
-        np.save(fpath, arr, allow_pickle=False)
+        io.save_leaf(fpath, arr)
         manifest["leaves"][path] = {
             "file": fname,
             "shape": list(arr.shape),
             "dtype": str(arr.dtype),
             "sha256": _sha256(fpath),
         }
-    mpath = os.path.join(tmp, _MANIFEST)
-    with open(mpath, "w") as f:
-        json.dump(manifest, f, indent=1)
-        f.flush()
-        os.fsync(f.fileno())
+    io.write_manifest(os.path.join(tmp, _MANIFEST), manifest)
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic commit
-    # retention
+    io.commit(tmp, final)  # atomic: os.replace + parent-dir fsync
+    # Retention: drop all but the newest ``keep``, EXCEPT the newest
+    # fully-verified checkpoint -- if the write above (or a later one)
+    # turns out corrupt, the last loadable state must still exist.
     steps = checkpoint_dirs(base)
-    for old in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(base, f"step_{old:08d}"),
-                      ignore_errors=True)
+    victims = steps[:-keep] if keep > 0 else []
+    if victims:
+        protected = next(
+            (s for s in reversed(steps) if verify_checkpoint(base, s)), None
+        )
+        for old in victims:
+            if old == protected:
+                continue
+            shutil.rmtree(os.path.join(base, f"step_{old:08d}"),
+                          ignore_errors=True)
 
 
 class CheckpointManager:
@@ -120,11 +204,19 @@ class CheckpointManager:
         keep: int = 3,
         canonicalize=None,
         localize=None,
+        io: Optional[CheckpointIO] = None,
+        save_retries: int = 2,
+        retry_backoff_s: float = 0.05,
     ):
         self.base_dir = base_dir
         self.keep = keep
         self.canonicalize = canonicalize  # storage -> serialized layout
         self.localize = localize  # serialized -> storage layout
+        self.io = io or CheckpointIO()
+        self.save_retries = save_retries  # extra attempts after a failure
+        self.retry_backoff_s = retry_backoff_s  # doubles per retry
+        self.retries_performed = 0  # lifetime counter (monitor surfaces it)
+        self._save_ordinal = 0  # logical save count (fault-injection key)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -139,12 +231,29 @@ class CheckpointManager:
         # Snapshot on the caller thread: device_get of (possibly sharded)
         # arrays -- gathers to host, logically unsharded.
         host = [np.asarray(jax.device_get(x)) for x in flat]
+        ordinal = self._save_ordinal
+        self._save_ordinal += 1
 
         def work():
-            try:
-                _write_checkpoint(self.base_dir, step, host, paths, self.keep)
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+            # retry-with-exponential-backoff: transient I/O errors (full
+            # disk blip, flaky NFS) should not poison the manager outright
+            delay = self.retry_backoff_s
+            for attempt in range(self.save_retries + 1):
+                try:
+                    self.io.begin(ordinal, attempt)
+                    _write_checkpoint(
+                        self.base_dir, step, host, paths, self.keep,
+                        io=self.io,
+                    )
+                    return
+                except BaseException as e:
+                    err = e
+                    if attempt < self.save_retries:
+                        self.retries_performed += 1
+                        if delay > 0:
+                            time.sleep(delay)
+                            delay *= 2
+            self._error = err  # surfaced on next wait()
 
         if blocking:
             work()
@@ -221,3 +330,37 @@ class CheckpointManager:
         if self.localize is not None:
             loaded = self.localize(loaded)
         return loaded
+
+    def load_latest(
+        self,
+        state_like: PyTree,
+        mesh=None,
+        shardings: Optional[PyTree] = None,
+        verify: bool = True,
+    ) -> Tuple[PyTree, int]:
+        """Load the newest checkpoint that passes verification, walking
+        ``checkpoint_dirs`` newest-to-oldest past corrupt/truncated/partial
+        ones (each skip is recorded in ``self.fallbacks``).  Returns
+        ``(state, step)``.  When every candidate fails, re-raises the
+        newest candidate's error -- same exception surface as ``load`` on
+        a single bad checkpoint, so existing abort semantics hold when
+        there is genuinely nothing to fall back to."""
+        self.fallbacks: List[Tuple[int, str]] = getattr(self, "fallbacks", [])
+        first_err: Optional[BaseException] = None
+        for step in reversed(checkpoint_dirs(self.base_dir)):
+            try:
+                state = self.load(
+                    state_like, step=step, mesh=mesh, shardings=shardings,
+                    verify=verify,
+                )
+                return state, step
+            except (OSError, ValueError, KeyError) as e:
+                # OSError: missing/unreadable files, checksum IOError;
+                # ValueError: shape mismatch, truncated-manifest JSON;
+                # KeyError: manifest missing a leaf.
+                if first_err is None:
+                    first_err = e
+                self.fallbacks.append((step, repr(e)))
+        if first_err is not None:
+            raise first_err
+        raise FileNotFoundError(f"no checkpoints under {self.base_dir}")

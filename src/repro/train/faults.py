@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the training runtime.
+
+A :class:`FaultPlan` is a static list of :class:`FaultSpec` entries plus a
+seed.  Step-level faults key on the *host loop step* (not the optimizer
+step, which stalls under skip/rollback) and checkpoint faults key on the
+manager's logical save ordinal; every spec has a finite firing budget
+(``times``, default 1) so a fault consumed by recovery does not re-fire
+forever on the replayed trajectory.  Everything the plan does is recorded
+in ``plan.fired``, so a run is replayable (same specs + seed => same
+injections) and assertable (tests check exactly which faults fired).
+
+Injection points:
+
+  * ``batch_hook(batch, step)``      -- non-finite gradients.  Token batches
+    are integer, so grads cannot be poisoned through the data; instead the
+    hook adds a ``grad_scale`` scalar to the batch dict which
+    ``train/step.py`` pops and multiplies into the gradients (NaN/Inf scale
+    => non-finite grads, exactly as a bad fused kernel would produce).
+  * ``loss_hook(step, metrics)``     -- non-finite or spiked loss, applied
+    to the on-device metric (no host sync: NaN replaces the array, spikes
+    multiply it lazily).
+  * ``sleep_s(step)``                -- slow-step straggler (host sleep).
+  * ``preempt(step)``                -- simulated preemption: the loop
+    treats it exactly like a delivered SIGTERM.
+  * ``checkpoint_io()``              -- a :class:`repro.train.checkpoint
+    .CheckpointIO` shim injecting write errors (raised from ``save_leaf``,
+    exercising the manager's retry), corrupted leaf bytes and truncated
+    manifests (applied post-commit, exercising the verified-fallback load
+    path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.train import checkpoint as ckpt_lib
+
+STEP_KINDS = (
+    "nan_grads",  # grad_scale = NaN at `step`
+    "inf_grads",  # grad_scale = Inf at `step`
+    "nan_loss",  # reported loss = NaN at `step`
+    "loss_spike",  # reported loss *= `value` at `step`
+    "slow_step",  # host sleeps `value` seconds at `step`
+    "preempt",  # simulated SIGTERM at `step`
+)
+CKPT_KINDS = (
+    "ckpt_write_error",  # save_leaf raises on save ordinal `save_index`
+    "ckpt_corrupt_leaf",  # flip bytes in one committed leaf file
+    "ckpt_truncate_manifest",  # truncate the committed manifest
+)
+KINDS = STEP_KINDS + CKPT_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault.
+
+    ``step`` targets step-level kinds; ``save_index`` targets checkpoint
+    kinds (the manager's logical save ordinal, counting from 0 -- note the
+    loop writes an initial rollback-target checkpoint at ordinal 0 when
+    recovery is enabled and no checkpoint exists yet).  ``value`` is
+    kind-specific: spike factor for ``loss_spike``, seconds for
+    ``slow_step``.  ``times`` is the firing budget: for
+    ``ckpt_write_error`` it is the number of failing *attempts*, so
+    ``times=1`` fails once and succeeds on the manager's first retry.
+    """
+
+    kind: str
+    step: int = -1
+    save_index: int = -1
+    value: float = float("nan")
+    times: int = 1
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}: {KINDS}")
+        if self.kind in STEP_KINDS and self.step < 0:
+            raise ValueError(f"{self.kind} needs step >= 0")
+        if self.kind in CKPT_KINDS and self.save_index < 0:
+            raise ValueError(f"{self.kind} needs save_index >= 0")
+
+
+class FaultPlan:
+    """Seeded, replayable schedule of injected faults."""
+
+    def __init__(self, specs=(), seed: int = 0):
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self.seed = seed
+        self.fired: List[Tuple[str, int]] = []  # (kind, step|save_index)
+        self._budget = [sp.times for sp in self.specs]
+
+    def _take(
+        self,
+        kind: str,
+        *,
+        step: Optional[int] = None,
+        save_index: Optional[int] = None,
+    ) -> Optional[FaultSpec]:
+        for idx, sp in enumerate(self.specs):
+            if sp.kind != kind or self._budget[idx] <= 0:
+                continue
+            if step is not None and sp.step != step:
+                continue
+            if save_index is not None and sp.save_index != save_index:
+                continue
+            self._budget[idx] -= 1
+            self.fired.append(
+                (kind, step if step is not None else int(save_index or 0))
+            )
+            return sp
+        return None
+
+    # ---- step-level injection (called by train_loop) ----
+
+    def batch_hook(self, batch, step: int):
+        """Arm non-finite-gradient injection for ``step``."""
+        sp = self._take("nan_grads", step=step) or self._take(
+            "inf_grads", step=step
+        )
+        if sp is not None:
+            if not isinstance(batch, dict):
+                raise TypeError(
+                    f"{sp.kind} injection needs a dict batch to carry "
+                    "grad_scale"
+                )
+            batch = dict(batch)
+            batch["grad_scale"] = np.float32(
+                "nan" if sp.kind == "nan_grads" else "inf"
+            )
+        return batch
+
+    def loss_hook(self, step: int, metrics):
+        """Poison the reported loss (device-side, no host sync)."""
+        sp = self._take("nan_loss", step=step)
+        if sp is not None:
+            metrics = dict(metrics)
+            metrics["loss"] = np.float32("nan")
+        sp = self._take("loss_spike", step=step)
+        if sp is not None:
+            metrics = dict(metrics)
+            metrics["loss"] = metrics["loss"] * np.float32(sp.value)
+        return metrics
+
+    def sleep_s(self, step: int) -> float:
+        sp = self._take("slow_step", step=step)
+        return float(sp.value) if sp is not None else 0.0
+
+    def preempt(self, step: int) -> bool:
+        return self._take("preempt", step=step) is not None
+
+    # ---- checkpoint-level injection ----
+
+    def checkpoint_io(self) -> "FaultyCheckpointIO":
+        return FaultyCheckpointIO(self)
+
+
+class FaultyCheckpointIO(ckpt_lib.CheckpointIO):
+    """CheckpointIO shim injecting the plan's checkpoint faults.
+
+    Write errors raise from ``save_leaf`` *before* any bytes land (the
+    retry path re-enters through ``begin``); corruption and truncation run
+    post-commit, so the checkpoint is fully committed-but-invalid -- the
+    worst case the verified-fallback load must survive.  Corruption targets
+    a seeded-random leaf and byte range, deterministic per plan.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._ordinal = -1
+        self._rng = np.random.default_rng(plan.seed)
+
+    def begin(self, save_ordinal: int, attempt: int) -> None:
+        self._ordinal = save_ordinal
+
+    def save_leaf(self, fpath: str, arr) -> None:
+        sp = self.plan._take("ckpt_write_error", save_index=self._ordinal)
+        if sp is not None:
+            raise IOError(
+                f"injected write error (save #{self._ordinal}, "
+                f"{os.path.basename(fpath)})"
+            )
+        super().save_leaf(fpath, arr)
+
+    def commit(self, tmp: str, final: str) -> None:
+        super().commit(tmp, final)
+        if self.plan._take(
+            "ckpt_corrupt_leaf", save_index=self._ordinal
+        ) is not None:
+            leaves = sorted(
+                f for f in os.listdir(final) if f.endswith(".npy")
+            )
+            victim = os.path.join(
+                final, leaves[int(self._rng.integers(len(leaves)))]
+            )
+            size = os.path.getsize(victim)
+            junk = self._rng.integers(0, 256, 16, dtype=np.uint8)
+            with open(victim, "r+b") as f:
+                f.seek(int(self._rng.integers(max(size - 16, 1))))
+                f.write(junk.tobytes())
+        if self.plan._take(
+            "ckpt_truncate_manifest", save_index=self._ordinal
+        ) is not None:
+            mpath = os.path.join(final, ckpt_lib._MANIFEST)
+            with open(mpath, "r+b") as f:
+                f.truncate(max(os.path.getsize(mpath) // 2, 1))

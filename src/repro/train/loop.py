@@ -1,9 +1,26 @@
 """The training loop: checkpoint/restart, preemption handling, straggler
-monitoring, staggered projector refresh, and subspace diagnostics.
+monitoring, staggered projector refresh, subspace diagnostics, and the
+degrade-and-recover runtime (skip-step / rollback-and-resample).
 
 Deterministic resume: data batches are pure functions of the step index and
 optimizer RNG lives in the checkpointed state, so a killed-and-restarted run
 re-produces the uninterrupted run bit-for-bit (tested).
+
+Recovery (DESIGN.md §2.9): with a :class:`repro.train.recovery
+.RecoveryPolicy` the loop never aborts on the first fault.  Non-finite
+gradients are gated out inside the compiled step (skip-step; the update is
+compiled with the per-bucket finite check when the policy asks for it --
+``make_train_step(..., recovery=...)``).  Sustained divergence -- detected
+at the metric fetch points by :class:`DivergenceDetector` -- triggers a
+rollback: reload the newest checkpoint that verifies
+(``CheckpointManager.load_latest`` walks past corrupt ones), fold the
+attempt counter into the refresh RNG so stochastic selection methods draw a
+fresh subspace, truncate host-side records to the rollback point, and
+continue; ``max_rollbacks`` bounds the budget before the classic
+``FloatingPointError`` abort.  Checkpoint save failures are retried by the
+manager and, under recovery, counted instead of fatal.  Fault injection for
+all of this lives in ``train/faults.py`` (a ``FaultPlan`` passes hooks and
+a checkpoint-I/O shim through the same seams).
 """
 from __future__ import annotations
 
@@ -19,7 +36,8 @@ from repro.configs.base import TrainConfig
 from repro.core import lowrank as lowrank_lib
 from repro.core import metrics as metrics_lib
 from repro.train import checkpoint as ckpt_lib
-from repro.train.monitor import StepMonitor
+from repro.train import recovery as recovery_lib
+from repro.train.monitor import HeartbeatRegistry, StepMonitor
 from repro.train import state as state_lib
 from repro.train.state import TrainState
 
@@ -29,7 +47,7 @@ PyTree = Any
 @dataclasses.dataclass
 class TrainResult:
     state: TrainState
-    history: List[Dict[str, float]]
+    history: List[Dict[str, Any]]
     final_step: int
     losses: List[float]
 
@@ -37,22 +55,24 @@ class TrainResult:
 class _PreemptionGuard:
     """SIGTERM/SIGINT -> finish the current step, checkpoint, exit cleanly."""
 
+    _SIGNALS = (signal.SIGTERM, signal.SIGINT)
+
     def __init__(self, enable: bool):
         self.requested = False
-        self._installed = False
+        self._prev: Dict[int, Any] = {}
         if enable:
-            try:
-                self._prev_term = signal.signal(signal.SIGTERM, self._handler)
-                self._installed = True
-            except ValueError:
-                pass  # not on main thread (tests)
+            for sig in self._SIGNALS:
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    break  # not on main thread (tests) -- applies to both
 
     def _handler(self, signum, frame):
         self.requested = True
 
     def restore(self):
-        if self._installed:
-            signal.signal(signal.SIGTERM, self._prev_term)
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
 
 
 def train_loop(
@@ -70,6 +90,10 @@ def train_loop(
     track_subspace: bool = False,
     handle_signals: bool = True,
     batch_hook: Optional[Callable] = None,
+    recovery: Optional[recovery_lib.RecoveryPolicy] = None,
+    fault_plan=None,  # Optional[repro.train.faults.FaultPlan]
+    heartbeats: Optional[HeartbeatRegistry] = None,
+    worker_name: str = "worker0",
 ) -> TrainResult:
     tau = max(optimizer.config.tau, 1)
     groups = max(optimizer.config.refresh_groups, 1)
@@ -79,44 +103,89 @@ def train_loop(
     manager = ckpt_lib.CheckpointManager(
         train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints,
         canonicalize=canonicalize, localize=localize,
+        io=fault_plan.checkpoint_io() if fault_plan is not None else None,
     )
     monitor = StepMonitor()
     guard = _PreemptionGuard(handle_signals)
     tracker = metrics_lib.OverlapTracker() if track_subspace else None
+    detector = (
+        recovery_lib.DivergenceDetector(recovery)
+        if recovery is not None else None
+    )
+
+    def _restore_latest(skel: TrainState):
+        """Newest VERIFYING checkpoint -> (state, step): shardings describe
+        the in-memory (storage) layout; with layout converters active the
+        serialized tree differs, so derive name-based shardings for the
+        canonical tree (leaves are loaded directly sharded -- elastic
+        restore) and re-place the converted storage-layout state on the
+        mesh afterwards."""
+        if canonicalize is None:
+            return manager.load_latest(skel, shardings=shardings)
+        load_shardings = None
+        if shardings is not None and mesh is not None:
+            from repro.launch import sharding as shd_lib
+
+            canon_skel = jax.eval_shape(canonicalize, skel)
+            load_shardings = shd_lib.tree_shardings(canon_skel, mesh)
+        loaded, ck_step = manager.load_latest(
+            skel, shardings=load_shardings
+        )
+        if mesh is not None:
+            from repro.launch import sharding as shd_lib
+
+            loaded = jax.tree_util.tree_map(
+                jax.device_put, loaded, shd_lib.tree_shardings(loaded, mesh)
+            )
+        return loaded, ck_step
 
     # ---- init / restore ----
     if state is None:
         params = model.init(jax.random.PRNGKey(train_cfg.seed))
         state = TrainState(params, optimizer.init(params))
     start_step = 0
-    latest = ckpt_lib.latest_step(train_cfg.checkpoint_dir)
-    if latest is not None:
-        # shardings describe the in-memory (storage) layout; with layout
-        # converters active the serialized tree differs, so derive
-        # name-based shardings for the canonical tree (leaves are loaded
-        # directly sharded -- elastic restore) and re-place the converted
-        # storage-layout state on the mesh afterwards.
-        if canonicalize is None:
-            state = manager.load(state, step=latest, shardings=shardings)
-        else:
-            load_shardings = None
-            if shardings is not None and mesh is not None:
-                from repro.launch import sharding as shd_lib
-
-                canon_skel = jax.eval_shape(canonicalize, state)
-                load_shardings = shd_lib.tree_shardings(canon_skel, mesh)
-            state = manager.load(
-                state, step=latest, shardings=load_shardings
-            )
-            if mesh is not None:
-                from repro.launch import sharding as shd_lib
-
-                state = jax.tree_util.tree_map(
-                    jax.device_put, state, shd_lib.tree_shardings(state, mesh)
-                )
-        start_step = latest
-    history: List[Dict[str, float]] = []
+    if ckpt_lib.checkpoint_dirs(train_cfg.checkpoint_dir):
+        state, start_step = _restore_latest(state)
+    history: List[Dict[str, Any]] = []
     losses: List[float] = []
+    loss_base = start_step  # losses[i] is the loss of step loss_base + i
+
+    def _drain_save_error() -> None:
+        """Surface (or, under recovery, count) a failed async save."""
+        try:
+            manager.wait()
+        except Exception as e:
+            monitor.save_failures += 1
+            if recovery is None:
+                raise
+            history.append({
+                "event": "save_failed", "error": repr(e),
+                "rollbacks": float(monitor.rollbacks),
+            })
+        finally:
+            monitor.save_retries = manager.retries_performed
+
+    def _safe_save(cur_state, s: int, blocking: bool) -> None:
+        _drain_save_error()  # an old failure must not eat THIS save
+        try:
+            manager.save(cur_state, s, blocking=blocking)
+        except Exception as e:
+            monitor.save_failures += 1
+            if recovery is None:
+                raise
+            history.append({
+                "event": "save_failed", "step": float(s), "error": repr(e),
+            })
+        finally:
+            monitor.save_retries = manager.retries_performed
+
+    # Rollback needs a target: with recovery on and an empty checkpoint
+    # dir, pin the initial state as step-``start_step`` (save ordinal 0).
+    if (
+        recovery is not None
+        and ckpt_lib.latest_step(train_cfg.checkpoint_dir) is None
+    ):
+        _safe_save(state, start_step, blocking=True)
 
     # Per-step metrics stay ON DEVICE between fetch points: ``float(m)``
     # forces a device->host sync every step, serializing dispatch against
@@ -125,31 +194,51 @@ def train_loop(
     # refresh / checkpoint / preemption / final steps, keeping the buffer
     # small and the checkpoint-adjacent history consistent).  ``losses``
     # and ``history`` come out identical to the per-step fetch -- only the
-    # moment the NaN sentinel can raise moves to the fetch point
-    # (StepMonitor.note_loss; counters behave identically).
+    # moment the NaN sentinel (or the divergence detector) can raise moves
+    # to the fetch point.
     pending: List = []  # (step, device metrics dict, health floats)
 
-    def _flush_metrics(cur_state, swallow_nan_abort=False):
-        # drains entry-by-entry so a NaN abort mid-flush never re-processes
-        # (or drops) already-fetched losses; the finally-path flush
-        # swallows the abort instead of masking an in-flight exception
+    def _flush_metrics(cur_state, swallow_aborts=False):
+        # drains entry-by-entry so an abort (or rollback trigger) mid-flush
+        # never re-processes (or drops) already-fetched losses; the
+        # finally-path flush swallows instead of masking an in-flight
+        # exception
         while pending:
             s, m, health = pending.pop(0)
             loss = float(m["loss"])
+            skipped = (
+                float(np.asarray(m["skipped"])) if "skipped" in m else 0.0
+            )
             losses.append(loss)
-            try:
-                monitor.note_loss(s, loss)
-            except FloatingPointError:
-                if not swallow_nan_abort:
-                    raise
+            if skipped >= 1.0:
+                monitor.skip_steps += 1
+            if detector is None:
+                try:
+                    monitor.note_loss(s, loss)
+                except FloatingPointError:
+                    if not swallow_aborts:
+                        raise
+            else:
+                # recovery owns the abort decision: the sentinel only
+                # keeps its counters, the detector raises RollbackNeeded
+                monitor.note_loss(s, loss, raise_on_streak=False)
+                try:
+                    detector.observe(s, loss, skipped=skipped >= 1.0)
+                except recovery_lib.RollbackNeeded:
+                    if not swallow_aborts:
+                        raise
             if s % log_every == 0 or s == train_cfg.total_steps - 1:
                 rec = {
                     "step": float(s),
                     "loss": loss,
                     "grad_norm": float(m.get("grad_norm", np.nan)),
                     "update_norm": float(m.get("update_norm", np.nan)),
+                    "skipped": skipped,
                     **{k: float(v) for k, v in health.items()},
+                    **monitor.counters(),
                 }
+                if heartbeats is not None:
+                    rec["stale_workers"] = float(len(heartbeats.stale()))
                 if eval_fn is not None:
                     # a log step always flushes itself immediately, so the
                     # only log-step entry in the buffer is the current one
@@ -158,61 +247,121 @@ def train_loop(
                 history.append(rec)
 
     step = start_step
+    final_step = train_cfg.total_steps
     try:
-        for step in range(start_step, train_cfg.total_steps):
-            batch = data.batch_at(step)
-            if batch_hook is not None:
-                batch = batch_hook(batch)
-            monitor.start_step()
-            # Staggered refresh: group g refreshes at steps where
-            # step % (tau/groups) == 0, cycling groups (DESIGN.md §2).
-            sub_tau = max(tau // groups, 1)
-            is_refresh = step % sub_tau == 0
-            if is_refresh:
-                group = (step // sub_tau) % groups
-                state, m = step_fns["jit_refresh_step"](
-                    state, batch, group=group
+        while step < train_cfg.total_steps:
+            try:
+                batch = data.batch_at(step)
+                if batch_hook is not None:
+                    batch = batch_hook(batch)
+                if fault_plan is not None:
+                    batch = fault_plan.batch_hook(batch, step)
+                if heartbeats is not None:
+                    heartbeats.beat(worker_name)
+                monitor.start_step()
+                if fault_plan is not None:
+                    dt = fault_plan.sleep_s(step)
+                    if dt > 0:
+                        time.sleep(dt)  # straggler injection
+                # Staggered refresh: group g refreshes at steps where
+                # step % (tau/groups) == 0, cycling groups (DESIGN.md §2).
+                sub_tau = max(tau // groups, 1)
+                is_refresh = step % sub_tau == 0
+                if is_refresh:
+                    group = (step // sub_tau) % groups
+                    state, m = step_fns["jit_refresh_step"](
+                        state, batch, group=group
+                    )
+                else:
+                    state, m = step_fns["jit_step"](state, batch)
+                if fault_plan is not None:
+                    m = fault_plan.loss_hook(step, m)
+                health = monitor.end_step(step)
+                pending.append((step, m, health))
+                if tracker is not None and is_refresh:
+                    projs = metrics_lib.collect_projectors(
+                        state.opt_state, optimizer.specs,
+                        layout=optimizer.state_layout,
+                    )
+                    tracker.observe(
+                        {k: np.asarray(v) for k, v in projs.items()}
+                    )
+                if fault_plan is not None and fault_plan.preempt(step):
+                    guard.requested = True  # as if SIGTERM were delivered
+                checkpoint_due = (
+                    train_cfg.checkpoint_every > 0
+                    and (step + 1) % train_cfg.checkpoint_every == 0
                 )
-            else:
-                state, m = step_fns["jit_step"](state, batch)
-            health = monitor.end_step(step)
-            pending.append((step, m, health))
-            if tracker is not None and is_refresh:
-                projs = metrics_lib.collect_projectors(
-                    state.opt_state, optimizer.specs,
-                    layout=optimizer.state_layout,
-                )
-                tracker.observe(
-                    {k: np.asarray(v) for k, v in projs.items()}
-                )
-            checkpoint_due = (
-                train_cfg.checkpoint_every > 0
-                and (step + 1) % train_cfg.checkpoint_every == 0
-            )
-            if (
-                is_refresh
-                or checkpoint_due
-                or guard.requested
-                or step % log_every == 0
-                or step == train_cfg.total_steps - 1
-            ):
-                _flush_metrics(state)
-            if checkpoint_due:
-                manager.save(
-                    state, step + 1, blocking=not train_cfg.async_checkpoint
-                )
-            if guard.requested:
-                manager.save(state, step + 1, blocking=True)
-                break
-        else:
-            step = train_cfg.total_steps - 1
+                if (
+                    is_refresh
+                    or checkpoint_due
+                    or guard.requested
+                    or step % log_every == 0
+                    or step == train_cfg.total_steps - 1
+                ):
+                    _flush_metrics(state)
+                if checkpoint_due:
+                    _safe_save(
+                        state, step + 1,
+                        blocking=not train_cfg.async_checkpoint,
+                    )
+                if guard.requested:
+                    _safe_save(state, step + 1, blocking=True)
+                    final_step = step + 1
+                    break
+                step += 1
+            except recovery_lib.RollbackNeeded as rb:
+                attempt = monitor.rollbacks + 1
+                if attempt > recovery.max_rollbacks:
+                    raise FloatingPointError(
+                        f"divergence persists after "
+                        f"{recovery.max_rollbacks} rollbacks ({rb})"
+                    ) from rb
+                monitor.rollbacks = attempt
+                backoff = recovery.backoff_s(attempt)
+                if backoff > 0:
+                    time.sleep(backoff)
+                _drain_save_error()  # never race an in-flight save
+                state, ck_step = _restore_latest(state)
+                if recovery.resample_on_rollback:
+                    # fold the attempt into the refresh RNG: stochastic
+                    # selection (sara/golore/grass) draws a DIFFERENT
+                    # subspace at the next refresh instead of replaying
+                    # the diverged one (dominant re-selects the same
+                    # subspace by construction -- see train/recovery.py)
+                    state = TrainState(
+                        state.params,
+                        recovery_lib.resample_opt_state(
+                            state.opt_state, attempt
+                        ),
+                    )
+                # truncate host-side records to the rollback point
+                if ck_step <= loss_base:
+                    losses.clear()
+                    loss_base = ck_step
+                else:
+                    del losses[ck_step - loss_base:]
+                history[:] = [
+                    r for r in history if r.get("step", -1.0) < ck_step
+                ]
+                pending.clear()
+                detector.reset()
+                monitor.bad_loss_count = 0
+                history.append({
+                    "event": "rollback",
+                    "step": float(ck_step),
+                    "from_step": float(rb.step),
+                    "attempt": float(attempt),
+                    "reason": rb.reason,
+                })
+                step = ck_step
     finally:
-        _flush_metrics(state, swallow_nan_abort=True)
-        manager.wait()
+        _flush_metrics(state, swallow_aborts=True)
+        _drain_save_error()
         guard.restore()
 
     result = TrainResult(
-        state=state, history=history, final_step=step + 1, losses=losses
+        state=state, history=history, final_step=final_step, losses=losses
     )
     if tracker is not None:
         result.subspace = tracker  # type: ignore[attr-defined]

@@ -34,6 +34,12 @@ class StepMonitor:
         self.stragglers: List[int] = []
         self.bad_loss_count = 0
         self.step_count = 0
+        # recovery counters (train/recovery.py): maintained by the train
+        # loop, surfaced in every history record via ``counters()``
+        self.skip_steps = 0  # updates gated out (non-finite grads)
+        self.rollbacks = 0  # checkpoint rollbacks performed
+        self.save_retries = 0  # checkpoint write attempts retried
+        self.save_failures = 0  # saves abandoned after retries
 
     def start_step(self) -> None:
         self._t_start = self._clock()
@@ -67,22 +73,40 @@ class StepMonitor:
             "straggler": float(is_straggler),
         }
 
-    def note_loss(self, step: int, loss: float) -> None:
+    def note_loss(
+        self, step: int, loss: float, raise_on_streak: bool = True
+    ) -> bool:
         """NaN/Inf sentinel: consecutive non-finite losses abort the run.
 
         Counters behave identically whether losses arrive per step or in
         deferred batches (the counter resets on every finite loss either
         way); only the *moment* the abort raises moves to the fetch point.
+
+        ``raise_on_streak=False`` keeps the bookkeeping but returns the
+        tripped flag instead of raising -- the recovery-enabled loop owns
+        the abort decision (rollback first, abort only past the budget).
         """
         if not math.isfinite(loss):
             self.bad_loss_count += 1
             if self.bad_loss_count > self.max_bad_losses:
-                raise FloatingPointError(
-                    f"{self.bad_loss_count} non-finite losses; aborting "
-                    f"(last at step {step})"
-                )
+                if raise_on_streak:
+                    raise FloatingPointError(
+                        f"{self.bad_loss_count} non-finite losses; aborting "
+                        f"(last at step {step})"
+                    )
+                return True
         else:
             self.bad_loss_count = 0
+        return False
+
+    def counters(self) -> Dict[str, float]:
+        """Recovery counters, merged into every history record."""
+        return {
+            "skip_steps": float(self.skip_steps),
+            "rollbacks": float(self.rollbacks),
+            "save_retries": float(self.save_retries),
+            "save_failures": float(self.save_failures),
+        }
 
 
 class HeartbeatRegistry:

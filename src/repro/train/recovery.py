@@ -1,0 +1,163 @@
+"""Recovery policy for the training loop: skip-step and rollback-and-resample.
+
+Two escalation tiers (DESIGN.md §2.9), both off the training hot path:
+
+  * **skip-step** -- a transient bad microbatch (non-finite grads) must not
+    corrupt the optimizer moments.  ``optimizer.update(skip_nonfinite=True)``
+    computes ONE fused all-finite reduction per bucket stack
+    (``core/buckets.bucketed_all_finite``) and gates the whole update with
+    ``jnp.where``: when every gradient is finite the selected branch is the
+    new params/state *exactly* (the gate adds no perturbation of its own),
+    otherwise params and optimizer state pass through unchanged and the step
+    is counted as skipped.
+
+  * **rollback-and-resample** -- sustained divergence (a non-finite loss
+    streak, or a loss-spike factor vs. the windowed median of recent good
+    losses) means the *trajectory* is bad, not the batch.  The loop reloads
+    the last verified checkpoint and folds the recovery-attempt counter into
+    the optimizer's refresh RNG (``resample_opt_state``): the next
+    importance-sampled refresh then draws a genuinely different subspace, so
+    the run does not replay the divergence deterministically.  This is the
+    paper's exploration claim doing double duty as a recovery primitive --
+    ``sara``'s Gumbel draw and ``golore``'s random basis re-randomize under a
+    new key, whereas ``dominant`` (deterministic top-k of the gradient
+    spectrum) re-selects the same frozen directions no matter the key and
+    therefore CANNOT resample; it only gets the (weaker) benefit of replaying
+    from an earlier state.  Rollbacks are bounded: after ``max_rollbacks``
+    the loop aborts with the classic sentinel ``FloatingPointError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List
+
+import jax
+
+from repro.core.lowrank import LowRankOptState
+
+# Salt folded into the refresh key together with the attempt counter so a
+# resample never collides with the per-leaf ``fold_in(subkey, leaf_idx)``
+# schedule of an ordinary refresh step.
+_RESAMPLE_SALT = 0x5EED
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """How the train loop degrades instead of aborting.
+
+    ``skip_nonfinite_updates``: gate every optimizer update on a per-bucket
+    all-finite check of the gradients (skip-step tier).
+    ``max_bad_steps``: consecutive bad steps (non-finite loss or skipped
+    update) before a rollback is triggered.
+    ``loss_spike_factor``: >0 treats ``loss > factor * median(recent)`` as a
+    bad step too (0 disables spike detection -- non-finite only).
+    ``loss_window``: number of recent *good* losses the median is over.
+    ``max_rollbacks``: rollback budget before the loop aborts.
+    ``rollback_backoff_s``: base sleep before the i-th rollback, doubled
+    each attempt (0 disables -- unit tests).
+    ``resample_on_rollback``: fold the attempt counter into the refresh RNG
+    on reload so stochastic methods draw a fresh subspace.
+    """
+
+    skip_nonfinite_updates: bool = True
+    max_bad_steps: int = 3
+    loss_spike_factor: float = 0.0
+    loss_window: int = 32
+    max_rollbacks: int = 3
+    rollback_backoff_s: float = 0.0
+    resample_on_rollback: bool = True
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before rollback ``attempt`` (1-indexed), doubling."""
+        if self.rollback_backoff_s <= 0:
+            return 0.0
+        return self.rollback_backoff_s * (2.0 ** (attempt - 1))
+
+
+class RollbackNeeded(Exception):
+    """Raised by the divergence detector at a metric-fetch point; caught by
+    the train loop, which performs the rollback."""
+
+    def __init__(self, step: int, reason: str):
+        super().__init__(f"step {step}: {reason}")
+        self.step = step
+        self.reason = reason
+
+
+class DivergenceDetector:
+    """Streak-of-bad-steps detector over the (host-fetched) loss stream.
+
+    A step is *bad* when its loss is non-finite, when its update was skipped
+    (non-finite grads gated out), or -- with ``loss_spike_factor > 0`` --
+    when the loss exceeds ``factor x median`` of the last ``loss_window``
+    good losses.  ``max_bad_steps`` consecutive bad steps trip the detector.
+    Only good losses enter the median window, so a spike cannot drag the
+    reference median up and mask itself.
+    """
+
+    _MIN_WINDOW = 5  # spike detection needs a meaningful median
+
+    def __init__(self, policy: RecoveryPolicy):
+        self.policy = policy
+        self.streak = 0
+        self._window: List[float] = []
+
+    def observe(self, step: int, loss: float, skipped: bool = False) -> None:
+        """Feed one step; raises :class:`RollbackNeeded` on a tripped streak."""
+        if not math.isfinite(loss):
+            bad, why = True, "non-finite loss"
+        elif skipped:
+            bad, why = True, "update skipped (non-finite grads)"
+        elif (
+            self.policy.loss_spike_factor > 0
+            and len(self._window) >= self._MIN_WINDOW
+            and loss > self.policy.loss_spike_factor * self._median()
+        ):
+            bad, why = True, (
+                f"loss spike {loss:.4g} > "
+                f"{self.policy.loss_spike_factor:g} x median "
+                f"{self._median():.4g}"
+            )
+        else:
+            bad, why = False, ""
+            self._window.append(loss)
+            if len(self._window) > self.policy.loss_window:
+                self._window.pop(0)
+        if bad:
+            self.streak += 1
+            if self.streak >= self.policy.max_bad_steps:
+                raise RollbackNeeded(
+                    step, f"{why} ({self.streak} consecutive bad steps)"
+                )
+        else:
+            self.streak = 0
+
+    def _median(self) -> float:
+        s = sorted(self._window)
+        return s[len(s) // 2]
+
+    def reset(self) -> None:
+        """Called after a rollback: the streak belonged to the abandoned
+        trajectory.  The good-loss window is kept -- those losses predate
+        the divergence and remain the right spike reference."""
+        self.streak = 0
+
+
+def resample_opt_state(opt_state: LowRankOptState, attempt: int) -> Any:
+    """Fold the recovery-attempt counter into the refresh RNG.
+
+    The refresh key lives in ``LowRankOptState.key`` and is split once per
+    refresh step; folding ``salt + attempt`` in after a rollback makes every
+    subsequent refresh draw from a different stream than the replayed
+    (diverged) trajectory.  For the stochastic selection methods
+    (``core/projectors.STOCHASTIC_REFRESH_METHODS``: sara's Gumbel top-k,
+    golore's random basis, grass's row sampling) this yields a genuinely
+    different subspace at the next refresh.  ``dominant`` ignores the key by
+    construction -- top-k of the singular spectrum is a deterministic
+    function of G -- which is exactly the frozen-subspace failure mode the
+    paper targets; the fold is still applied (it is free) but the unit tests
+    assert it does NOT move the dominant projector.
+    """
+    new_key = jax.random.fold_in(opt_state.key, _RESAMPLE_SALT + attempt)
+    return opt_state._replace(key=new_key)

@@ -119,14 +119,39 @@ def _value_and_grad(model: Model, microbatch: int, accum_dtype=jnp.float32):
     return accumulated
 
 
+def _split_grad_scale(batch):
+    """Pop the fault-injection ``grad_scale`` scalar out of the batch.
+
+    ``train/faults.py`` arms non-finite-gradient injection by adding a
+    ``grad_scale`` entry to the batch dict (token batches are integer, so
+    grads cannot be poisoned through the data); the step multiplies it
+    into the gradients after the backward pass.  Returns (batch, scale) --
+    scale is None on the (structurally distinct, separately compiled)
+    fault-free batches, so ordinary runs pay nothing.
+    """
+    if isinstance(batch, dict) and "grad_scale" in batch:
+        batch = dict(batch)
+        return batch, batch.pop("grad_scale")
+    return batch, None
+
+
+def _scale_grads(grads, gscale):
+    if gscale is None:
+        return grads
+    return jax.tree_util.tree_map(
+        lambda g: g * jnp.asarray(gscale, g.dtype), grads
+    )
+
+
 def make_train_step(
     model: Model,
     optimizer: lowrank_lib.LowRankOptimizer,
     *,
     mesh=None,
     train_cfg: Optional[TrainConfig] = None,
-    compressed="",  # False/'' | True/'flat' | 'pod' 
+    compressed="",  # False/'' | True/'flat' | 'pod'
     donate: bool = True,
+    recovery=None,  # Optional[repro.train.recovery.RecoveryPolicy]
 ) -> Dict[str, Callable]:
     """Returns {'step': f(state, batch), 'refresh_step': f, 'jit_*': jitted}.
 
@@ -138,6 +163,11 @@ def make_train_step(
     raises immediately -- a typo like ``"pods"`` must not silently fall
     through to the flat-DP axis set.  The normalized mode is surfaced as
     ``fns["compressed_mode"]``.
+
+    ``recovery`` with ``skip_nonfinite_updates=True`` compiles the
+    skip-step gate into both executables (``optimizer.update(...,
+    skip_nonfinite=True)``): non-finite gradients leave params and
+    optimizer state untouched and surface as ``metrics["skipped"]``.
     """
     # normalize the legacy bool form in ONE place, validate early
     compressed = "flat" if compressed is True else (compressed or "")
@@ -159,16 +189,20 @@ def make_train_step(
     micro = train_cfg.microbatch if train_cfg else 0
     accum_dtype = getattr(train_cfg, "accum_dtype", jnp.float32) or jnp.float32
     vg = _value_and_grad(model, micro, accum_dtype)
+    skip_nonfinite = bool(recovery is not None
+                          and recovery.skip_nonfinite_updates)
 
     def step_fn(state: TrainState, batch, *, refresh: bool, group: int = 0):
+        batch, gscale = _split_grad_scale(batch)
         (loss, metrics), grads = vg(state.params, batch)
+        grads = _scale_grads(grads, gscale)
         # apply=True: the optimizer returns new params directly -- with
         # engine="bucketed" the fused kernels write W' themselves, so there
         # is no separate apply_updates pass over the parameters (and with
         # donation the param buffers are updated in place).
         params, opt_state, aux = optimizer.update(
             grads, state.opt_state, state.params, refresh=refresh,
-            group=group, apply=True,
+            group=group, apply=True, skip_nonfinite=skip_nonfinite,
         )
         out_metrics = {
             **metrics,
@@ -176,6 +210,8 @@ def make_train_step(
             "update_norm": aux.update_norm,
             "refresh_overlap": aux.mean_refresh_overlap,
         }
+        if skip_nonfinite:
+            out_metrics["skipped"] = aux.skipped
         return TrainState(params, opt_state), out_metrics
 
     def compressed_step_fn(
@@ -190,15 +226,17 @@ def make_train_step(
         dp = ("pod",) if compressed == "pod" else batch_axes(mesh)
         if compressed == "pod":
             # manual only over 'pod': dim0 splits across pods; the intra-pod
-            # data sharding of the per-pod view stays auto.
+            # data sharding of the per-pod view stays auto.  0-dim entries
+            # (the fault-injection grad_scale scalar) replicate.
             batch_specs = jax.tree_util.tree_map(
                 lambda x: P("pod", *([None] * (x.ndim - 1)))
-                if x.shape[0] % mesh.shape["pod"] == 0 else P(),
+                if x.ndim and x.shape[0] % mesh.shape["pod"] == 0 else P(),
                 batch,
             )
         else:
             batch_specs = jax.tree_util.tree_map(
-                lambda x: shd.batch_spec(x.shape, mesh), batch
+                lambda x: shd.batch_spec(x.shape, mesh) if x.ndim else P(),
+                batch,
             )
 
         # Bucket-native optimizers reduce in the stacked layout: ONE
@@ -209,7 +247,9 @@ def make_train_step(
         stacked = optimizer.state_layout is not None
 
         def shard_body(state, batch):
+            batch, gscale = _split_grad_scale(batch)
             (loss, metrics), grads = vg(state.params, batch)
+            grads = _scale_grads(grads, gscale)
             if refresh:
                 if stacked:
                     # full-rank (B, d, n) stacks: same bytes as the leaf
@@ -220,6 +260,7 @@ def make_train_step(
                 params, opt_state, aux = optimizer.update(
                     grads, state.opt_state, state.params,
                     refresh=True, group=group, apply=True,
+                    skip_nonfinite=skip_nonfinite,
                 )
             else:
                 if stacked:
@@ -239,6 +280,7 @@ def make_train_step(
                 params, opt_state, aux = optimizer.update(
                     rgrads, state.opt_state, state.params,
                     refresh=False, projected=True, apply=True,
+                    skip_nonfinite=skip_nonfinite,
                 )
             metrics = jax.lax.pmean(metrics, dp)
             out_metrics = {
@@ -247,6 +289,10 @@ def make_train_step(
                 "update_norm": aux.update_norm,
                 "refresh_overlap": aux.mean_refresh_overlap,
             }
+            if skip_nonfinite:
+                # post-pmean stacks are replica-identical, so the gate (and
+                # this flag) agree across the DP group
+                out_metrics["skipped"] = aux.skipped
             return TrainState(params, opt_state), out_metrics
 
         return shard_map_compat(
