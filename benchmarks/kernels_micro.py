@@ -443,22 +443,35 @@ def dp_compression_bench() -> List[Row]:
     is_spec = lambda x: hasattr(x, "lowrank")  # noqa: E731
     _, treedef = jax.tree_util.tree_flatten(opt.specs, is_leaf=is_spec)
     flat_params = treedef.flatten_up_to(params)
-    model = buckets_lib.dp_comm_model(opt.bucket_plan, flat_params)
+    # Per-axis accounting on the production multi-pod hierarchy (2 pods x
+    # 16-way data) and the ZeRO-sharded schedule at the matching replica
+    # count -- the same analytic model launch/dryrun.py records.
+    POD_AXES = {"pod": 2, "data": 16}
+    ZERO_SHARDS = 8
+    model = buckets_lib.dp_comm_model(
+        opt.bucket_plan, flat_params, axis_sizes=POD_AXES,
+        state_shards=ZERO_SHARDS, inner="adam",
+    )
 
     rows: List[Row] = []
     base = f"dp/grad_reduce_L{L}_d{d_model}_r{rank}"
     for sched in ("standard", "compressed_hot", "compressed_refresh"):
         b, c = model[sched]["bytes"], model[sched]["collectives"]
+        pa = model[sched]["per_axis"]
         name = f"{base}_{sched}"
         rows.append((
             name, 0.0,
             f"modeled_bytes={b / 1e6:.2f}MB dispatched_collectives={c} "
-            f"tpu_ici={b / hw.ICI_LINK_BW * 1e6:.1f}us",
+            f"tpu_ici={b / hw.ICI_LINK_BW * 1e6:.1f}us "
+            f"intra_pod={pa['intra_pod_bytes'] / 1e6:.2f}MB "
+            f"inter_pod={pa['inter_pod_bytes'] / 1e6:.2f}MB",
         ))
         common.record(
             name, 0.0, roofline_us=b / hw.ICI_LINK_BW * 1e6,
             engine="bucketed", state_layout="bucketed",
             modeled_collective_bytes=b, dispatched_collectives=c,
+            modeled_intra_pod_bytes=int(pa["intra_pod_bytes"]),
+            modeled_inter_pod_bytes=int(pa["inter_pod_bytes"]),
             schedule=sched,
         )
     for sched, key in (("standard", "lowrank_bytes_standard"),
@@ -486,6 +499,76 @@ def dp_compression_bench() -> List[Row]:
         f"{model['compressed_hot']['collectives']}",
     ))
     assert abs(ratio - d_model / rank) < 1e-9, ratio
+
+    # --- hierarchical 'pod' mode: intra-pod standard vs inter-pod
+    # compressed operand bytes (what crosses the slow wire) ---
+    ph = model["pod_mode_hot"]
+    name = f"{base}_pod_mode_hot"
+    rows.append((
+        name, 0.0,
+        f"intra_pod={ph['intra_pod_bytes'] / 1e6:.2f}MB (standard) "
+        f"inter_pod={ph['inter_pod_bytes'] / 1e6:.2f}MB (compressed)",
+    ))
+    common.record(
+        name, 0.0,
+        roofline_us=ph["inter_pod_bytes"] / hw.ICI_LINK_BW * 1e6,
+        engine="bucketed", state_layout="bucketed",
+        modeled_intra_pod_bytes=int(ph["intra_pod_bytes"]),
+        modeled_inter_pod_bytes=int(ph["inter_pod_bytes"]),
+        schedule="pod_mode_hot",
+    )
+
+    # --- ZeRO-sharded schedules (state_sharding='zero', DESIGN.md §2.10):
+    # hot = reduce-scatter R-space + all-gather projectors/W' slices;
+    # refresh = full-stack reduction + one state gather per tau steps ---
+    for sched, extra_keys in (
+        ("zero_hot", ("reduce_scatter_bytes", "all_gather_bytes")),
+        ("zero_refresh", ("state_gather_bytes",)),
+    ):
+        rec = model[sched]
+        b, c = rec["bytes"], rec["collectives"]
+        name = f"{base}_{sched}"
+        detail = " ".join(
+            f"{k}={rec[k] / 1e6:.2f}MB" for k in extra_keys
+        )
+        rows.append((
+            name, 0.0,
+            f"modeled_bytes={b / 1e6:.2f}MB dispatched_collectives={c} "
+            f"{detail} (shards={ZERO_SHARDS})",
+        ))
+        common.record(
+            name, 0.0, roofline_us=b / hw.ICI_LINK_BW * 1e6,
+            engine="bucketed", state_layout="zero",
+            modeled_collective_bytes=b, dispatched_collectives=c,
+            schedule=sched, state_shards=ZERO_SHARDS,
+            **{k: int(rec[k]) for k in extra_keys},
+        )
+
+    # --- the ZeRO memory claim: per-device optimizer-state bytes drop by
+    # ~the replica count (exactly shards modulo pad rows on buckets whose
+    # batch doesn't divide) ---
+    sb = buckets_lib.modeled_state_bytes(
+        opt.bucket_plan, "adam", shards=ZERO_SHARDS
+    )
+    per_dev = model["modeled_state_bytes_per_device"]
+    shard_ratio = sb["total"] / per_dev
+    name = f"dp/state_sharding_L{L}_d{d_model}_r{rank}_s{ZERO_SHARDS}"
+    rows.append((
+        name, 0.0,
+        f"state_total={sb['total'] / 1e6:.2f}MB "
+        f"per_device={per_dev / 1e6:.2f}MB "
+        f"ratio={shard_ratio:.2f}x (shards={ZERO_SHARDS}, incl. padding)",
+    ))
+    common.record(
+        name, 0.0, engine="bucketed", state_layout="zero",
+        modeled_state_bytes=int(sb["total"]),
+        modeled_state_bytes_per_device=int(per_dev),
+        state_shards=ZERO_SHARDS,
+    )
+    # "~the DP replica count": exact d/r-style equality is impossible with
+    # pad rows, but the drop must be the right order -- over half the
+    # replica count on the bench shapes.
+    assert shard_ratio > ZERO_SHARDS / 2, shard_ratio
     return rows
 
 

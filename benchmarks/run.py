@@ -24,6 +24,12 @@ _CHECK_FIELDS = (
     "modeled_collective_bytes",
     "dispatched_collectives",
     "modeled_state_bytes",
+    # ZeRO-sharded state + multi-pod hierarchy (ISSUE 7): absent from
+    # legacy records, which the None-skip below tolerates -- old baselines
+    # keep gating the fields they carry.
+    "modeled_state_bytes_per_device",
+    "modeled_intra_pod_bytes",
+    "modeled_inter_pod_bytes",
 )
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 

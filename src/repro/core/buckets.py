@@ -187,12 +187,22 @@ class LeafStateTemplate(NamedTuple):
 
 class StateLayout(NamedTuple):
     """Build-time decision that the optimizer state is bucket-native,
-    plus everything needed to convert in BOTH directions (save/load)."""
+    plus everything needed to convert in BOTH directions (save/load).
+
+    ``shards > 1`` selects the ZeRO-style DP-sharded layout
+    (``state_sharding="zero"``, DESIGN.md §2.10): every stack is padded
+    along the leading ``B`` dim to a multiple of ``shards`` with inert
+    zero rows, so each DP replica can own exactly ``B_pad / shards``
+    contiguous rows of every buffer.  The padded layout is an internal
+    representation only -- checkpoints always serialize the canonical
+    per-leaf layout, which unpads first.
+    """
 
     plan: BucketPlan
     inner_name: str  # 'adam' | 'msgd' | 'adam_mini' | 'adam8bit'
     has_v: bool
     templates: Dict[int, LeafStateTemplate]  # keyed by leaf_idx (static)
+    shards: int = 1  # 1 = replicated; >1 = zero-sharded over the DP axis
 
 
 def build_state_layout(
@@ -202,8 +212,11 @@ def build_state_layout(
     *,
     inner_name: str,
     projector_dtype,
+    shards: int = 1,
 ) -> StateLayout:
     """Canonical per-leaf templates for every bucketed leaf."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     has_v = inner_lib.fused_has_second_moment(inner_name)
     if inner_name in SIDE_HOMOGENEOUS_INNERS:
         for bucket in plan.buckets:
@@ -243,14 +256,18 @@ def build_state_layout(
                 proj, m, v, m_scale, v_scale
             )
     return StateLayout(
-        plan=plan, inner_name=inner_name, has_v=has_v, templates=templates
+        plan=plan, inner_name=inner_name, has_v=has_v, templates=templates,
+        shards=shards,
     )
 
 
 def init_bucket_states(layout: StateLayout) -> Tuple[BucketState, ...]:
     """Stacked equivalent of the per-leaf init: eye projectors (the first
     refresh installs the real ones), zero moments (quantized zeros for
-    adam8bit -- identical codes/scales to ``inner.adam8bit().init``)."""
+    adam8bit -- identical codes/scales to ``inner.adam8bit().init``).
+
+    With ``layout.shards > 1`` the stacks come back zero-padded to the
+    sharded row count (``zero_pad_states``)."""
     out = []
     for bucket in layout.plan.buckets:
         B, d, n, r = bucket.batch, bucket.d, bucket.n, bucket.rank
@@ -271,7 +288,7 @@ def init_bucket_states(layout: StateLayout) -> Tuple[BucketState, ...]:
         else:
             v = jnp.zeros((B, r, n), jnp.float32) if layout.has_v else None
         out.append(BucketState(projector=eye, m=m, v=v))
-    return tuple(out)
+    return zero_pad_states(layout, out)
 
 
 def leaf_states_to_bucketed(
@@ -375,6 +392,194 @@ def leaf_projectors(
 
 
 # ---------------------------------------------------------------------------
+# ZeRO-style DP-sharded state layout (state_sharding="zero", DESIGN.md §2.10)
+# ---------------------------------------------------------------------------
+#
+# Each (B, ...) stack is padded along dim 0 to B_pad = ceil(B/shards)*shards
+# so every DP replica owns a contiguous (B_pad/shards, ...) row block of
+# every buffer.  Pad rows are INERT by construction: every fused inner is
+# row-independent along the leading dim, all pad inputs (params, grads,
+# moments) are zero, and zero rows are fixed points of every update --
+# adam/msgd/adam_mini trivially (0 moments + 0 grads -> 0 direction), and
+# adam8bit because dequantize maps both the zero-padded codes (scale 0) and
+# the re-quantized zero rows (codes for 0, scale 1) to exactly 0.0
+# (quantize.py clamps absmax 0 -> scale 1).  Canonical (checkpoint)
+# conversion always unpads first, so pad-row bit patterns never escape.
+
+
+def zero_padded_batch(batch: int, shards: int) -> int:
+    """Smallest multiple of ``shards`` >= ``batch``."""
+    return -(-batch // shards) * shards
+
+
+def _pad_rows(x: jax.Array, rows: int) -> jax.Array:
+    if x.shape[0] == rows:
+        return x
+    pad = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def _map_state(bst: BucketState, fn) -> BucketState:
+    return BucketState(*[None if x is None else fn(x) for x in bst])
+
+
+def zero_pad_states(
+    layout: StateLayout, bucket_states: Sequence[BucketState]
+) -> Tuple[BucketState, ...]:
+    """Canonical-batch stacks -> padded sharded-layout stacks (zero rows)."""
+    if layout.shards <= 1:
+        return tuple(bucket_states)
+    out = []
+    for bucket, bst in zip(layout.plan.buckets, bucket_states):
+        bp = zero_padded_batch(bucket.batch, layout.shards)
+        out.append(_map_state(bst, lambda x, bp=bp: _pad_rows(x, bp)))
+    return tuple(out)
+
+
+def zero_unpad_states(
+    layout: StateLayout, bucket_states: Sequence[BucketState]
+) -> Tuple[BucketState, ...]:
+    """Padded sharded-layout stacks -> canonical-batch stacks (drop pads)."""
+    if layout.shards <= 1:
+        return tuple(bucket_states)
+    return tuple(
+        _map_state(bst, lambda x, b=bucket.batch: x[:b])
+        for bucket, bst in zip(layout.plan.buckets, bucket_states)
+    )
+
+
+def zero_pad_grad_stacks(
+    layout: StateLayout, stacks: Sequence[jax.Array]
+) -> Tuple[jax.Array, ...]:
+    """Zero-pad per-bucket gradient stacks to the padded (shardable) batch.
+
+    The padded stacks are what the per-bucket ``psum_scatter`` consumes:
+    the pad rows are zeros on every replica, so the scattered slice of a
+    pad row is exactly zero and the matching (inert) state pad rows stay
+    fixed points of the fused update.
+    """
+    return tuple(
+        _pad_rows(x, zero_padded_batch(bucket.batch, layout.shards))
+        for bucket, x in zip(layout.plan.buckets, stacks)
+    )
+
+
+def zero_shard_index(axis_names: Sequence[str]) -> jax.Array:
+    """Combined shard index over the DP axes, matching the row order of a
+    tiled ``psum_scatter``/``all_gather`` applied over the same axis tuple
+    (major-to-minor in the given order)."""
+    idx = jnp.int32(0)
+    for a in axis_names:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def zero_local_states(
+    layout: StateLayout,
+    bucket_states: Sequence[BucketState],
+    shard_index: jax.Array,
+) -> Tuple[BucketState, ...]:
+    """Slice one shard's contiguous row block out of full padded stacks
+    (traced ``shard_index`` -- usable inside shard_map)."""
+    out = []
+    for bucket, bst in zip(layout.plan.buckets, bucket_states):
+        rows = zero_padded_batch(bucket.batch, layout.shards) // layout.shards
+        out.append(_map_state(
+            bst,
+            lambda x, rows=rows: jax.lax.dynamic_slice_in_dim(
+                x, shard_index * rows, rows, axis=0
+            ),
+        ))
+    return tuple(out)
+
+
+def zero_gather_states(
+    local_states: Sequence[BucketState], axis_names: Sequence[str]
+) -> Tuple[BucketState, ...]:
+    """all_gather shard-local stacks back to the full PADDED layout (tiled
+    along dim 0, inverse of the ``zero_local_states`` slicing)."""
+    return tuple(
+        _map_state(
+            bst,
+            lambda x: jax.lax.all_gather(
+                x, tuple(axis_names), axis=0, tiled=True
+            ),
+        )
+        for bst in local_states
+    )
+
+
+def zero_gather_projectors(
+    layout: StateLayout,
+    local_states: Sequence[BucketState],
+    axis_names: Sequence[str],
+) -> Tuple[jax.Array, ...]:
+    """Full UNPADDED (B, d, r) projector stacks from shard-local state.
+
+    The hot-path projection P^T G runs over all B rows of the local
+    gradient contribution (every replica sees different data, so every
+    replica must project every row before the reduce-scatter) -- this
+    per-step projector all-gather is the ZeRO price of sharding the
+    projector stacks, and is modeled in ``dp_comm_model``'s zero schedule.
+    """
+    return tuple(
+        jax.lax.all_gather(
+            bst.projector, tuple(axis_names), axis=0, tiled=True
+        )[: bucket.batch]
+        for bucket, bst in zip(layout.plan.buckets, local_states)
+    )
+
+
+def zero_local_param_stacks(
+    layout: StateLayout,
+    flat_params: Sequence[jax.Array],
+    shard_index: jax.Array,
+) -> Tuple[jax.Array, ...]:
+    """This shard's (B_pad/shards, d, n) row block of every W stack.
+
+    Params are replicated, so the slice is free of communication: gather
+    the canonical stack per-leaf, zero-pad, take the local rows.
+    """
+    out = []
+    for bucket in layout.plan.buckets:
+        bp = zero_padded_batch(bucket.batch, layout.shards)
+        rows = bp // layout.shards
+        w = _pad_rows(_gather(bucket, flat_params), bp)
+        out.append(jax.lax.dynamic_slice_in_dim(
+            w, shard_index * rows, rows, axis=0
+        ))
+    return tuple(out)
+
+
+def zero_gather_stacks(
+    layout: StateLayout,
+    local_stacks: Sequence[jax.Array],
+    axis_names: Sequence[str],
+) -> Tuple[jax.Array, ...]:
+    """all_gather per-bucket local row blocks into full UNPADDED stacks --
+    the W' gather of the zero hot step (pad rows dropped)."""
+    return tuple(
+        jax.lax.all_gather(x, tuple(axis_names), axis=0, tiled=True)[
+            : bucket.batch
+        ]
+        for bucket, x in zip(layout.plan.buckets, local_stacks)
+    )
+
+
+def zero_scatter_outputs(
+    plan: BucketPlan,
+    stacks: Sequence[jax.Array],
+    flat_params: Sequence,
+) -> Dict[int, jax.Array]:
+    """Full (B, d, n) output stacks -> {leaf_idx: per-leaf array} (the
+    per-leaf scatter ``bucketed_update`` skips under ``out_stacked``)."""
+    out: Dict[int, jax.Array] = {}
+    for bucket, s in zip(plan.buckets, stacks):
+        out.update(_scatter(bucket, s, flat_params))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # stack / unstack
 # ---------------------------------------------------------------------------
 
@@ -456,6 +661,7 @@ def bucketed_project_grads(
     plan: BucketPlan,
     bucket_states: Sequence[BucketState],
     flat_grads: Sequence[jax.Array],
+    projectors: Optional[Sequence[jax.Array]] = None,
 ) -> Tuple[jax.Array, ...]:
     """Per-bucket batched projection: one ``(B, r, n)`` R-space gradient
     stack per bucket, straight from the bucket projector buffers.
@@ -463,11 +669,16 @@ def bucketed_project_grads(
     This is the distributed project-then-reduce payload: ONE contiguous
     f32 buffer per bucket to psum instead of a ragged per-leaf tree
     (kernels/galore_project's batch grid on TPU, batched einsum elsewhere).
+
+    ``projectors`` overrides the per-bucket (B, d, r) stacks -- the
+    zero-sharded path passes the all-gathered full projectors here
+    (``zero_gather_projectors``) since local state only holds a row slice.
     """
+    if projectors is None:
+        projectors = [bst.projector for bst in bucket_states]
     return tuple(
-        update_ops.bucketed_project(_gather(bucket, flat_grads),
-                                    bst.projector)
-        for bucket, bst in zip(plan.buckets, bucket_states)
+        update_ops.bucketed_project(_gather(bucket, flat_grads), proj)
+        for bucket, proj in zip(plan.buckets, projectors)
     )
 
 
@@ -532,7 +743,9 @@ def bucketed_update(
     apply: bool,
     track_norm: bool = True,
     stacked_grads: Optional[Sequence[jax.Array]] = None,
-) -> Tuple[Dict[int, jax.Array], Tuple[BucketState, ...], List[jax.Array]]:
+    stacked_params: Optional[Sequence[jax.Array]] = None,
+    out_stacked: bool = False,
+) -> Tuple[Any, Tuple[BucketState, ...], List[jax.Array]]:
     """Run every bucket against its *storage-layout* state.
 
     Returns ``({leaf_idx: new_param_or_update}, new_bucket_states,
@@ -551,15 +764,25 @@ def bucketed_update(
     ``apply=False`` returns the additive update W' - W.  ``track_norm``
     gates the ``aux.update_norm`` W' - W read pass
     (OptimizerConfig.track_update_norm).
+
+    The ZeRO-sharded hot path (DESIGN.md §2.10) hands shard-local row
+    blocks of every operand -- ``stacked_grads`` AND ``stacked_params``
+    (pre-sliced W stacks) -- and sets ``out_stacked=True`` to get the W'
+    stacks back unscattered (one per bucket, for the caller's all-gather)
+    instead of the per-leaf dict.  Every fused inner is row-independent
+    along the leading dim, so local slices go through the identical
+    kernels.
     """
     lr_alpha = lr * cfg.alpha
     lr_wd = lr * cfg.weight_decay if cfg.weight_decay else 0.0
     ik = cfg.inner_kwargs()
     out_leaves: Dict[int, jax.Array] = {}
+    out_stacks: List[jax.Array] = []
     new_states: List[BucketState] = []
     norm_sq: List[jax.Array] = []
     for bi, (bucket, bst) in enumerate(zip(plan.buckets, bucket_states)):
-        w = _gather(bucket, flat_params)
+        w = (stacked_params[bi] if stacked_params is not None
+             else _gather(bucket, flat_params))
         p = bst.projector
         if projected:
             r_g = (stacked_grads[bi] if stacked_grads is not None
@@ -596,9 +819,12 @@ def bucketed_update(
         if track_norm:
             delta = (w_new - w) if apply else out
             norm_sq.append(jnp.sum(jnp.square(delta.astype(jnp.float32))))
-        out_leaves.update(_scatter(bucket, out, flat_params))
+        if out_stacked:
+            out_stacks.append(out)
+        else:
+            out_leaves.update(_scatter(bucket, out, flat_params))
         new_states.append(new_bst)
-    return out_leaves, tuple(new_states), norm_sq
+    return (out_stacks if out_stacked else out_leaves), tuple(new_states), norm_sq
 
 
 # ---------------------------------------------------------------------------
@@ -906,34 +1132,54 @@ def modeled_hbm_bytes(
     return total
 
 
-def modeled_state_bytes(plan: BucketPlan, inner: str = "adam") -> Dict[str, float]:
+def modeled_state_bytes(
+    plan: BucketPlan, inner: str = "adam", shards: int = 1
+) -> Dict[str, float]:
     """Modeled RESIDENT optimizer-state bytes of the bucketed leaves (the
     paper's Table-1 memory claim, per storage layout §2.5/§2.8): projector
     stacks (f32) + moment buffers.  ``moment_bytes_per_param`` is the
     moment cost per low-rank R-space element -- 8.0 for adam (two f32
-    moments), ~2.0 for adam8bit (two uint8 code planes + scales)."""
+    moments), ~2.0 for adam8bit (two uint8 code planes + scales).
+
+    ``shards > 1`` additionally models the zero-sharded layout
+    (§2.10): ``padded_total`` is the global padded footprint and
+    ``per_device`` what one DP replica actually holds
+    (``padded_total / shards`` -- the ZeRO memory win, ~``1/shards`` of
+    ``total`` up to row padding)."""
     projectors = 0
     moments = 0
     n_elems = 0
+    per_device = 0
+    padded_total = 0
     for bk in plan.buckets:
         B, d, n, r = bk.batch, bk.d, bk.n, bk.rank
-        projectors += B * d * r * 4
-        n_elems += B * r * n
+        row_proj = d * r * 4
         if inner == "msgd":
-            moments += B * r * n * 4
+            row_mom = r * n * 4
         elif inner == "adam_mini":
             rows = r if bk.side != "right" else n
-            moments += B * r * n * 4 + B * rows * 4
+            row_mom = r * n * 4 + rows * 4
         elif inner == "adam8bit":
             rows, rowlen = (r, n) if bk.side != "right" else (n, r)
-            moments += 2 * B * r * n + 2 * B * rows * qz.num_blocks(rowlen) * 4
+            row_mom = 2 * r * n + 2 * rows * qz.num_blocks(rowlen) * 4
         else:
-            moments += 2 * B * r * n * 4
+            row_mom = 2 * r * n * 4
+        # NB: adam_mini's per-row v and adam8bit's scales are per STACK row
+        # along B, so per-row bytes are exact for both layouts.
+        projectors += B * row_proj
+        moments += B * row_mom
+        n_elems += B * r * n
+        bp = zero_padded_batch(B, shards)
+        padded_total += bp * (row_proj + row_mom)
+        per_device += (bp // shards) * (row_proj + row_mom)
     return {
         "total": float(projectors + moments),
         "projectors": float(projectors),
         "moments": float(moments),
         "moment_bytes_per_param": moments / max(n_elems, 1),
+        "shards": float(shards),
+        "padded_total": float(padded_total),
+        "per_device": float(per_device),
     }
 
 
@@ -1111,11 +1357,15 @@ def modeled_refresh_hbm_bytes(
 def dp_comm_model(
     plan: BucketPlan,
     flat_params: Sequence,
+    *,
+    axis_sizes: Optional[Dict[str, int]] = None,
+    state_shards: int = 1,
+    inner: str = "adam",
 ) -> Dict[str, Any]:
     """Modeled per-replica DP gradient-reduction payload per step.
 
-    Three schedules (bytes = per-replica all-reduce operand bytes,
-    collectives = reduction operands dispatched before XLA combining):
+    Schedules (bytes = per-replica collective operand bytes, collectives =
+    reduction operands dispatched before XLA combining):
 
     * ``standard``            -- every gradient leaf reduces full-rank,
       one operand per leaf (what SPMD inserts for the uncompressed step);
@@ -1124,11 +1374,29 @@ def dp_comm_model(
       full-rank leaves unchanged.  The low-rank payload shrinks by exactly
       d/r per bucket;
     * ``compressed_refresh``  -- low-rank leaves reduce full-rank but
-      stacked: same bytes as standard, one operand per bucket.
+      stacked: same bytes as standard, one operand per bucket;
+    * ``zero_hot``            -- ``state_sharding="zero"`` hot step
+      (``state_shards > 1``): R-space stacks reduce-scatter (padded rows),
+      plus the per-step all-gathers the sharded state forces -- full
+      projector stacks before projection and the updated W' row slices
+      after the local update.  ``reduce_scatter_bytes`` /
+      ``all_gather_bytes`` break the total down;
+    * ``zero_refresh``        -- refresh under zero sharding: full stacks
+      all-reduce (as ``compressed_refresh``) plus the one-shot all-gather
+      of every padded state stack so the batched refresh can run on full
+      buckets (amortized over ``tau`` steps).
 
     Full-rank grads count at their param dtype; R-space stacks are f32
-    (what ``bucketed_project`` emits).  Recorded by ``launch/dryrun.py``
-    and regression-gated via ``benchmarks/kernels_micro``'s
+    (what ``bucketed_project`` emits).  With ``axis_sizes`` (e.g.
+    ``{"pod": 2, "data": 16}``) every schedule gains a ``per_axis``
+    decomposition of a hierarchical reduction: ``intra_pod_bytes`` is the
+    operand processed on intra-pod links (reduce-scatter + all-gather
+    stage), ``inter_pod_bytes`` the already-scattered shard crossing the
+    pod boundary (``payload / data``).  The ``pod`` compressed mode
+    (train/step ``compressed="pod"``) is the hierarchy where intra-pod
+    stays full-rank and only the compressed stacks cross pods -- reported
+    as top-level ``pod_mode_hot``.  Recorded by ``launch/dryrun.py`` and
+    regression-gated via ``benchmarks/kernels_micro``'s
     ``dp_compression_bench``.
     """
     rest_bytes = 0
@@ -1141,7 +1409,11 @@ def dp_comm_model(
     lowrank_full = 0
     lowrank_rspace = 0
     n_lowrank_leaves = 0
+    rs_rspace_pad = 0  # padded R-space reduce-scatter payload
+    ag_proj = 0  # full projector-stack all-gather
+    ag_w = 0  # updated W' row-slice all-gather
     for bk in plan.buckets:
+        dt = jnp.dtype(flat_params[bk.entries[0].leaf_idx].dtype).itemsize
         for e in bk.entries:
             leaf = flat_params[e.leaf_idx]
             lowrank_full += (
@@ -1150,7 +1422,14 @@ def dp_comm_model(
             )
             n_lowrank_leaves += 1
         lowrank_rspace += bk.batch * bk.rank * bk.n * 4
-    return {
+        bp = zero_padded_batch(bk.batch, max(state_shards, 1))
+        rs_rspace_pad += bp * bk.rank * bk.n * 4
+        ag_proj += bp * bk.d * bk.rank * 4
+        ag_w += bp * bk.d * bk.n * dt
+    state_gather = modeled_state_bytes(
+        plan, inner=inner, shards=max(state_shards, 1)
+    )["padded_total"]
+    out: Dict[str, Any] = {
         "standard": {
             "bytes": rest_bytes + lowrank_full,
             "collectives": n_rest + n_lowrank_leaves,
@@ -1169,3 +1448,43 @@ def dp_comm_model(
             lowrank_full / lowrank_rspace if lowrank_rspace else 1.0
         ),
     }
+    if state_shards > 1:
+        out["zero_hot"] = {
+            "bytes": rest_bytes + rs_rspace_pad + ag_proj + ag_w,
+            "collectives": n_rest + 3 * len(plan.buckets),
+            "reduce_scatter_bytes": rs_rspace_pad,
+            "all_gather_bytes": ag_proj + ag_w,
+        }
+        stacks_per_bucket = 2 + (inner != "msgd") + 2 * (inner == "adam8bit")
+        out["zero_refresh"] = {
+            "bytes": rest_bytes + lowrank_full + int(state_gather),
+            "collectives": n_rest
+            + len(plan.buckets) * (1 + stacks_per_bucket),
+            "state_gather_bytes": int(state_gather),
+        }
+        out["modeled_state_bytes_per_device"] = modeled_state_bytes(
+            plan, inner=inner, shards=state_shards
+        )["per_device"]
+    if axis_sizes:
+        data_n = int(axis_sizes.get("data", 1))
+        pod_n = int(axis_sizes.get("pod", 1))
+        for key in ("standard", "compressed_hot", "compressed_refresh",
+                    "zero_hot", "zero_refresh"):
+            if key not in out:
+                continue
+            payload = out[key]["bytes"]
+            out[key]["per_axis"] = {
+                "intra_pod_bytes": payload if data_n > 1 else 0,
+                "inter_pod_bytes": (
+                    payload // data_n if pod_n > 1 else 0
+                ),
+            }
+        # compressed="pod": the data axis reduces full-rank per-leaf (plain
+        # SPMD inside the pod); only the compressed stacks cross pods.
+        out["pod_mode_hot"] = {
+            "intra_pod_bytes": out["standard"]["bytes"] if data_n > 1 else 0,
+            "inter_pod_bytes": (
+                out["compressed_hot"]["bytes"] if pod_n > 1 else 0
+            ),
+        }
+    return out

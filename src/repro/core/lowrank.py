@@ -131,6 +131,15 @@ class OptimizerConfig:
     # aux.update_norm costs an extra W' - W read pass in apply mode; gate
     # it off for pure-throughput runs (benchmarks run with False).
     track_update_norm: bool = True
+    # ZeRO-style optimizer-state sharding (DESIGN.md §2.10): "" keeps every
+    # replica holding the full bucket stacks; "zero" pads each stack's
+    # leading B dim to a multiple of state_shards (inert zero rows) so one
+    # DP replica owns a contiguous row block of every buffer -- per-device
+    # state drops by ~state_shards.  Requires bucket-native state (a fused
+    # inner, no Fira).  state_shards must equal the DP replica count of the
+    # mesh the train step runs on (train/step.py validates).
+    state_sharding: str = ""  # "" | "zero"
+    state_shards: int = 1
     min_dim: int = 16  # leaves with min(m,n) < this stay full-rank
     exclude: Tuple[str, ...] = DEFAULT_EXCLUDE
     seed: int = 0
@@ -320,6 +329,10 @@ def make_lowrank_optimizer(
         raise ValueError(f"unknown momentum_carry {cfg.momentum_carry!r}")
     if cfg.engine not in ("reference", "bucketed"):
         raise ValueError(f"unknown engine {cfg.engine!r}")
+    if cfg.state_sharding not in ("", "zero"):
+        raise ValueError(f"unknown state_sharding {cfg.state_sharding!r}")
+    if cfg.state_sharding == "zero" and cfg.state_shards < 1:
+        raise ValueError(f"state_shards must be >= 1, got {cfg.state_shards}")
     specs = build_specs(params_like, cfg, lowrank_filter)
     inner = cfg.make_inner()
     pcfg = cfg.projector_config()
@@ -349,7 +362,16 @@ def make_lowrank_optimizer(
                 bucket_plan, flat_specs_static,
                 spec_treedef.flatten_up_to(params_like),
                 inner_name=cfg.inner, projector_dtype=cfg.projector_dtype,
+                shards=(cfg.state_shards
+                        if cfg.state_sharding == "zero" else 1),
             )
+    if cfg.state_sharding == "zero" and state_layout is None:
+        raise ValueError(
+            "state_sharding='zero' shards the bucket stacks, so it needs "
+            "bucket-native state: engine='bucketed' with a fused inner "
+            "(adam/msgd/adam8bit/adam_mini), no Fira, and at least one "
+            "bucketed leaf"
+        )
     # Static leaf indices NOT covered by any bucket -- the ``rest`` order
     # of ``StackedGrads`` (full-rank leaves; with a bucket-native layout
     # every low-rank leaf is bucketed).
@@ -449,8 +471,24 @@ def make_lowrank_optimizer(
         projected: bool = False,
         apply: bool = False,
         skip_nonfinite: bool = False,
+        shard_axes: Optional[Tuple[str, ...]] = None,
     ) -> Tuple[PyTree, LowRankOptState, AuxInfo]:
         """Returns (updates, new_state, aux); apply via params + updates.
+
+        ``shard_axes`` (zero-sharded optimizers only, inside shard_map):
+        the mesh axis names the bucket state is sharded over.  Hot steps
+        then consume SHARD-LOCAL row blocks -- ``state.buckets`` hold the
+        local slices and ``grads.buckets`` the reduce-scattered local
+        R-space slices -- run the fused kernels on ``B_pad/shards`` rows,
+        and all-gather only the updated W' row slices back to full
+        parameters.  Refresh steps all-gather the state once and run the
+        replicated batched refresh bit-identically (amortized over
+        ``tau``).  The skip-step gate psums ONE scalar verdict across
+        shards so every replica skips (or applies) in lockstep -- a shard
+        whose local rows are clean must not apply while another skips.
+        Without ``shard_axes`` a zero-sharded optimizer computes on the
+        full padded stacks (the replicated representation every
+        single-process path sees).
 
         ``skip_nonfinite=True`` (the recovery skip-step gate, DESIGN.md
         §2.9): compute ONE fused all-finite reduction per bucket gradient
@@ -508,6 +546,38 @@ def make_lowrank_optimizer(
                     f"{len(rest_indices)} rest leaves, got "
                     f"{len(grads.buckets)} + {len(grads.rest)}"
                 )
+        zero_layout = state_layout is not None and state_layout.shards > 1
+        shard_local = zero_layout and shard_axes is not None
+        if shard_axes is not None and not zero_layout:
+            raise ValueError(
+                "shard_axes is only meaningful for a zero-sharded "
+                "optimizer (state_sharding='zero', state_shards > 1)"
+            )
+        if shard_local and not stacked_in:
+            raise ValueError(
+                "shard-local updates take StackedGrads (the reduce-"
+                "scattered hot payload or full refresh stacks)"
+            )
+        shard_index = None
+        if zero_layout and not shard_local:
+            # replicated representation: compute on the unpadded stacks,
+            # repad at exit (pad rows stay zero by construction).
+            state = state._replace(buckets=buckets_lib.zero_unpad_states(
+                state_layout, state.buckets
+            ))
+        if shard_local:
+            shard_index = buckets_lib.zero_shard_index(shard_axes)
+            if refresh:
+                # gather-once refresh: reassemble the full padded stacks,
+                # unpad, and fall through to the replicated batched
+                # refresh + update (bit-identical to the unsharded
+                # schedule); the result is re-sliced local at exit.
+                full = buckets_lib.zero_gather_states(
+                    state.buckets, shard_axes
+                )
+                state = state._replace(
+                    buckets=buckets_lib.zero_unpad_states(state_layout, full)
+                )
         step = state.step + 1  # 1-indexed for bias correction
         lr = _lr_at(state.step)
 
@@ -538,8 +608,30 @@ def make_lowrank_optimizer(
             finite_ok = checks[0] if checks else jnp.asarray(True)
             for c in checks[1:]:
                 finite_ok = jnp.logical_and(finite_ok, c)
+            if shard_local:
+                # ONE fused scalar psum of the verdict: local checks only
+                # cover this shard's rows of the scattered stacks, and all
+                # shards must agree on skip-vs-apply or state diverges.
+                bad = jax.lax.psum(
+                    1.0 - finite_ok.astype(jnp.float32), tuple(shard_axes)
+                )
+                finite_ok = bad == 0.0
 
-        gnorm = _global_norm(grads)
+        if shard_local and not refresh:
+            # grads.buckets are disjoint local row blocks: the global norm
+            # is psum(local sq) + the replicated rest (pad rows are zero).
+            bsq = sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32)))
+                for x in grads.buckets
+            )
+            bsq = jax.lax.psum(bsq, tuple(shard_axes))
+            rsq = sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in grads.rest
+            )
+            gnorm = jnp.sqrt(bsq + rsq)
+        else:
+            gnorm = _global_norm(grads)
         if cfg.grad_clip_norm and cfg.grad_clip_norm > 0:
             scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-12))
             grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
@@ -608,14 +700,38 @@ def make_lowrank_optimizer(
                     )
                 )
                 overlaps.extend(bucket_overlaps)
-            fused, new_bucket_states, bucket_norm_sq = (
-                buckets_lib.bucketed_update(
-                    bucket_plan, cfg, new_bucket_states, flat_grads,
-                    flat_params, step, lr, projected=projected, apply=apply,
-                    track_norm=cfg.track_update_norm,
-                    stacked_grads=stacked_grads,
+            if shard_local and not refresh:
+                # ZeRO hot step: slice this shard's W rows, run the fused
+                # kernels on local row blocks only, then all-gather just
+                # the updated W' slices (the only full-copy the step
+                # needs) and scatter them back to the parameter leaves.
+                local_w = buckets_lib.zero_local_param_stacks(
+                    state_layout, flat_params, shard_index
                 )
-            )
+                out_stacks, new_bucket_states, bucket_norm_sq = (
+                    buckets_lib.bucketed_update(
+                        bucket_plan, cfg, new_bucket_states, flat_grads,
+                        flat_params, step, lr, projected=projected,
+                        apply=apply, track_norm=cfg.track_update_norm,
+                        stacked_grads=stacked_grads,
+                        stacked_params=local_w, out_stacked=True,
+                    )
+                )
+                full_stacks = buckets_lib.zero_gather_stacks(
+                    state_layout, out_stacks, shard_axes
+                )
+                fused = buckets_lib.zero_scatter_outputs(
+                    bucket_plan, full_stacks, flat_params
+                )
+            else:
+                fused, new_bucket_states, bucket_norm_sq = (
+                    buckets_lib.bucketed_update(
+                        bucket_plan, cfg, new_bucket_states, flat_grads,
+                        flat_params, step, lr, projected=projected,
+                        apply=apply, track_norm=cfg.track_update_norm,
+                        stacked_grads=stacked_grads,
+                    )
+                )
 
         flat_out = []  # updates, or new params for fused leaves when apply
         flat_norm_sq = []  # per-leaf squared update norms (aux)
@@ -684,7 +800,11 @@ def make_lowrank_optimizer(
         new_leaves = jax.tree_util.tree_unflatten(spec_treedef, flat_new_states)
 
         if cfg.track_update_norm:
-            unorm = jnp.sqrt(sum(flat_norm_sq) + sum(bucket_norm_sq))
+            bucket_sq = sum(bucket_norm_sq)
+            if shard_local and not refresh:
+                # local row blocks are disjoint -- one scalar psum
+                bucket_sq = jax.lax.psum(bucket_sq, tuple(shard_axes))
+            unorm = jnp.sqrt(sum(flat_norm_sq) + bucket_sq)
         else:
             unorm = jnp.zeros(())
         mean_overlap = (
@@ -713,6 +833,28 @@ def make_lowrank_optimizer(
                 )
             new_state = jax.tree_util.tree_map(_keep, new_state, state)
             skipped = 1.0 - ok.astype(jnp.float32)
+        if zero_layout:
+            # Restore the zero-sharded representation (gating above ran on
+            # the layout `state` itself used, so shapes always matched):
+            # replicated callers get the padded full stacks back, a
+            # shard-local refresh re-slices its local rows out of the full
+            # result; shard-local hot steps already hold local rows.
+            if not shard_local:
+                new_state = new_state._replace(
+                    buckets=buckets_lib.zero_pad_states(
+                        state_layout, new_state.buckets
+                    )
+                )
+            elif refresh:
+                new_state = new_state._replace(
+                    buckets=buckets_lib.zero_local_states(
+                        state_layout,
+                        buckets_lib.zero_pad_states(
+                            state_layout, new_state.buckets
+                        ),
+                        shard_index,
+                    )
+                )
         aux = AuxInfo(
             grad_norm=gnorm, update_norm=unorm,
             mean_refresh_overlap=mean_overlap, skipped=skipped,
@@ -784,7 +926,10 @@ def _require_bucket_native(optimizer: "LowRankOptimizer", what: str):
 
 
 def project_grads_stacked(
-    optimizer: "LowRankOptimizer", grads: PyTree, state: LowRankOptState
+    optimizer: "LowRankOptimizer",
+    grads: PyTree,
+    state: LowRankOptState,
+    shard_axes: Optional[Tuple[str, ...]] = None,
 ) -> StackedGrads:
     """Bucket-native project-then-reduce payload: one batched ``P^T G``
     per bucket, producing f32 ``(B, r, n)`` R-space stacks straight from
@@ -804,8 +949,28 @@ def project_grads_stacked(
             "convert with storage_opt_state(optimizer, state)"
         )
     flat_grads, rest = _flatten_for_buckets(optimizer, grads)
+    layout = optimizer.state_layout
+    bucket_states = state.buckets
+    projectors = None
+    if layout.shards > 1:
+        if shard_axes is not None:
+            # shard-local state: every replica must project ALL B rows of
+            # its local gradient before the reduce-scatter, so the full
+            # projector stacks are all-gathered (the ZeRO per-step price,
+            # modeled in dp_comm_model's zero_hot schedule).
+            projectors = buckets_lib.zero_gather_projectors(
+                layout, bucket_states, shard_axes
+            )
+        else:
+            # replicated padded representation: drop the inert pad rows
+            projectors = [
+                bst.projector
+                for bst in buckets_lib.zero_unpad_states(
+                    layout, bucket_states
+                )
+            ]
     stacks = buckets_lib.bucketed_project_grads(
-        optimizer.state_layout.plan, state.buckets, flat_grads
+        layout.plan, bucket_states, flat_grads, projectors=projectors
     )
     return StackedGrads(buckets=stacks, rest=rest)
 
@@ -845,7 +1010,12 @@ def canonical_opt_state(
     layout = optimizer.state_layout
     if layout is None or not state.buckets:
         return state
-    per_leaf = buckets_lib.bucketed_to_leaf_states(layout, state.buckets)
+    # zero-sharded layouts store padded stacks; the canonical layout drops
+    # the inert pad rows first, so checkpoints are identical across
+    # state_shards settings (resume is bit-identical and cross-engine).
+    per_leaf = buckets_lib.bucketed_to_leaf_states(
+        layout, buckets_lib.zero_unpad_states(layout, state.buckets)
+    )
     is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
     _, treedef = jax.tree_util.tree_flatten(optimizer.specs, is_leaf=is_spec)
     flat_states = treedef.flatten_up_to(state.leaves)
@@ -877,7 +1047,9 @@ def storage_opt_state(
     is_spec = lambda x: isinstance(x, LeafSpec)  # noqa: E731
     _, treedef = jax.tree_util.tree_flatten(optimizer.specs, is_leaf=is_spec)
     flat_states = treedef.flatten_up_to(state.leaves)
-    bucket_states = buckets_lib.leaf_states_to_bucketed(layout, flat_states)
+    bucket_states = buckets_lib.zero_pad_states(
+        layout, buckets_lib.leaf_states_to_bucketed(layout, flat_states)
+    )
     out = [
         _placeholder_leaf() if i in layout.plan.bucketed else st
         for i, st in enumerate(flat_states)

@@ -1,7 +1,11 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init).  Everything below is ordinary.
+if __name__ == "__main__":
+    # Must run before any jax import (jax locks the device count at first
+    # init) and only when executed as a script: importing this module for
+    # its helpers must not clobber the caller's XLA_FLAGS.  The preset
+    # appends to pre-existing flags; it never overwrites them.
+    from repro.launch.runtime import apply_runtime_preset
+
+    apply_runtime_preset("dryrun")
 
 _DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -22,6 +26,7 @@ Usage:
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -81,11 +86,25 @@ def _build_cell(arch: str, shape_name: str, args, mesh=None):
 
     if shape.kind == "train":
         rank = args.rank or min(512, max(128, cfg.d_model // 4))
+        zero_kw = {}
+        if getattr(args, "state_sharding", "") == "zero" and mesh is not None:
+            # shard count = DP replica count of the axes the compressed
+            # schedule reduces over (all batch axes flat, or just 'pod')
+            from repro.launch.mesh import axes_size, batch_axes
+
+            dp = (("pod",) if getattr(args, "compressed_dp", "") == "pod"
+                  else batch_axes(mesh))
+            # zero shards the bucket stacks, so it implies the
+            # bucket-native engine
+            zero_kw = dict(state_sharding="zero",
+                           state_shards=axes_size(mesh, dp),
+                           engine="bucketed")
         opt = make_optimizer(
             args.optimizer, params_shape,
             rank=rank, tau=200, lr=0.01,
             svd_backend="randomized",
             refresh_groups=args.refresh_groups,
+            **zero_kw,
         )
         opt_state_shape = jax.eval_shape(opt.init, params_shape)
         state_shape = TrainState(params_shape, opt_state_shape)
@@ -114,11 +133,13 @@ def _build_cell(arch: str, shape_name: str, args, mesh=None):
     return out
 
 
-def _dp_comm_model(cell) -> dict:
+def _dp_comm_model(cell, mesh=None) -> dict:
     """Modeled per-replica DP gradient-reduction bytes/collectives for the
-    three reduction schedules of this train cell's optimizer (the
-    bucket plan is rebuilt for accounting when the optimizer runs the
-    reference engine)."""
+    reduction schedules of this train cell's optimizer (the bucket plan is
+    rebuilt for accounting when the optimizer runs the reference engine).
+    With a mesh, the per-axis split (intra-pod vs inter-pod operand bytes)
+    and -- for a zero-sharded layout -- the reduce-scatter/all-gather
+    schedule and per-device state bytes are included."""
     from repro.core import buckets as buckets_lib
 
     opt = cell["opt"]
@@ -130,7 +151,16 @@ def _dp_comm_model(cell) -> dict:
     plan = opt.bucket_plan or buckets_lib.build_bucket_plan(
         flat_specs, flat_params
     )
-    return buckets_lib.dp_comm_model(plan, flat_params)
+    axis_sizes = None
+    if mesh is not None:
+        axis_sizes = {a: int(mesh.shape[a]) for a in ("pod", "data")
+                      if a in mesh.axis_names}
+    shards = (opt.state_layout.shards
+              if opt.state_layout is not None else 1)
+    return buckets_lib.dp_comm_model(
+        plan, flat_params, axis_sizes=axis_sizes,
+        state_shards=shards, inner=opt.config.inner,
+    )
 
 
 def _compile_cell(cell, mesh, args):
@@ -143,7 +173,14 @@ def _compile_cell(cell, mesh, args):
         cell["batch_specs"],
     )
     if shape.kind == "train":
-        state_sh = shd.tree_shardings(cell["state_shape"], mesh)
+        if getattr(args, "state_sharding", "") == "zero":
+            from repro.launch.mesh import batch_axes
+
+            dp = (("pod",) if getattr(args, "compressed_dp", "") == "pod"
+                  else batch_axes(mesh))
+            state_sh = shd.zero_tree_shardings(cell["state_shape"], mesh, dp)
+        else:
+            state_sh = shd.tree_shardings(cell["state_shape"], mesh)
         jitted = jax.jit(
             cell["step_fn"], in_shardings=(state_sh, batch_sh),
             donate_argnums=(0,),
@@ -236,8 +273,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, args) -> dict:
     # three schedules (standard / compressed hot / compressed refresh).
     dp_comm = None
     if shape.kind == "train":
-        dp_comm = _dp_comm_model(cell)
+        dp_comm = _dp_comm_model(cell, mesh)
         dp_comm["requested_mode"] = getattr(args, "compressed_dp", "") or ""
+        dp_comm["state_sharding"] = getattr(args, "state_sharding", "") or ""
     report = ra.analyze(
         compiled,
         arch=arch, shape=shape_name, mesh_name=mesh_name, n_chips=n_chips,
@@ -323,6 +361,11 @@ def main(argv=None) -> int:
                         help="project-then-reduce gradient compression: "
                              "'flat' = all DP axes manual; 'pod' = only the "
                              "inter-pod axis (hierarchical; FSDP stays auto)")
+    parser.add_argument("--state-sharding", default="",
+                        choices=["", "zero"],
+                        help="'zero' = ZeRO-shard the bucket optimizer "
+                             "state over the DP axes (shard count is "
+                             "derived from the mesh; DESIGN.md §2.10)")
     parser.add_argument("--ssm-chunk", type=int, default=0,
                         help="SSD chunk length override")
     parser.add_argument("--microbatch", type=int, default=0,

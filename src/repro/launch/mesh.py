@@ -35,6 +35,15 @@ def batch_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def axes_size(mesh, axes: Tuple[str, ...]) -> int:
+    """Product of the mesh extents of ``axes`` (= DP replica count for the
+    batch axes; = shard count for the ZeRO state layout)."""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names):
     """``jax.shard_map`` across jax generations.
 

@@ -181,3 +181,45 @@ def cache_shardings(cache: PyTree, mesh: Mesh) -> PyTree:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-sharded optimizer state (DESIGN.md §2.10)
+# ---------------------------------------------------------------------------
+
+
+def zero_state_specs(state: PyTree, dp_axes: Tuple[str, ...]) -> PyTree:
+    """PartitionSpec tree for a TrainState with ``state_sharding='zero'``.
+
+    Everything is replicated except the bucket-state stacks, whose leading
+    (padded) ``B`` dim is partitioned over the DP axes -- the stacks are
+    padded to a multiple of the shard count at init (``core/buckets.
+    zero_pad_states``), so the split is always even.  Built structurally
+    (``_replace`` on the NamedTuples) so this stays agnostic to which
+    moment fields the inner uses.
+    """
+    stack = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+    repl = jax.tree_util.tree_map(lambda _: P(), state)
+    buckets = jax.tree_util.tree_map(
+        lambda _: stack, repl.opt_state.buckets
+    )
+    return repl._replace(
+        opt_state=repl.opt_state._replace(buckets=buckets)
+    )
+
+
+def zero_tree_shardings(
+    state: PyTree, mesh: Mesh, dp_axes: Tuple[str, ...]
+) -> PyTree:
+    """NamedSharding tree for the ZeRO layout: name-based rules everywhere
+    except the bucket stacks, which shard dim 0 over the DP axes (so the
+    standard jit path and checkpoint restore place each device's slice of
+    the moments/codes/projectors without a replicated staging copy)."""
+    specs = zero_state_specs(state, dp_axes)
+    base = tree_shardings(state, mesh)
+    buckets = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), specs.opt_state.buckets
+    )
+    return base._replace(
+        opt_state=base.opt_state._replace(buckets=buckets)
+    )

@@ -42,9 +42,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import TrainConfig
+from repro.core import buckets as buckets_lib
 from repro.core import lowrank as lowrank_lib
 from repro.launch import sharding as shd
-from repro.launch.mesh import batch_axes, shard_map_compat
+from repro.launch.mesh import axes_size, batch_axes, shard_map_compat
 from repro.models.model_zoo import Model
 from repro.train.state import TrainState
 
@@ -143,6 +144,46 @@ def _scale_grads(grads, gscale):
     )
 
 
+def _largest_first(stacks):
+    """Dispatch order for the per-bucket collectives: biggest payload
+    first, so the longest-latency reduction is issued earliest and (under
+    the latency-hiding scheduler, ``launch/runtime.py`` preset
+    ``"overlap"``) has the most remaining compute to hide behind."""
+    return sorted(range(len(stacks)), key=lambda i: (-stacks[i].size, i))
+
+
+def _pmean_stacked(sg, dp):
+    """Per-bucket DP mean of a ``StackedGrads``: one INDEPENDENT pmean per
+    bucket stack, issued largest-first, plus one per full-rank leaf --
+    instead of a single tuple psum over the whole structure.  Numerics are
+    identical (psum is elementwise per operand); the win is schedule
+    freedom: each collective carries its own dependency edge, so the async
+    collective pass can start a bucket's reduction the moment that stack
+    is ready rather than barriering every bucket at step end."""
+    buckets = list(sg.buckets)
+    for i in _largest_first(buckets):
+        buckets[i] = jax.lax.pmean(buckets[i], dp)
+    rest = tuple(jax.lax.pmean(r, dp) for r in sg.rest)
+    return sg._replace(buckets=tuple(buckets), rest=rest)
+
+
+def _reduce_scatter_stacked(sg, dp, nrep, layout):
+    """ZeRO hot-path reduction: pad each bucket's R-space stack to the
+    shardable batch, reduce-scatter its leading dim over the DP axes
+    (largest-first), and mean the full-rank leaves.  Each replica ends up
+    holding exactly the ``(B_pad/shards, r, n)`` slice its shard-local
+    fused update consumes -- ~1/shards of the all-reduce bytes on the
+    wire.  Dividing by a python-float replica count matches pmean's
+    psum-then-divide bit-for-bit (pmean lowers to ``div(psum(x), n)``)."""
+    padded = list(buckets_lib.zero_pad_grad_stacks(layout, sg.buckets))
+    for i in _largest_first(padded):
+        padded[i] = jax.lax.psum_scatter(
+            padded[i], dp, scatter_dimension=0, tiled=True
+        ) / nrep
+    rest = tuple(jax.lax.pmean(r, dp) for r in sg.rest)
+    return sg._replace(buckets=tuple(padded), rest=rest)
+
+
 def make_train_step(
     model: Model,
     optimizer: lowrank_lib.LowRankOptimizer,
@@ -186,6 +227,25 @@ def make_train_step(
             "'pod' compression needs a pod axis; mesh has "
             f"{mesh.axis_names}"
         )
+    # ZeRO-sharded optimizer state (DESIGN.md §2.10): the shard count is
+    # baked into the padded stacks at init, so it must equal the DP
+    # replica count of the mesh the compressed step lowers on.
+    zero = (optimizer.state_layout is not None
+            and optimizer.state_layout.shards > 1)
+    if zero and compressed:
+        dp_axes = ("pod",) if compressed == "pod" else batch_axes(mesh)
+        n = axes_size(mesh, dp_axes)
+        if optimizer.config.state_shards != n:
+            raise ValueError(
+                f"state_sharding='zero' built with state_shards="
+                f"{optimizer.config.state_shards}, but compressed="
+                f"{compressed!r} lowers over DP axes {dp_axes} of total "
+                f"size {n}; the shard count must equal the DP replica "
+                "count"
+            )
+    # (the standard jit path is fine with any shard count: the update
+    # unpads the replicated padded stacks at entry, so XLA SPMD handles
+    # whatever placement shard_train_state chose)
     micro = train_cfg.microbatch if train_cfg else 0
     accum_dtype = getattr(train_cfg, "accum_dtype", jnp.float32) or jnp.float32
     vg = _value_and_grad(model, micro, accum_dtype)
@@ -242,9 +302,17 @@ def make_train_step(
         # Bucket-native optimizers reduce in the stacked layout: ONE
         # contiguous buffer per bucket crosses the wire (plus the
         # full-rank leaves) instead of a ragged per-leaf tree -- fewer,
-        # larger collectives for both 'flat' and 'pod' modes.  The
-        # reference engine keeps the per-leaf project_grads path.
+        # larger collectives for both 'flat' and 'pod' modes, each
+        # dispatched as its own largest-first collective so the async
+        # scheduler can overlap them with compute.  The reference engine
+        # keeps the per-leaf project_grads path.
         stacked = optimizer.state_layout is not None
+        # ZeRO mode on top of that: bucket stacks enter/leave the manual
+        # region sharded over the DP axes (in/out specs below), the hot
+        # reduction is a reduce-scatter, and the fused update runs on the
+        # local rows only (core/lowrank.update(shard_axes=...)).
+        shard_axes = dp if zero else None
+        nrep = float(axes_size(mesh, dp))
 
         def shard_body(state, batch):
             batch, gscale = _split_grad_scale(batch)
@@ -255,32 +323,50 @@ def make_train_step(
                     # full-rank (B, d, n) stacks: same bytes as the leaf
                     # tree, one psum operand per bucket; the bucketed
                     # refresh engine consumes the reduced stacks directly.
-                    grads = lowrank_lib.stack_grads(optimizer, grads)
-                grads = jax.lax.pmean(grads, dp)
+                    # (ZeRO refresh keeps the full-stack reduction: the
+                    # update gathers its state once, refreshes replicated,
+                    # and re-slices -- amortized over tau hot steps.)
+                    grads = _pmean_stacked(
+                        lowrank_lib.stack_grads(optimizer, grads), dp
+                    )
+                else:
+                    grads = jax.lax.pmean(grads, dp)
                 params, opt_state, aux = optimizer.update(
                     grads, state.opt_state, state.params,
                     refresh=True, group=group, apply=True,
-                    skip_nonfinite=skip_nonfinite,
+                    skip_nonfinite=skip_nonfinite, shard_axes=shard_axes,
                 )
             else:
                 if stacked:
                     # batched P^T G per bucket: f32 (B, r, n) stacks, ~d/r
-                    # less DP traffic, straight from the projector buffers.
+                    # less DP traffic, straight from the projector buffers
+                    # (ZeRO: the projector stacks are all-gathered inside
+                    # project_grads_stacked -- every replica projects all
+                    # B rows, then keeps only its slice of the reduction).
                     rgrads = lowrank_lib.project_grads_stacked(
-                        optimizer, grads, state.opt_state
+                        optimizer, grads, state.opt_state,
+                        shard_axes=shard_axes,
                     )
+                    if zero:
+                        rgrads = _reduce_scatter_stacked(
+                            rgrads, dp, nrep, optimizer.state_layout
+                        )
+                    else:
+                        rgrads = _pmean_stacked(rgrads, dp)
                 else:
-                    rgrads = lowrank_lib.project_grads(
-                        optimizer, grads, state.opt_state
+                    rgrads = jax.lax.pmean(
+                        lowrank_lib.project_grads(
+                            optimizer, grads, state.opt_state
+                        ),
+                        dp,
                     )
-                rgrads = jax.lax.pmean(rgrads, dp)
                 # projected R-space grads feed the bucketed engine too: the
                 # per-bucket projection stage is skipped, only the fused
                 # moment+backproject+apply kernel runs.
                 params, opt_state, aux = optimizer.update(
                     rgrads, state.opt_state, state.params,
                     refresh=False, projected=True, apply=True,
-                    skip_nonfinite=skip_nonfinite,
+                    skip_nonfinite=skip_nonfinite, shard_axes=shard_axes,
                 )
             metrics = jax.lax.pmean(metrics, dp)
             out_metrics = {
@@ -291,15 +377,20 @@ def make_train_step(
             }
             if skip_nonfinite:
                 # post-pmean stacks are replica-identical, so the gate (and
-                # this flag) agree across the DP group
+                # this flag) agree across the DP group -- in ZeRO mode the
+                # update psums the per-shard verdict for the same reason.
                 out_metrics["skipped"] = aux.skipped
             return TrainState(params, opt_state), out_metrics
 
+        # ZeRO: bucket stacks are sharded over the DP axes on entry and
+        # exit; everything else (params, rest-of-state, metrics) is
+        # replicated exactly as before.
+        state_specs = shd.zero_state_specs(state, dp) if zero else P()
         return shard_map_compat(
             shard_body,
             mesh=mesh,
-            in_specs=(P(), batch_specs),
-            out_specs=(P(), P()),
+            in_specs=(state_specs, batch_specs),
+            out_specs=(state_specs, P()),
             axis_names=set(dp),
         )(state, batch)
 
@@ -331,12 +422,27 @@ def make_train_step(
     # launchers/benchmarks report what actually compiled, not the raw
     # legacy-bool kwarg.
     fns["compressed_mode"] = compressed
+    # '' (replicated) | 'zero' -- what the optimizer state layout carries;
+    # launchers use it to pick zero placements in shard_train_state.
+    fns["state_sharding"] = optimizer.config.state_sharding
     return fns
 
 
-def shard_train_state(state: TrainState, mesh) -> Tuple[TrainState, PyTree]:
-    """Device-put a train state according to the sharding rules."""
-    shardings = shd.tree_shardings(state, mesh)
+def shard_train_state(
+    state: TrainState, mesh, *, zero_dp_axes: Optional[Tuple[str, ...]] = None
+) -> Tuple[TrainState, PyTree]:
+    """Device-put a train state according to the sharding rules.
+
+    ``zero_dp_axes``: for a ``state_sharding='zero'`` optimizer, the DP
+    axes to partition each bucket stack's (padded) leading dim over --
+    each device then physically holds only its 1/shards slice of the
+    moments/codes/projectors (the ZeRO memory win outside the manual
+    region too).  Default keeps the name-based rules (stacks replicated).
+    """
+    if zero_dp_axes:
+        shardings = shd.zero_tree_shardings(state, mesh, zero_dp_axes)
+    else:
+        shardings = shd.tree_shardings(state, mesh)
     placed = jax.tree_util.tree_map(jax.device_put, state, shardings)
     return placed, shardings
 

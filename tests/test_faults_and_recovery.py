@@ -381,3 +381,101 @@ def test_resample_distinct_attempts_distinct_keys():
     k2 = recovery_lib.resample_opt_state(st, 2).key
     assert not np.array_equal(np.asarray(k1), np.asarray(k2))
     assert not np.array_equal(np.asarray(k1), np.asarray(st.key))
+
+
+def test_zero_sharded_skip_gate_lockstep():
+    """ISSUE 7: with state_sharding='zero' each shard's finite check sees
+    only its LOCAL rows of the reduced gradient stacks, so the gate psums
+    ONE scalar verdict across shards -- poisoning a single shard's rows
+    must make EVERY shard skip (state bit-unchanged everywhere), else the
+    sharded optimizer states diverge.  Runs in a subprocess on 8 fake
+    devices (the dry-run rule: only dryrun.py forces device counts)."""
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+    from repro.core.lowrank import StackedGrads, project_grads_stacked
+    from repro.launch.mesh import make_mesh, shard_map_compat
+    from repro.launch import sharding as shd
+    from repro.train.state import TrainState
+
+    key = jax.random.PRNGKey(0)
+    mat = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s) * 0.02
+    params = {
+        "q_proj": mat(0, (3, 32, 64)),
+        "k_proj": mat(1, (3, 32, 64)),
+        "o_single": mat(2, (32, 64)),
+        "up_proj": mat(3, (3, 32, 96)),
+        "down_proj": mat(4, (3, 96, 32)),
+    }
+    opt = make_optimizer("galore-sara-adam", params, rank=16, lr=1e-2,
+                         alpha=0.5, min_dim=8, engine="bucketed",
+                         state_sharding="zero", state_shards=4)
+    st = opt.init(params)
+    g0 = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.01, params)
+    _, st, _ = opt.update(g0, st, params, refresh=True, apply=True)
+
+    # padded (B_pad, r, n) R-space stacks, as the reduce-scatter produces
+    sg = project_grads_stacked(opt, g0, st)
+    padded = list(buckets_lib.zero_pad_grad_stacks(opt.state_layout,
+                                                   sg.buckets))
+    assert sg.rest == ()
+    rows = padded[0].shape[0] // 4  # rows owned by ONE shard
+    bad0 = padded[0].at[:rows].set(jnp.nan)  # poison shard 0 only
+    sg_bad = StackedGrads(buckets=(bad0,) + tuple(padded[1:]), rest=())
+    sg_ok = StackedGrads(buckets=tuple(padded), rest=())
+
+    mesh = make_mesh((4, 2))
+    state = TrainState(params, st)
+    sspec = shd.zero_state_specs(state, ("data",))
+    gspec = StackedGrads(
+        buckets=tuple(P("data") for _ in padded), rest=())
+
+    def body(state, sg):
+        p2, st2, aux = opt.update(
+            sg, state.opt_state, state.params, refresh=False,
+            projected=True, apply=True, skip_nonfinite=True,
+            shard_axes=("data",))
+        return TrainState(p2, st2), aux.skipped * jnp.ones((1,), jnp.float32)
+
+    with mesh:
+        run = shard_map_compat(body, mesh=mesh, in_specs=(sspec, gspec),
+                               out_specs=(sspec, P("data")),
+                               axis_names={"data"})
+        out_bad, skipped_bad = run(state, sg_bad)
+        out_ok, skipped_ok = run(state, sg_ok)
+
+    # every shard reports the skip, though only shard 0's rows are bad
+    np.testing.assert_array_equal(np.asarray(skipped_bad),
+                                  np.ones(4, np.float32))
+    # params and ALL sharded optimizer state pass through bit-unchanged
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(out_bad)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # control: clean grads apply on every shard
+    np.testing.assert_array_equal(np.asarray(skipped_ok),
+                                  np.zeros(4, np.float32))
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(state.params),
+        jax.tree_util.tree_leaves(out_ok.params)))
+    assert d > 0.0, d
+    print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=420, env=env,
+    )
+    assert out.returncode == 0, (
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    )
+    assert "OK" in out.stdout

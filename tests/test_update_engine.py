@@ -831,6 +831,112 @@ def test_stacked_refresh_bit_exact(backend):
     )
 
 
+# ---------------------------------------------------------------------------
+# ISSUE 7: ZeRO-sharded bucket state (replicated padded representation)
+# ---------------------------------------------------------------------------
+
+
+def test_zero_sharded_storage_pads_stacks():
+    """state_sharding='zero' pads every bucket stack's leading B dim to a
+    multiple of state_shards so the stacks split evenly across the DP axis;
+    the pad rows are inert (zero) and invisible in the canonical state."""
+    params = _mixed_params()
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=16, lr=1e-2, min_dim=8,
+        engine="bucketed", state_sharding="zero", state_shards=3,
+    )
+    st = opt.init(params)
+    padded = False
+    for bucket, bst in zip(opt.bucket_plan.buckets, st.buckets):
+        B_pad = buckets_lib.zero_padded_batch(bucket.batch, 3)
+        assert B_pad % 3 == 0
+        padded |= B_pad != bucket.batch
+        for x in jax.tree_util.tree_leaves(bst):
+            assert x.shape[0] == B_pad
+            if B_pad != bucket.batch:  # pad rows start (and stay) zero
+                np.testing.assert_array_equal(
+                    np.asarray(x[bucket.batch:], np.float32), 0.0
+                )
+    assert padded  # the fixture exercises a non-dividing batch
+
+
+@pytest.mark.parametrize("inner", ["adam", "adam8bit", "adam_mini"])
+@pytest.mark.parametrize("steps", [1, 5])
+def test_zero_sharded_parity_matrix(inner, steps):
+    """ISSUE 7 acceptance: {adam, adam8bit, adam_mini} x {refresh-only,
+    refresh+hot} -- the ZeRO-padded layout is bit-identical (fp32) to the
+    replicated layout across params AND canonical moments.  shards=3 does
+    not divide any bucket batch, so every stack carries live pad rows."""
+    params = _mixed_params()
+    p_r, s_r, _ = _run("bucketed", params, inner, steps=steps)
+    p_z, s_z, _ = _run(
+        "bucketed", params, inner, steps=steps,
+        state_sharding="zero", state_shards=3,
+    )
+    _assert_trees(p_r, p_z, atol=0.0)
+    _assert_trees(s_r.leaves, s_z.leaves, atol=0.0)
+
+
+def test_zero_sharded_checkpoint_crosses_engines():
+    """Resume crossing the sharded layout: a canonical checkpoint taken
+    from a zero-sharded run loads into (a) the same sharded optimizer
+    (lossless round trip incl. pad rows), (b) a replicated bucketed
+    optimizer, and (c) the per-leaf reference engine -- one further hot
+    step is bit-identical under all three."""
+    params = _mixed_params()
+    kw = dict(rank=16, lr=1e-2, alpha=0.5, min_dim=8)
+    opt_z = make_optimizer(
+        "galore-sara-adam", params, engine="bucketed",
+        state_sharding="zero", state_shards=3, **kw,
+    )
+    st = opt_z.init(params)
+    p = params
+    for step in range(3):
+        p, st, _ = opt_z.update(
+            _grads(params, step), st, p, refresh=step == 0, apply=True
+        )
+    canon = canonical_opt_state(opt_z, st)
+    assert canon.buckets == ()
+
+    # (a) round trip repads losslessly -- including the zero pad rows
+    rt = storage_opt_state(opt_z, canon)
+    _assert_trees(
+        jax.tree_util.tree_leaves(rt), jax.tree_util.tree_leaves(st),
+        atol=0.0,
+    )
+    g = _grads(params, 7)
+    p_z, _, _ = opt_z.update(g, rt, p, refresh=False, apply=True)
+
+    # (b) replicated bucketed resume
+    opt_b = make_optimizer("galore-sara-adam", params, engine="bucketed",
+                           **kw)
+    p_b, _, _ = opt_b.update(
+        g, storage_opt_state(opt_b, canon), p, refresh=False, apply=True
+    )
+    _assert_trees(p_z, p_b, atol=0.0)
+
+    # (c) per-leaf reference resume consumes the canonical state directly
+    opt_r = make_optimizer("galore-sara-adam", params, engine="reference",
+                           **kw)
+    u_r, _, _ = opt_r.update(g, canon, p, refresh=False)
+    _assert_trees(p_z, apply_updates(p, u_r), atol=0.0)
+
+
+def test_zero_sharding_validation():
+    params = _mixed_params()
+    with pytest.raises(ValueError, match="state_sharding"):
+        make_optimizer("galore-sara-adam", params, engine="bucketed",
+                       state_sharding="warp")
+    with pytest.raises(ValueError, match="state_shards"):
+        make_optimizer("galore-sara-adam", params, engine="bucketed",
+                       state_sharding="zero", state_shards=0)
+    # zero needs bucket-native state: adafactor has no fused inner
+    with pytest.raises(ValueError, match="bucket-native"):
+        make_optimizer("galore-sara-adafactor", params, min_dim=8,
+                       engine="bucketed", state_sharding="zero",
+                       state_shards=2)
+
+
 def test_stacked_grads_validation():
     from repro.core.lowrank import (
         StackedGrads, project_grads_stacked, stack_grads,
