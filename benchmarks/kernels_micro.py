@@ -668,6 +668,172 @@ def recovery_overhead_bench() -> List[Row]:
     return rows
 
 
+def sharded_ckpt_bench() -> List[Row]:
+    """Shard-parallel checkpointing (DESIGN.md §2.11): the same zero-
+    sharded train state saved through the canonical single-writer format
+    vs the shard-parallel format (8 emulated writers in one process).
+
+    The gated analytics are per-HOST: ``modeled_ckpt_bytes_per_host`` is
+    what one writer serializes of the bucketed state (all of it for the
+    canonical gather, ``padded_total/shards`` for a shard writer --
+    ``core/buckets.sharded_ckpt_model``) and ``ckpt_save_ops`` its leaf-
+    file write count.  Wall time for the sharded save covers all 8
+    emulated writers serially, so the real multi-host speedup is larger
+    than the wall ratio suggests; the byte model is the honest claim."""
+    import shutil
+    import tempfile
+
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+    from repro.train import checkpoint as ckpt_lib
+    from repro.train.state import (
+        TrainState, bucket_canonical_rows, checkpoint_converters,
+    )
+
+    L, d_model, rank, shards = 4, 256, 64, 8
+    params, grads = _bench_transformer(L=L, d_model=d_model)
+    rows: List[Row] = []
+    opt = make_optimizer(
+        "galore-sara-adam", params, rank=rank, lr=1e-3, alpha=0.25,
+        engine="bucketed", state_sharding="zero", state_shards=shards,
+        track_update_norm=False,
+    )
+    state = opt.init(params)
+    _, state, _ = opt.update(grads, state, params, refresh=True)
+    full = TrainState(params, state)
+    can, loc = checkpoint_converters(opt)
+    model = buckets_lib.sharded_ckpt_model(
+        opt.bucket_plan, inner="adam", shards=shards
+    )
+
+    class CountingIO(ckpt_lib.CheckpointIO):
+        def __init__(self):
+            self.leaf_writes = 0
+            self.bytes_written = 0
+
+        def save_leaf(self, fpath, arr):
+            self.leaf_writes += 1
+            self.bytes_written += int(np.asarray(arr).nbytes)
+            super().save_leaf(fpath, arr)
+
+    results = {}
+    for mode in ("replicated", "sharded"):
+        base = tempfile.mkdtemp(prefix=f"bench_ckpt_{mode}_")
+        io = CountingIO()
+        spec = (
+            ckpt_lib.ShardSpec(shards, tuple(range(shards)))
+            if mode == "sharded" else None
+        )
+        try:
+            mgr = ckpt_lib.CheckpointManager(
+                base, keep=1, canonicalize=can, localize=loc, io=io,
+                shard_spec=spec,
+                canonical_rows=bucket_canonical_rows(opt),
+            )
+            t0 = time.perf_counter()
+            iters = 3
+            for i in range(iters):
+                mgr.save(full, i, blocking=True)
+            us = (time.perf_counter() - t0) / iters * 1e6
+        finally:
+            shutil.rmtree(base, ignore_errors=True)
+        results[mode] = (us, io.leaf_writes // iters,
+                         io.bytes_written // iters)
+
+    per_host_bytes = {
+        "replicated": model["canonical_bytes"],
+        "sharded": model["sharded_bytes_per_host"],
+    }
+    per_host_ops = {
+        "replicated": float(results["replicated"][1]),
+        "sharded": model["stack_files_per_host"],
+    }
+    for mode in ("replicated", "sharded"):
+        us, ops, nbytes = results[mode]
+        name = f"ckpt/save_{mode}_L{L}_d{d_model}_r{rank}_s{shards}"
+        rows.append((
+            name, us,
+            f"{nbytes / 1e6:.1f}MB {ops} leaf writes total; per-host "
+            f"model: {per_host_bytes[mode] / 1e6:.2f}MB state, "
+            f"{per_host_ops[mode]:.0f} ops "
+            f"({shards}x writers in the sharded format)",
+        ))
+        common.record(
+            name, us, engine=mode, state_layout="zero",
+            modeled_ckpt_bytes_per_host=per_host_bytes[mode],
+            ckpt_save_ops=per_host_ops[mode],
+            measured_bytes_written=int(nbytes),
+            shards=shards,
+        )
+    return rows
+
+
+def elastic_resume_bench() -> List[Row]:
+    """Elastic resume (DESIGN.md §2.11): a shard-parallel checkpoint
+    written at 8 shards loaded into a 4-shard skeleton (concat shard row
+    blocks -> drop writer pad rows -> re-pad for the reader).  Gated on
+    the re-read payload model; wall time is the full cross-shard-count
+    restore including sha256 verification."""
+    import shutil
+    import tempfile
+
+    from repro.core import make_optimizer
+    from repro.core import buckets as buckets_lib
+    from repro.train import checkpoint as ckpt_lib
+    from repro.train.state import (
+        TrainState, bucket_canonical_rows, checkpoint_converters,
+    )
+
+    L, d_model, rank = 4, 256, 64
+    n_write, n_read = 8, 4
+    params, grads = _bench_transformer(L=L, d_model=d_model)
+    kw = dict(rank=rank, lr=1e-3, alpha=0.25, engine="bucketed",
+              track_update_norm=False)
+    opt_w = make_optimizer("galore-sara-adam", params,
+                           state_sharding="zero", state_shards=n_write,
+                           **kw)
+    opt_r = make_optimizer("galore-sara-adam", params,
+                           state_sharding="zero", state_shards=n_read,
+                           **kw)
+    state = opt_w.init(params)
+    _, state, _ = opt_w.update(grads, state, params, refresh=True)
+    full = TrainState(params, state)
+    skel = TrainState(params, opt_r.init(params))
+    can, loc = checkpoint_converters(opt_w)
+    base = tempfile.mkdtemp(prefix="bench_elastic_")
+    try:
+        mgr = ckpt_lib.CheckpointManager(
+            base, keep=1, canonicalize=can, localize=loc,
+            shard_spec=ckpt_lib.ShardSpec(n_write, tuple(range(n_write))),
+            canonical_rows=bucket_canonical_rows(opt_w),
+        )
+        mgr.save(full, 0, blocking=True)
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            loaded, _step = mgr.load_latest(skel)
+            jax.block_until_ready(jax.tree_util.tree_leaves(loaded))
+        us = (time.perf_counter() - t0) / iters * 1e6
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+    model = buckets_lib.sharded_ckpt_model(
+        opt_w.bucket_plan, inner="adam", shards=n_write
+    )
+    read_bytes = model["sharded_bytes_per_host"] * n_write  # all blocks
+    name = f"ckpt/elastic_resume_L{L}_d{d_model}_r{rank}_{n_write}to{n_read}"
+    rows = [(
+        name, us,
+        f"{n_write}-shard ckpt -> {n_read}-shard skeleton, "
+        f"{read_bytes / 1e6:.1f}MB stack reads + verify",
+    )]
+    common.record(
+        name, us, engine="sharded", state_layout="zero",
+        modeled_ckpt_bytes_per_host=read_bytes,
+        write_shards=n_write, read_shards=n_read,
+    )
+    return rows
+
+
 def run() -> List[Row]:
     return (
         lowrank_update_bench() + galore_project_bench()
@@ -675,4 +841,5 @@ def run() -> List[Row]:
         + quantized_update_engine_bench()
         + refresh_engine_bench() + dp_compression_bench()
         + recovery_overhead_bench()
+        + sharded_ckpt_bench() + elastic_resume_bench()
     )

@@ -30,6 +30,10 @@ _CHECK_FIELDS = (
     "modeled_state_bytes_per_device",
     "modeled_intra_pod_bytes",
     "modeled_inter_pod_bytes",
+    # shard-parallel checkpointing + elastic resume (ISSUE 8): per-host
+    # checkpoint write payload and leaf-file write ops.
+    "modeled_ckpt_bytes_per_host",
+    "ckpt_save_ops",
 )
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 

@@ -143,3 +143,9 @@ class TrainConfig:
     keep_checkpoints: int = 3
     checkpoint_dir: str = "/tmp/repro_ckpt"
     async_checkpoint: bool = True
+    # Shard-parallel checkpoint format for ZeRO-sharded runs (DESIGN.md
+    # §2.11): each process writes only its own BucketState row blocks; no
+    # canonical gather on the save path.  Only takes effect when the
+    # optimizer was built with state_sharding="zero" and shards > 1;
+    # False forces the (slow, single-writer) canonical per-leaf format.
+    sharded_checkpoint: bool = True

@@ -1183,6 +1183,35 @@ def modeled_state_bytes(
     }
 
 
+def sharded_ckpt_model(
+    plan: BucketPlan, inner: str = "adam", shards: int = 1
+) -> Dict[str, float]:
+    """Modeled checkpoint WRITE payload of the bucketed optimizer state
+    (DESIGN.md §2.11): ``canonical_bytes`` is what the single-writer
+    canonical format serializes (every byte through one host after the
+    gather/unpad converters), ``sharded_bytes_per_host`` what one writer
+    of the shard-parallel format puts on disk (its ``padded_total /
+    shards`` row block of every stack -- the same 1/shards factor as the
+    resident-memory win, up to row padding).  ``stack_files_per_host`` is
+    the per-writer file (save-op) count: one ``.npy`` per bucket per live
+    BucketState field per owned shard.  Params and non-bucketed state are
+    excluded -- they are replicated in both formats and cancel in the
+    comparison the bench gates."""
+    if inner == "msgd":
+        fields = 2  # projector + m
+    elif inner == "adam8bit":
+        fields = 5  # projector + m/v code planes + m/v scale stacks
+    else:
+        fields = 3  # projector + m + v (adam, adam_mini's per-row v)
+    st = modeled_state_bytes(plan, inner, shards)
+    return {
+        "canonical_bytes": st["total"],
+        "sharded_bytes_per_host": st["padded_total"] / max(shards, 1),
+        "stack_files_per_host": float(len(plan.buckets) * fields),
+        "shards": float(shards),
+    }
+
+
 def update_num_ops(
     plan: BucketPlan, inner: str = "adam", projected: bool = False
 ) -> int:

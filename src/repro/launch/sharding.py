@@ -112,7 +112,8 @@ def tree_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
 def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
     """Shard dim0 (global batch) over pod+data when divisible."""
     axes = batch_axes(mesh)
-    if not axes:
+    # 0-dim entries (the fault-injection grad_scale scalar) replicate
+    if not axes or not shape:
         return P()
     total = 1
     for a in axes:
@@ -223,3 +224,16 @@ def zero_tree_shardings(
     return base._replace(
         opt_state=base.opt_state._replace(buckets=buckets)
     )
+
+
+def state_shardings(
+    state: PyTree, mesh: Mesh,
+    zero_dp_axes: Optional[Tuple[str, ...]] = None,
+) -> PyTree:
+    """The one entry point launchers/restore paths should use: name-based
+    rules for a replicated-state run, ZeRO bucket-stack placements when
+    ``zero_dp_axes`` is given -- same convention as
+    ``train/step.shard_train_state``."""
+    if zero_dp_axes:
+        return zero_tree_shardings(state, mesh, zero_dp_axes)
+    return tree_shardings(state, mesh)

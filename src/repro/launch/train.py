@@ -50,6 +50,15 @@ def main() -> None:
                     help="'data,model' e.g. '16,16'; default single device")
     ap.add_argument("--compressed-dp", action="store_true",
                     help="project-then-reduce DP gradient compression")
+    ap.add_argument("--engine", default="",
+                    help="optimizer engine override: reference | bucketed")
+    ap.add_argument("--state-sharding", default="",
+                    help="'' (replicated) | 'zero' (DESIGN.md §2.10)")
+    ap.add_argument("--state-shards", type=int, default=0,
+                    help="ZeRO shard count; default = DP extent of --mesh")
+    ap.add_argument("--no-sharded-ckpt", action="store_true",
+                    help="force canonical per-leaf checkpoints even for "
+                         "zero-sharded state (slow single-writer fallback)")
     ap.add_argument("--refresh-groups", type=int, default=1)
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--no-recovery", action="store_true",
@@ -59,6 +68,11 @@ def main() -> None:
                     help="consecutive bad steps before a rollback")
     ap.add_argument("--loss-spike-factor", type=float, default=0.0,
                     help=">0: loss > factor x windowed median is a bad step")
+    ap.add_argument("--stale-action", default="log",
+                    choices=("log", "rollback", "abort"),
+                    help="escalation for a stale worker heartbeat")
+    ap.add_argument("--collective-timeout", type=float, default=0.0,
+                    help=">0: arm the collective watchdog (per-step sync)")
     ap.add_argument("--heartbeat-timeout", type=float, default=60.0)
     ap.add_argument("--coordinator", default="")
     ap.add_argument("--num-processes", type=int, default=1)
@@ -73,11 +87,10 @@ def main() -> None:
     from repro.core import make_optimizer
     from repro.core.schedules import cosine_with_warmup
     from repro.data.synthetic import SyntheticDataConfig, SyntheticDataset
-    from repro.launch import sharding as shd
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import axes_size, batch_axes, make_mesh
     from repro.models import build_model, count_params
     from repro.train.loop import train_loop
-    from repro.train.monitor import HeartbeatRegistry
+    from repro.train.monitor import CollectiveWatchdog, HeartbeatRegistry
     from repro.train.recovery import RecoveryPolicy
     from repro.train.state import TrainState
     from repro.train.step import make_train_step, shard_train_state
@@ -90,12 +103,30 @@ def main() -> None:
     print(f"[train] {args.arch} {count_params(params) / 1e6:.1f}M params "
           f"on {jax.device_count()} device(s)")
 
+    # the mesh shape is needed before the optimizer: state_sharding="zero"
+    # bakes the shard count into the padded stacks at init
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        mesh = make_mesh(shape)
+
     rank = args.rank or min(512, max(8, cfg.d_model // 4))
     kw = dict(
         lr=args.lr,
         lr_schedule=cosine_with_warmup(args.lr, args.warmup, args.steps),
         grad_clip_norm=1.0,
     )
+    if args.engine:
+        kw["engine"] = args.engine
+    zero_dp_axes = None
+    if args.state_sharding:
+        kw["state_sharding"] = args.state_sharding
+        if args.state_sharding == "zero":
+            zero_dp_axes = batch_axes(mesh) if mesh is not None else ()
+            shards = args.state_shards or (
+                axes_size(mesh, zero_dp_axes) if mesh is not None else 1
+            )
+            kw["state_shards"] = shards
     if args.optimizer != "adam":
         kw.update(rank=rank, tau=args.tau, alpha=args.alpha,
                   refresh_groups=args.refresh_groups)
@@ -107,16 +138,16 @@ def main() -> None:
         vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch
     ))
 
-    mesh = None
     shardings = None
     state = TrainState(params, opt.init(params))
-    if args.mesh:
-        shape = tuple(int(x) for x in args.mesh.split(","))
-        mesh = make_mesh(shape)
-        state, shardings = shard_train_state(state, mesh)
+    if mesh is not None:
+        state, shardings = shard_train_state(
+            state, mesh, zero_dp_axes=zero_dp_axes or None
+        )
     tc = TrainConfig(
         total_steps=args.steps, checkpoint_every=args.ckpt_every,
         checkpoint_dir=args.ckpt_dir, microbatch=args.microbatch,
+        sharded_checkpoint=not args.no_sharded_ckpt,
     )
     recovery = None
     if not args.no_recovery:
@@ -125,11 +156,22 @@ def main() -> None:
             loss_spike_factor=args.loss_spike_factor,
             max_rollbacks=args.max_rollbacks,
             rollback_backoff_s=0.5,
+            stale_worker_action=args.stale_action,
         )
     heartbeats = HeartbeatRegistry(timeout_s=args.heartbeat_timeout)
+    watchdog = None
+    if args.collective_timeout > 0:
+        watchdog = CollectiveWatchdog(
+            timeout_s=args.collective_timeout,
+            on_timeout=lambda s, dt: print(
+                f"[train] WATCHDOG: step call {s} collectives exceeded "
+                f"{dt:.1f}s"
+            ),
+        )
     fns = make_train_step(
         model, opt, mesh=mesh, train_cfg=tc,
         compressed=args.compressed_dp, recovery=recovery,
+        watchdog=watchdog,
     )
 
     def run():

@@ -13,8 +13,10 @@ Properties required at cluster scale, all implemented and tested:
   * **async save** -- ``save(..., blocking=False)`` snapshots to host memory
     (device_get) on the caller thread, then writes on a background thread so
     the train loop overlaps checkpoint I/O with compute.  Failed writes are
-    retried with exponential backoff (``save_retries``) before the error is
-    surfaced on the next ``wait()``.
+    retried with exponential backoff (``save_retries``); the error is
+    surfaced on the next ``wait()`` *or* the next ``save`` call, whichever
+    comes first, so a dead background write can never be masked by a later
+    retention pass.
   * **fallback load** -- ``load_latest`` walks checkpoints newest-to-oldest
     and returns the first that verifies, so a corrupt/truncated newest
     checkpoint degrades to the previous one instead of killing the run.
@@ -32,6 +34,27 @@ Properties required at cluster scale, all implemented and tested:
     storage layout (bucket-native runs save/resume bit-for-bit and can
     switch engines mid-run).  ``shardings`` given to ``load`` must then
     describe the *canonical* tree.
+  * **shard-parallel save** (DESIGN.md §2.11) -- with a :class:`ShardSpec`,
+    a ``state_sharding="zero"`` run skips the canonical gather entirely:
+    each process writes only its local ``BucketState`` row block (one
+    ``.s{k}_of_{S}.npy`` file per bucket leaf per owned shard) plus, on the
+    coordinator, the replicated leaves.  Every writer publishes a fsynced
+    per-shard manifest; the coordinator's *commit barrier* waits for all
+    ``num_shards`` shard manifests, verifies they agree (step, shard count,
+    row geometry -- divergent manifests abort the attempt into the retry
+    path), merges the per-shard SHA-256 entries into the single
+    ``manifest.json`` (``format: "sharded"``), and only then commits.
+    ``verify_checkpoint``/``load_latest`` check every shard's files, so a
+    checkpoint missing one shard's bytes is detected and walked past.
+  * **elastic resume across shard counts** -- a sharded checkpoint written
+    at ``N`` shards loads into a run built with ``M`` shards for any
+    ``N, M``: load concatenates the shard row blocks, drops the inert pad
+    rows recorded as ``canonical_rows`` in the manifest, and re-pads to the
+    skeleton's current padded extent (``core/buckets.zero_padded_batch``
+    geometry).  Canonical per-leaf checkpoints (the PR 7 gather/unpad
+    converters) remain the supported -- slow, single-writer -- fallback
+    format, and both formats can coexist in one directory: ``load``
+    dispatches on the manifest's ``format`` field.
 
 Format: one ``.npy`` per leaf + ``manifest.json``.  No tensorstore available
 offline; per-shard streaming writes are a documented production follow-up.
@@ -41,10 +64,11 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -52,6 +76,47 @@ import numpy as np
 PyTree = Any
 
 _MANIFEST = "manifest.json"
+_SHARD_MANIFEST_FMT = "manifest.shard{:05d}.json"
+_SHARD_MANIFEST_RE = re.compile(r"^manifest\.shard(\d{5})\.json$")
+# Leaves whose leading (padded) dim is partitioned across shard writers:
+# the BucketState stacks of a bucket-native optimizer state.
+_SHARDED_LEAF_RE = re.compile(r"\.opt_state\.buckets\[(\d+)\]")
+_SHARD_FILE_RE = re.compile(r"\.s\d{5}_of_\d{5}\.npy$")
+
+
+class ShardSpec(NamedTuple):
+    """Who writes what in a shard-parallel save.
+
+    ``num_shards`` is the total writer count (== the optimizer's
+    ``state_shards``); ``shard_ids`` are the shards THIS process writes --
+    ``(process_index,)`` on a real multi-host deployment,
+    ``range(num_shards)`` when a single process emulates the whole fleet
+    (tests, single-host multi-device).  The coordinator -- the writer that
+    owns shard 0 -- additionally writes the replicated leaves, runs the
+    commit barrier, merges the shard manifests, and commits.
+
+    ``commit_timeout_s`` bounds the barrier: if any shard manifest is
+    still missing past it, the attempt fails with ``IOError`` into the
+    manager's retry/backoff path (a dead or straggling writer must not
+    hang the save forever).
+    """
+
+    num_shards: int
+    shard_ids: Tuple[int, ...]
+    commit_timeout_s: float = 60.0
+    poll_interval_s: float = 0.01
+
+    @property
+    def is_coordinator(self) -> bool:
+        return 0 in self.shard_ids
+
+
+def local_shard_ids(num_shards: int) -> Tuple[int, ...]:
+    """The shards this process writes: all of them in a single-process run
+    (fake-device meshes), exactly one on a real multi-host deployment."""
+    if jax.process_count() == 1:
+        return tuple(range(num_shards))
+    return (jax.process_index(),)
 
 
 class CheckpointIO:
@@ -138,7 +203,13 @@ def verify_checkpoint(base: str, step: int) -> bool:
     """Full integrity check: manifest parses and every leaf file's SHA-256
     matches.  This is the retention-protection predicate -- quick manifest
     presence is not enough, because post-commit byte corruption (the fault
-    the fallback load exists for) leaves the manifest intact."""
+    the fallback load exists for) leaves the manifest intact.
+
+    For ``format: "sharded"`` checkpoints this additionally requires every
+    sharded leaf to carry exactly ``num_shards`` shard entries and every
+    shard file to exist and checksum-match -- a checkpoint missing one
+    shard's bytes (dead writer, post-commit deletion) fails verification
+    and is walked past by ``load_latest``."""
     cdir = os.path.join(base, f"step_{step:08d}")
     try:
         with open(os.path.join(cdir, _MANIFEST)) as f:
@@ -146,6 +217,16 @@ def verify_checkpoint(base: str, step: int) -> bool:
         for entry in manifest["leaves"].values():
             if _sha256(os.path.join(cdir, entry["file"])) != entry["sha256"]:
                 return False
+        if manifest.get("format") == "sharded":
+            num_shards = int(manifest["num_shards"])
+            for entry in manifest["sharded"].values():
+                shards = entry["shards"]
+                if len(shards) != num_shards:
+                    return False
+                for srec in shards:
+                    fpath = os.path.join(cdir, srec["file"])
+                    if _sha256(fpath) != srec["sha256"]:
+                        return False
     except (OSError, ValueError, KeyError):
         return False
     return True
@@ -181,6 +262,10 @@ def _write_checkpoint(
     if os.path.exists(final):
         shutil.rmtree(final)
     io.commit(tmp, final)  # atomic: os.replace + parent-dir fsync
+    _apply_retention(base, keep)
+
+
+def _apply_retention(base: str, keep: int) -> None:
     # Retention: drop all but the newest ``keep``, EXCEPT the newest
     # fully-verified checkpoint -- if the write above (or a later one)
     # turns out corrupt, the last loadable state must still exist.
@@ -207,6 +292,8 @@ class CheckpointManager:
         io: Optional[CheckpointIO] = None,
         save_retries: int = 2,
         retry_backoff_s: float = 0.05,
+        shard_spec: Optional[ShardSpec] = None,
+        canonical_rows: Optional[Dict[int, int]] = None,
     ):
         self.base_dir = base_dir
         self.keep = keep
@@ -216,6 +303,15 @@ class CheckpointManager:
         self.save_retries = save_retries  # extra attempts after a failure
         self.retry_backoff_s = retry_backoff_s  # doubles per retry
         self.retries_performed = 0  # lifetime counter (monitor surfaces it)
+        # Shard-parallel mode: when set, states with bucket stacks are
+        # written format="sharded" (each writer serializes only its row
+        # block); canonical per-leaf serialization remains the fallback
+        # for bucket-less states and shard_spec=None managers.
+        self.shard_spec = shard_spec
+        # {bucket index -> canonical (pre-ZeRO-pad) row count}; the merged
+        # manifest records it so elastic load can drop inert pad rows
+        # before re-padding to the destination shard count.
+        self.canonical_rows = dict(canonical_rows or {})
         self._save_ordinal = 0  # logical save count (fault-injection key)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -223,7 +319,16 @@ class CheckpointManager:
     # ---- save ----
 
     def save(self, state: PyTree, step: int, blocking: bool = True) -> None:
+        # Surface a dead background write BEFORE any new work (retention in
+        # particular): a failed async save must not be masked by this save
+        # succeeding and then pruning the directory.
+        self._raise_if_failed()
         self.wait()  # only one in-flight async save
+        if self.shard_spec is not None and any(
+            True for _ in self._sharded_paths(state)
+        ):
+            self._save_sharded(state, step, blocking)
+            return
         if self.canonicalize is not None:
             state = self.canonicalize(state)
         flat, _ = jax.tree_util.tree_flatten(state)
@@ -253,7 +358,7 @@ class CheckpointManager:
                         if delay > 0:
                             time.sleep(delay)
                             delay *= 2
-            self._error = err  # surfaced on next wait()
+            self._error = err  # surfaced on next wait() / save()
 
         if blocking:
             work()
@@ -261,6 +366,240 @@ class CheckpointManager:
         else:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
+
+    # ---- shard-parallel save ----
+
+    def _sharded_paths(self, state: PyTree):
+        """Yield ``(path, leaf)`` for leaves whose leading dim is row-
+        partitioned across shard writers: bucket stacks with a padded row
+        count divisible by ``num_shards`` (the zero_padded_batch invariant
+        guarantees divisibility for every live zero-sharded run)."""
+        spec = self.shard_spec
+        flat, _ = jax.tree_util.tree_flatten_with_path(state)
+        for p, leaf in flat:
+            path = jax.tree_util.keystr(p)
+            shape = tuple(getattr(leaf, "shape", ()))
+            if (
+                _SHARDED_LEAF_RE.search(path)
+                and len(shape) >= 1
+                and shape[0] > 0
+                and shape[0] % spec.num_shards == 0
+            ):
+                yield path, leaf
+
+    def _save_sharded(self, state: PyTree, step: int, blocking: bool) -> None:
+        """Each writer snapshots + writes only its own row blocks.  The
+        state is serialized in STORAGE layout (no canonical gather): the
+        whole point is that no process ever materializes the full stacks."""
+        spec = self.shard_spec
+        S = spec.num_shards
+        sharded_paths = {path for path, _ in self._sharded_paths(state)}
+        flat, _ = jax.tree_util.tree_flatten_with_path(state)
+        sharded_meta: Dict[str, Dict[str, Any]] = {}
+        shard_blocks: List[Tuple[str, int, np.ndarray]] = []
+        repl: List[Tuple[str, np.ndarray]] = []
+        for p, leaf in flat:
+            path = jax.tree_util.keystr(p)
+            if path in sharded_paths:
+                rows = int(leaf.shape[0])
+                rps = rows // S
+                bucket = int(_SHARDED_LEAF_RE.search(path).group(1))
+                sharded_meta[path] = {
+                    "rows_per_shard": rps,
+                    "padded_rows": rows,
+                    "canonical_rows": int(
+                        self.canonical_rows.get(bucket, rows)
+                    ),
+                    "dtype": str(leaf.dtype),
+                }
+                # Snapshot only the owned row blocks; on a real multi-host
+                # fleet each block is this process's resident shard.
+                for k in spec.shard_ids:
+                    block = np.asarray(
+                        jax.device_get(leaf[k * rps:(k + 1) * rps])
+                    )
+                    shard_blocks.append((path, k, block))
+            elif spec.is_coordinator:
+                repl.append((path, np.asarray(jax.device_get(leaf))))
+        ordinal = self._save_ordinal
+        self._save_ordinal += 1
+
+        def work():
+            delay = self.retry_backoff_s
+            for attempt in range(self.save_retries + 1):
+                try:
+                    self.io.begin(ordinal, attempt)
+                    self._write_sharded(
+                        step, sharded_meta, shard_blocks, repl
+                    )
+                    return
+                except BaseException as e:
+                    err = e
+                    if attempt < self.save_retries:
+                        self.retries_performed += 1
+                        if delay > 0:
+                            time.sleep(delay)
+                            delay *= 2
+            self._error = err  # surfaced on next wait() / save()
+
+        if blocking:
+            work()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _write_sharded(
+        self,
+        step: int,
+        sharded_meta: Dict[str, Dict[str, Any]],
+        shard_blocks: List[Tuple[str, int, np.ndarray]],
+        repl: List[Tuple[str, np.ndarray]],
+    ) -> None:
+        spec = self.shard_spec
+        S = spec.num_shards
+        io = self.io
+        base = self.base_dir
+        os.makedirs(base, exist_ok=True)
+        final = os.path.join(base, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        # exist_ok: other writers may already be filling the same tmp dir;
+        # never rmtree it here (that would race their in-flight files).
+        os.makedirs(tmp, exist_ok=True)
+        per_shard: Dict[int, Dict[str, Any]] = {
+            k: {"step": step, "num_shards": S, "shard": k, "leaves": {}}
+            for k in spec.shard_ids
+        }
+        for path, k, block in shard_blocks:
+            fname = f"{_sanitize(path)}.s{k:05d}_of_{S:05d}.npy"
+            fpath = os.path.join(tmp, fname)
+            io.save_leaf(fpath, block)
+            meta = sharded_meta[path]
+            per_shard[k]["leaves"][path] = {
+                "file": fname,
+                "sha256": _sha256(fpath),
+                "shape": list(block.shape),
+                "rows_per_shard": meta["rows_per_shard"],
+                "padded_rows": meta["padded_rows"],
+                "canonical_rows": meta["canonical_rows"],
+                "dtype": meta["dtype"],
+            }
+        for k, man in per_shard.items():
+            io.write_manifest(
+                os.path.join(tmp, _SHARD_MANIFEST_FMT.format(k)), man
+            )
+        if not spec.is_coordinator:
+            # Non-coordinators are done once their shard manifest is
+            # durable; the coordinator owns barrier + merge + commit.
+            return
+        repl_entries: Dict[str, Any] = {}
+        for path, arr in repl:
+            fname = _sanitize(path) + ".npy"
+            fpath = os.path.join(tmp, fname)
+            io.save_leaf(fpath, arr)
+            repl_entries[path] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "sha256": _sha256(fpath),
+            }
+        shard_mans = self._commit_barrier(tmp, step)
+        merged: Dict[str, Any] = {}
+        for path, meta0 in shard_mans[0]["leaves"].items():
+            merged[path] = {
+                "rows_per_shard": meta0["rows_per_shard"],
+                "padded_rows": meta0["padded_rows"],
+                "canonical_rows": meta0["canonical_rows"],
+                "shape": [meta0["padded_rows"]] + list(meta0["shape"][1:]),
+                "dtype": meta0["dtype"],
+                "shards": [
+                    {
+                        "file": shard_mans[k]["leaves"][path]["file"],
+                        "sha256": shard_mans[k]["leaves"][path]["sha256"],
+                    }
+                    for k in range(S)
+                ],
+            }
+        manifest = {
+            "step": step,
+            "format": "sharded",
+            "num_shards": S,
+            "leaves": repl_entries,
+            "sharded": merged,
+        }
+        io.write_manifest(os.path.join(tmp, _MANIFEST), manifest)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        io.commit(tmp, final)
+        _apply_retention(base, self.keep)
+
+    def _commit_barrier(self, tmp: str, step: int) -> Dict[int, Dict]:
+        """Coordinator-side quorum: wait (bounded) for all ``num_shards``
+        shard manifests, then verify they agree on step / shard count /
+        leaf set / row geometry.  Timeout and divergence both raise
+        ``IOError`` into the save retry path -- a straggling or corrupted
+        writer fails the attempt, it does not hang or silently commit a
+        torn checkpoint."""
+        spec = self.shard_spec
+        deadline = time.monotonic() + spec.commit_timeout_s
+        found: Dict[int, Dict] = {}
+        want = set(range(spec.num_shards))
+        while True:
+            try:
+                names = os.listdir(tmp)
+            except OSError:
+                names = []
+            for name in names:
+                m = _SHARD_MANIFEST_RE.match(name)
+                if not m:
+                    continue
+                k = int(m.group(1))
+                if k in found or k not in want:
+                    continue
+                try:
+                    with open(os.path.join(tmp, name)) as f:
+                        found[k] = json.load(f)
+                except (OSError, ValueError):
+                    continue  # mid-write or torn read: poll again
+            if want.issubset(found):
+                break
+            if time.monotonic() >= deadline:
+                missing = sorted(want - set(found))
+                raise IOError(
+                    f"commit barrier timed out after "
+                    f"{spec.commit_timeout_s}s waiting for shard "
+                    f"manifests {missing} at step {step}"
+                )
+            time.sleep(spec.poll_interval_s)
+        ref = found[0]
+        ref_leaves = set(ref["leaves"])
+        for k in sorted(want):
+            man = found[k]
+            if (
+                man.get("step") != step
+                or man.get("num_shards") != spec.num_shards
+                or man.get("shard") != k
+            ):
+                raise IOError(
+                    f"divergent shard manifest {k}: header "
+                    f"{(man.get('step'), man.get('num_shards'), man.get('shard'))}"
+                    f" != {(step, spec.num_shards, k)}"
+                )
+            if set(man["leaves"]) != ref_leaves:
+                raise IOError(
+                    f"divergent shard manifest {k}: leaf set differs "
+                    f"from shard 0"
+                )
+            for path, e in man["leaves"].items():
+                r = ref["leaves"][path]
+                geo = ("rows_per_shard", "padded_rows", "canonical_rows",
+                       "dtype")
+                if any(e[g] != r[g] for g in geo):
+                    raise IOError(
+                        f"divergent shard manifest {k}: geometry for "
+                        f"{path} differs from shard 0"
+                    )
+        return found
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -282,24 +621,35 @@ class CheckpointManager:
         mesh=None,
         shardings: Optional[PyTree] = None,
         verify: bool = True,
+        storage_shardings: Optional[PyTree] = None,
     ) -> PyTree:
         """Fill ``state_like``'s structure from disk (elastic reshard).
 
         ``state_like`` may be in the optimizer's storage layout; it is
         canonicalized before matching against the on-disk manifest and the
         result is localized back, so callers round-trip their own layout.
+
+        Dispatches on the manifest's ``format`` field: ``"sharded"``
+        checkpoints load straight into the storage layout (no canonical
+        round-trip), re-slicing/re-padding the bucket stacks from the
+        writer's shard count to ``state_like``'s current padded extent --
+        ``storage_shardings`` (not ``shardings``) places those leaves.
         """
-        if self.canonicalize is not None:
-            # Only the canonical tree's structure/shapes/dtypes matter
-            # here -- eval_shape skips the actual re-layout compute (and
-            # the transient extra copy of the whole optimizer state).
-            state_like = jax.eval_shape(self.canonicalize, state_like)
         step = step if step is not None else latest_step(self.base_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.base_dir}")
         cdir = os.path.join(self.base_dir, f"step_{step:08d}")
         with open(os.path.join(cdir, _MANIFEST)) as f:
             manifest = json.load(f)
+        if manifest.get("format") == "sharded":
+            return self._load_sharded(
+                state_like, manifest, cdir, storage_shardings, verify
+            )
+        if self.canonicalize is not None:
+            # Only the canonical tree's structure/shapes/dtypes matter
+            # here -- eval_shape skips the actual re-layout compute (and
+            # the transient extra copy of the whole optimizer state).
+            state_like = jax.eval_shape(self.canonicalize, state_like)
         flat, treedef = jax.tree_util.tree_flatten(state_like)
         paths = _leaf_paths(state_like)
         if shardings is not None:
@@ -331,12 +681,93 @@ class CheckpointManager:
             loaded = self.localize(loaded)
         return loaded
 
+    def _load_sharded(
+        self,
+        state_like: PyTree,
+        manifest: Dict[str, Any],
+        cdir: str,
+        storage_shardings: Optional[PyTree],
+        verify: bool,
+    ) -> PyTree:
+        """Elastic resume from a shard-parallel checkpoint.
+
+        A checkpoint written at N shards fills a skeleton padded for M
+        shards, any N/M: concatenate the N row blocks, drop the writer's
+        inert pad rows (``canonical_rows`` from the merged manifest), then
+        zero-pad back up to the skeleton's own padded extent.  Pad rows are
+        inert by the zero_pad_states contract, so this round-trips the
+        canonical state bit-for-bit.
+        """
+        flat, treedef = jax.tree_util.tree_flatten(state_like)
+        paths = _leaf_paths(state_like)
+        if storage_shardings is not None:
+            flat_sh = jax.tree_util.tree_leaves(
+                storage_shardings, is_leaf=lambda x: hasattr(x, "spec")
+            )
+        else:
+            flat_sh = [None] * len(flat)
+        out = []
+        for path, like, sh in zip(paths, flat, flat_sh):
+            ent = manifest["sharded"].get(path)
+            if ent is not None:
+                blocks = []
+                for k, srec in enumerate(ent["shards"]):
+                    fpath = os.path.join(cdir, srec["file"])
+                    if verify and _sha256(fpath) != srec["sha256"]:
+                        raise IOError(
+                            f"checksum mismatch for {path} shard {k} in "
+                            f"{cdir}"
+                        )
+                    blocks.append(np.load(fpath, allow_pickle=False))
+                arr = (
+                    np.concatenate(blocks, axis=0)
+                    if len(blocks) > 1 else blocks[0]
+                )
+                rows = int(ent["canonical_rows"])
+                arr = arr[:rows]
+                if tuple(arr.shape[1:]) != tuple(like.shape[1:]):
+                    raise ValueError(
+                        f"trailing-shape mismatch for {path}: ckpt "
+                        f"{arr.shape} vs state {like.shape}"
+                    )
+                tgt = int(like.shape[0])
+                if tgt < rows:
+                    raise ValueError(
+                        f"cannot fit {path}: {rows} canonical rows into "
+                        f"{tgt} padded rows"
+                    )
+                if tgt > rows:
+                    pad = np.zeros(
+                        (tgt - rows,) + tuple(arr.shape[1:]), dtype=arr.dtype
+                    )
+                    arr = np.concatenate([arr, pad], axis=0)
+            else:
+                entry = manifest["leaves"].get(path)
+                if entry is None:
+                    raise KeyError(f"checkpoint missing leaf {path}")
+                fpath = os.path.join(cdir, entry["file"])
+                if verify and _sha256(fpath) != entry["sha256"]:
+                    raise IOError(f"checksum mismatch for {path} in {cdir}")
+                arr = np.load(fpath, allow_pickle=False)
+                if tuple(arr.shape) != tuple(like.shape):
+                    raise ValueError(
+                        f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                        f"state {like.shape}"
+                    )
+            arr = arr.astype(like.dtype)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
     def load_latest(
         self,
         state_like: PyTree,
         mesh=None,
         shardings: Optional[PyTree] = None,
         verify: bool = True,
+        storage_shardings: Optional[PyTree] = None,
     ) -> Tuple[PyTree, int]:
         """Load the newest checkpoint that passes verification, walking
         ``checkpoint_dirs`` newest-to-oldest past corrupt/truncated/partial
@@ -351,7 +782,7 @@ class CheckpointManager:
             try:
                 state = self.load(
                     state_like, step=step, mesh=mesh, shardings=shardings,
-                    verify=verify,
+                    verify=verify, storage_shardings=storage_shardings,
                 )
                 return state, step
             except (OSError, ValueError, KeyError) as e:

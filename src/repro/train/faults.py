@@ -27,6 +27,18 @@ Injection points:
     exercising the manager's retry), corrupted leaf bytes and truncated
     manifests (applied post-commit, exercising the verified-fallback load
     path).
+  * ``maybe_kill(step)``             -- multi-host process loss: raises
+    :class:`ProcessKilled` from the loop at ``step``, modeling one worker
+    of the fleet dying mid-run; the restart harness resumes from the last
+    committed shard-parallel checkpoint.
+
+Multi-host checkpoint kinds (DESIGN.md §2.11) target the shard-parallel
+format: ``ckpt_missing_shard`` / ``ckpt_corrupt_shard`` delete or flip
+bytes in one shard's row-block file post-commit (the committed-but-
+one-shard-invalid case the quorum verification + fallback load must walk
+past), and ``ckpt_divergent_manifest`` mutates one per-shard manifest as
+it is written, so the coordinator's commit barrier must detect the
+disagreement and fail the attempt into the retry path.
 """
 from __future__ import annotations
 
@@ -45,13 +57,26 @@ STEP_KINDS = (
     "loss_spike",  # reported loss *= `value` at `step`
     "slow_step",  # host sleeps `value` seconds at `step`
     "preempt",  # simulated SIGTERM at `step`
+    "kill_process",  # raise ProcessKilled at `step` (worker loss)
 )
 CKPT_KINDS = (
     "ckpt_write_error",  # save_leaf raises on save ordinal `save_index`
     "ckpt_corrupt_leaf",  # flip bytes in one committed leaf file
     "ckpt_truncate_manifest",  # truncate the committed manifest
+    "ckpt_missing_shard",  # delete one committed shard row-block file
+    "ckpt_corrupt_shard",  # flip bytes in one committed shard file
+    "ckpt_divergent_manifest",  # mutate one per-shard manifest at write
 )
 KINDS = STEP_KINDS + CKPT_KINDS
+
+
+class ProcessKilled(RuntimeError):
+    """Injected worker death: one process of the fleet vanishes at a step.
+
+    Raised out of the train loop (NOT caught by the rollback handler --
+    a dead process cannot roll itself back); the restart harness brings
+    the worker back up and resumes from the last committed checkpoint.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +176,10 @@ class FaultPlan:
     def preempt(self, step: int) -> bool:
         return self._take("preempt", step=step) is not None
 
+    def maybe_kill(self, step: int) -> None:
+        if self._take("kill_process", step=step) is not None:
+            raise ProcessKilled(f"injected process loss at step {step}")
+
     # ---- checkpoint-level injection ----
 
     def checkpoint_io(self) -> "FaultyCheckpointIO":
@@ -184,22 +213,63 @@ class FaultyCheckpointIO(ckpt_lib.CheckpointIO):
             )
         super().save_leaf(fpath, arr)
 
+    def write_manifest(self, mpath: str, manifest) -> None:
+        # Divergent-manifest fault: one writer's per-shard manifest
+        # disagrees with the rest (wrong step header) -- the coordinator's
+        # commit barrier must refuse to merge it.  Applied to the highest-
+        # numbered shard manifest so shard 0 (the reference) stays clean.
+        if ckpt_lib._SHARD_MANIFEST_RE.match(os.path.basename(mpath)):
+            shard = int(manifest.get("shard", -1))
+            if shard == int(manifest.get("num_shards", 0)) - 1:
+                sp = self.plan._take(
+                    "ckpt_divergent_manifest", save_index=self._ordinal
+                )
+                if sp is not None:
+                    manifest = dict(manifest)
+                    manifest["step"] = int(manifest["step"]) + 1
+        super().write_manifest(mpath, manifest)
+
+    def _corrupt_file(self, victim: str) -> None:
+        size = os.path.getsize(victim)
+        junk = self._rng.integers(0, 256, 16, dtype=np.uint8)
+        with open(victim, "r+b") as f:
+            f.seek(int(self._rng.integers(max(size - 16, 1))))
+            f.write(junk.tobytes())
+
     def commit(self, tmp: str, final: str) -> None:
         super().commit(tmp, final)
+        all_npy = sorted(
+            f for f in os.listdir(final) if f.endswith(".npy")
+        )
+        shard_npy = [
+            f for f in all_npy if ckpt_lib._SHARD_FILE_RE.search(f)
+        ]
         if self.plan._take(
             "ckpt_corrupt_leaf", save_index=self._ordinal
         ) is not None:
-            leaves = sorted(
-                f for f in os.listdir(final) if f.endswith(".npy")
+            self._corrupt_file(
+                os.path.join(
+                    final, all_npy[int(self._rng.integers(len(all_npy)))]
+                )
             )
-            victim = os.path.join(
-                final, leaves[int(self._rng.integers(len(leaves)))]
+        if shard_npy and self.plan._take(
+            "ckpt_missing_shard", save_index=self._ordinal
+        ) is not None:
+            os.remove(
+                os.path.join(
+                    final,
+                    shard_npy[int(self._rng.integers(len(shard_npy)))],
+                )
             )
-            size = os.path.getsize(victim)
-            junk = self._rng.integers(0, 256, 16, dtype=np.uint8)
-            with open(victim, "r+b") as f:
-                f.seek(int(self._rng.integers(max(size - 16, 1))))
-                f.write(junk.tobytes())
+        if shard_npy and self.plan._take(
+            "ckpt_corrupt_shard", save_index=self._ordinal
+        ) is not None:
+            self._corrupt_file(
+                os.path.join(
+                    final,
+                    shard_npy[int(self._rng.integers(len(shard_npy)))],
+                )
+            )
         if self.plan._take(
             "ckpt_truncate_manifest", save_index=self._ordinal
         ) is not None:

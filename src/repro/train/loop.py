@@ -97,13 +97,29 @@ def train_loop(
 ) -> TrainResult:
     tau = max(optimizer.config.tau, 1)
     groups = max(optimizer.config.refresh_groups, 1)
-    # Checkpoints always serialize the canonical per-leaf state layout;
-    # bucket-native optimizers convert on save/load (train/state.py).
+    # Checkpoints serialize the canonical per-leaf state layout by
+    # default; bucket-native optimizers convert on save/load
+    # (train/state.py).  A ZeRO-sharded run instead writes the
+    # shard-parallel format (DESIGN.md §2.11): each process serializes
+    # only its own row blocks, no canonical gather on the save path.
     canonicalize, localize = state_lib.checkpoint_converters(optimizer)
+    layout = optimizer.state_layout
+    shard_spec = None
+    if (
+        getattr(train_cfg, "sharded_checkpoint", True)
+        and layout is not None
+        and layout.shards > 1
+    ):
+        shard_spec = ckpt_lib.ShardSpec(
+            num_shards=layout.shards,
+            shard_ids=ckpt_lib.local_shard_ids(layout.shards),
+        )
     manager = ckpt_lib.CheckpointManager(
         train_cfg.checkpoint_dir, keep=train_cfg.keep_checkpoints,
         canonicalize=canonicalize, localize=localize,
         io=fault_plan.checkpoint_io() if fault_plan is not None else None,
+        shard_spec=shard_spec,
+        canonical_rows=state_lib.bucket_canonical_rows(optimizer),
     )
     monitor = StepMonitor()
     guard = _PreemptionGuard(handle_signals)
@@ -116,10 +132,13 @@ def train_loop(
     def _restore_latest(skel: TrainState):
         """Newest VERIFYING checkpoint -> (state, step): shardings describe
         the in-memory (storage) layout; with layout converters active the
-        serialized tree differs, so derive name-based shardings for the
-        canonical tree (leaves are loaded directly sharded -- elastic
-        restore) and re-place the converted storage-layout state on the
-        mesh afterwards."""
+        serialized (canonical) tree differs, so derive name-based
+        shardings for the canonical tree (leaves are loaded directly
+        sharded -- elastic restore) and re-place the converted
+        storage-layout state afterwards with the CALLER's shardings (the
+        zero placements for a ZeRO run, name-based otherwise).  Sharded-
+        format checkpoints load straight into the storage layout, so the
+        caller shardings place them directly (``storage_shardings``)."""
         if canonicalize is None:
             return manager.load_latest(skel, shardings=shardings)
         load_shardings = None
@@ -129,9 +148,13 @@ def train_loop(
             canon_skel = jax.eval_shape(canonicalize, skel)
             load_shardings = shd_lib.tree_shardings(canon_skel, mesh)
         loaded, ck_step = manager.load_latest(
-            skel, shardings=load_shardings
+            skel, shardings=load_shardings, storage_shardings=shardings
         )
-        if mesh is not None:
+        if shardings is not None:
+            loaded = jax.tree_util.tree_map(
+                jax.device_put, loaded, shardings
+            )
+        elif mesh is not None:
             from repro.launch import sharding as shd_lib
 
             loaded = jax.tree_util.tree_map(
@@ -209,6 +232,13 @@ def train_loop(
             skipped = (
                 float(np.asarray(m["skipped"])) if "skipped" in m else 0.0
             )
+            # the psum'd cross-process verdict (train/step.py): identical
+            # on every process, so feeding it to the detector makes the
+            # rollback decision lockstep across the fleet
+            verdict = (
+                float(np.asarray(m["bad_step"])) >= 1.0
+                if "bad_step" in m else False
+            )
             losses.append(loss)
             if skipped >= 1.0:
                 monitor.skip_steps += 1
@@ -223,7 +253,9 @@ def train_loop(
                 # keeps its counters, the detector raises RollbackNeeded
                 monitor.note_loss(s, loss, raise_on_streak=False)
                 try:
-                    detector.observe(s, loss, skipped=skipped >= 1.0)
+                    detector.observe(
+                        s, loss, skipped=skipped >= 1.0, verdict=verdict
+                    )
                 except recovery_lib.RollbackNeeded:
                     if not swallow_aborts:
                         raise
@@ -248,9 +280,18 @@ def train_loop(
 
     step = start_step
     final_step = train_cfg.total_steps
+    # the step of the most recent checkpoint KNOWN loadable (restored from
+    # or pinned at start) -- reported on rollback exhaustion so the abort
+    # message names where a manual restart can resume
+    last_verified = start_step
+    stale_action = (
+        recovery.stale_worker_action if recovery is not None else "log"
+    )
     try:
         while step < train_cfg.total_steps:
             try:
+                if fault_plan is not None:
+                    fault_plan.maybe_kill(step)  # injected process loss
                 batch = data.batch_at(step)
                 if batch_hook is not None:
                     batch = batch_hook(batch)
@@ -258,6 +299,29 @@ def train_loop(
                     batch = fault_plan.batch_hook(batch, step)
                 if heartbeats is not None:
                     heartbeats.beat(worker_name)
+                    # staleness is evaluated EVERY step (not just at
+                    # log_every cadence): each newly-stale worker is
+                    # recorded with its first-stale step and escalated
+                    # per the policy's stale_worker_action.
+                    for w in heartbeats.check(step):
+                        history.append({
+                            "event": "stale_worker",
+                            "worker": w,
+                            "step": float(step),
+                            "first_stale_step": float(
+                                heartbeats.first_stale[w]
+                            ),
+                            "action": stale_action,
+                        })
+                        if stale_action == "abort":
+                            raise RuntimeError(
+                                f"worker {w!r} heartbeat stale at step "
+                                f"{step}; aborting per policy"
+                            )
+                        if stale_action == "rollback":
+                            raise recovery_lib.RollbackNeeded(
+                                step, f"stale worker {w!r}"
+                            )
                 monitor.start_step()
                 if fault_plan is not None:
                     dt = fault_plan.sleep_s(step)
@@ -315,7 +379,8 @@ def train_loop(
                 if attempt > recovery.max_rollbacks:
                     raise FloatingPointError(
                         f"divergence persists after "
-                        f"{recovery.max_rollbacks} rollbacks ({rb})"
+                        f"{recovery.max_rollbacks} rollbacks ({rb}); "
+                        f"last verified step {last_verified}"
                     ) from rb
                 monitor.rollbacks = attempt
                 backoff = recovery.backoff_s(attempt)
@@ -323,6 +388,7 @@ def train_loop(
                     time.sleep(backoff)
                 _drain_save_error()  # never race an in-flight save
                 state, ck_step = _restore_latest(state)
+                last_verified = ck_step
                 if recovery.resample_on_rollback:
                     # fold the attempt into the refresh RNG: stochastic
                     # selection (sara/golore/grass) draws a DIFFERENT

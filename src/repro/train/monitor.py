@@ -7,14 +7,23 @@ host-local but fully functional (and unit-tested with a fake clock):
     than ``straggler_factor`` x median (straggler mitigation hook: the train
     loop logs and can re-shard/skip input hosts); NaN/Inf loss sentinel with
     configurable tolerance before abort.
-  * ``HeartbeatRegistry`` -- worker liveness bookkeeping with stale-detection,
-    the restart-decision input for the launcher.
+  * ``HeartbeatRegistry`` -- worker liveness bookkeeping with stale-detection
+    and an escalation edge: ``check(step)`` returns workers that *newly* went
+    stale (re-arming when they come back), records the first-stale step per
+    worker, and feeds the loop's configurable stale-worker action
+    (``RecoveryPolicy.stale_worker_action``: log / rollback / abort).
+  * ``CollectiveWatchdog`` -- bounds the wall time of a dispatched train
+    step's collectives: ``guard`` arms a timer, blocks until the step's
+    outputs are ready, and records a firing if readiness took longer than
+    ``timeout_s`` (a hung reduce-scatter on a real fabric never returns;
+    here the firing is the restart-decision signal).
 """
 from __future__ import annotations
 
 import math
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class StepMonitor:
@@ -118,9 +127,17 @@ class HeartbeatRegistry:
         self.timeout_s = timeout_s
         self._clock = clock
         self._last: Dict[str, float] = {}
+        # escalation bookkeeping: workers currently flagged stale (so a
+        # worker only escalates once per stale episode) and the step at
+        # which each worker was FIRST seen stale (history/audit record).
+        self._flagged: set = set()
+        self.first_stale: Dict[str, int] = {}
 
     def beat(self, worker: str) -> None:
         self._last[worker] = self._clock()
+        # A returning heartbeat ends the stale episode: the next timeout
+        # re-escalates instead of being swallowed as already-flagged.
+        self._flagged.discard(worker)
 
     def stale(self) -> List[str]:
         now = self._clock()
@@ -128,5 +145,80 @@ class HeartbeatRegistry:
             w for w, t in self._last.items() if now - t > self.timeout_s
         ]
 
+    def check(self, step: int) -> List[str]:
+        """Per-step staleness edge detection (the escalation input).
+
+        Returns only workers that went stale SINCE the previous check --
+        each stale episode escalates exactly once, and the first step a
+        worker was seen stale is recorded in ``first_stale`` (kept across
+        recoveries for the audit trail).
+        """
+        newly = [w for w in self.stale() if w not in self._flagged]
+        for w in newly:
+            self._flagged.add(w)
+            self.first_stale.setdefault(w, step)
+        return newly
+
     def healthy(self) -> bool:
         return not self.stale()
+
+
+class CollectiveWatchdog:
+    """Bounds the wall time of a train step's dispatched collectives.
+
+    JAX dispatch is async: a hung per-bucket reduce-scatter (dead peer,
+    wedged fabric) shows up as outputs that never become ready.  ``guard``
+    arms a (real-time) timer, blocks until ``result`` is ready, and
+    cancels; if readiness exceeded ``timeout_s`` the firing is recorded in
+    ``fired`` and ``on_timeout(step, elapsed_s)`` is invoked -- from the
+    timer thread if the block is genuinely hung, so the signal escapes
+    even when ``block_until_ready`` never returns.
+
+    Opt-in: wrapping ``guard`` around the jitted step forces a per-step
+    device sync, trading the loop's deferred-fetch overlap for bounded
+    detection latency.  ``_block`` is overridable for tests.
+    """
+
+    def __init__(
+        self,
+        timeout_s: float = 60.0,
+        on_timeout: Optional[Callable[[int, float], None]] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout
+        self._clock = clock
+        self.fired: List[Tuple[int, float]] = []  # (step, elapsed_s)
+
+    def _block(self, result) -> None:
+        import jax
+
+        jax.block_until_ready(result)
+
+    def guard(self, step: int, result):
+        """Block until ``result`` is ready, escalating past ``timeout_s``."""
+        timed_out = threading.Event()
+
+        def _fire():
+            timed_out.set()
+            if self.on_timeout is not None:
+                self.on_timeout(step, self.timeout_s)
+
+        timer = threading.Timer(self.timeout_s, _fire)
+        timer.daemon = True
+        timer.start()
+        t0 = self._clock()
+        try:
+            self._block(result)
+        finally:
+            timer.cancel()
+        elapsed = self._clock() - t0
+        if elapsed > self.timeout_s and not timed_out.is_set():
+            # Slow-but-finished collective (fake clock or near-miss): the
+            # timer thread did not escalate, do it synchronously.
+            if self.on_timeout is not None:
+                self.on_timeout(step, elapsed)
+            timed_out.set()
+        if timed_out.is_set():
+            self.fired.append((step, elapsed))
+        return result

@@ -58,7 +58,14 @@ class RecoveryPolicy:
     each attempt (0 disables -- unit tests).
     ``resample_on_rollback``: fold the attempt counter into the refresh RNG
     on reload so stochastic methods draw a fresh subspace.
+    ``stale_worker_action``: what a newly-stale heartbeat escalates to --
+    ``"log"`` records a history event only, ``"rollback"`` raises
+    :class:`RollbackNeeded` (the stale worker may hold diverged or torn
+    state; rewind the fleet to the last verified checkpoint), ``"abort"``
+    kills the run for the external scheduler to restart.
     """
+
+    STALE_ACTIONS = ("log", "rollback", "abort")
 
     skip_nonfinite_updates: bool = True
     max_bad_steps: int = 3
@@ -67,6 +74,14 @@ class RecoveryPolicy:
     max_rollbacks: int = 3
     rollback_backoff_s: float = 0.0
     resample_on_rollback: bool = True
+    stale_worker_action: str = "log"
+
+    def __post_init__(self):
+        if self.stale_worker_action not in self.STALE_ACTIONS:
+            raise ValueError(
+                f"stale_worker_action {self.stale_worker_action!r} not in "
+                f"{self.STALE_ACTIONS}"
+            )
 
     def backoff_s(self, attempt: int) -> float:
         """Sleep before rollback ``attempt`` (1-indexed), doubling."""
@@ -103,9 +118,26 @@ class DivergenceDetector:
         self.streak = 0
         self._window: List[float] = []
 
-    def observe(self, step: int, loss: float, skipped: bool = False) -> None:
-        """Feed one step; raises :class:`RollbackNeeded` on a tripped streak."""
-        if not math.isfinite(loss):
+    def observe(
+        self,
+        step: int,
+        loss: float,
+        skipped: bool = False,
+        verdict: bool = False,
+    ) -> None:
+        """Feed one step; raises :class:`RollbackNeeded` on a tripped streak.
+
+        ``verdict`` is the psum'd cross-process bad-step flag computed
+        inside the jitted step (``metrics["bad_step"]``): it is identical
+        on every process by construction, so feeding it here makes the
+        streak counter -- and therefore the rollback decision -- lockstep
+        across the fleet even when only ONE shard's local loss went bad.
+        The host-local checks stay as a belt-and-braces layer (injected
+        loss faults poison the metric after the psum).
+        """
+        if verdict:
+            bad, why = True, "cross-process bad-step verdict"
+        elif not math.isfinite(loss):
             bad, why = True, "non-finite loss"
         elif skipped:
             bad, why = True, "update skipped (non-finite grads)"

@@ -59,3 +59,15 @@ def checkpoint_converters(optimizer: lowrank_lib.LowRankOptimizer):
         lambda ts: canonical_train_state(optimizer, ts),
         lambda ts: storage_train_state(optimizer, ts),
     )
+
+
+def bucket_canonical_rows(optimizer: lowrank_lib.LowRankOptimizer):
+    """{bucket index -> canonical (pre-ZeRO-pad) row count}, the metadata a
+    shard-parallel checkpoint records so elastic load can strip a writer's
+    inert pad rows before re-padding for the reader's own shard count
+    (DESIGN.md §2.11).  ``None`` for per-leaf (non-bucketed) optimizers --
+    they have no stacks to shard-write."""
+    layout = optimizer.state_layout
+    if layout is None:
+        return None
+    return {i: b.batch for i, b in enumerate(layout.plan.buckets)}

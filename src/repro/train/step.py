@@ -193,6 +193,7 @@ def make_train_step(
     compressed="",  # False/'' | True/'flat' | 'pod'
     donate: bool = True,
     recovery=None,  # Optional[repro.train.recovery.RecoveryPolicy]
+    watchdog=None,  # Optional[repro.train.monitor.CollectiveWatchdog]
 ) -> Dict[str, Callable]:
     """Returns {'step': f(state, batch), 'refresh_step': f, 'jit_*': jitted}.
 
@@ -209,6 +210,20 @@ def make_train_step(
     skip-step gate into both executables (``optimizer.update(...,
     skip_nonfinite=True)``): non-finite gradients leave params and
     optimizer state untouched and surface as ``metrics["skipped"]``.
+
+    Both flavors emit ``metrics["bad_step"]`` -- the coordinated recovery
+    verdict (DESIGN.md §2.11).  In compressed mode it is ONE extra psum of
+    a scalar over the DP axes (any shard's non-finite local loss, OR'd
+    with the already-replica-identical skip flag), so every process reads
+    the SAME verdict and the divergence detector's rollback decision is
+    lockstep across the fleet by construction.  The standard jit flavor
+    emits the local equivalent (XLA SPMD keeps it replica-identical).
+
+    ``watchdog`` (a ``CollectiveWatchdog``) wraps the jitted steps with a
+    bounded ``block_until_ready`` so a hung per-bucket collective is
+    detected instead of stalling forever.  Opt-in: it forces a per-call
+    device sync, trading the loop's deferred metric fetch for bounded
+    detection latency.  Firings key on the jitted call ordinal.
     """
     # normalize the legacy bool form in ONE place, validate early
     compressed = "flat" if compressed is True else (compressed or "")
@@ -270,8 +285,14 @@ def make_train_step(
             "update_norm": aux.update_norm,
             "refresh_overlap": aux.mean_refresh_overlap,
         }
+        # single-jit flavor of the coordinated verdict: no collective
+        # needed, XLA SPMD computes it replica-identically from the
+        # already-reduced loss.
+        bad = (~jnp.isfinite(loss)).astype(jnp.float32)
         if skip_nonfinite:
             out_metrics["skipped"] = aux.skipped
+            bad = jnp.maximum(bad, aux.skipped)
+        out_metrics["bad_step"] = bad
         return TrainState(params, opt_state), out_metrics
 
     def compressed_step_fn(
@@ -375,11 +396,24 @@ def make_train_step(
                 "update_norm": aux.update_norm,
                 "refresh_overlap": aux.mean_refresh_overlap,
             }
+            # Coordinated bad-step verdict: ONE scalar psum over the DP
+            # axes of "my LOCAL (pre-reduction) loss went non-finite",
+            # clamped to a flag -- every shard reads the same value, so
+            # the host-side rollback decision is lockstep by construction
+            # even when only one shard's data went bad.
+            bad = jnp.minimum(
+                jax.lax.psum(
+                    (~jnp.isfinite(loss)).astype(jnp.float32), dp
+                ),
+                1.0,
+            )
             if skip_nonfinite:
                 # post-pmean stacks are replica-identical, so the gate (and
                 # this flag) agree across the DP group -- in ZeRO mode the
                 # update psums the per-shard verdict for the same reason.
                 out_metrics["skipped"] = aux.skipped
+                bad = jnp.maximum(bad, aux.skipped)
+            out_metrics["bad_step"] = bad
             return TrainState(params, opt_state), out_metrics
 
         # ZeRO: bucket stacks are sharded over the DP axes on entry and
@@ -425,6 +459,22 @@ def make_train_step(
     # '' (replicated) | 'zero' -- what the optimizer state layout carries;
     # launchers use it to pick zero placements in shard_train_state.
     fns["state_sharding"] = optimizer.config.state_sharding
+    if watchdog is not None:
+        def _guarded(fn):
+            calls = [0]
+
+            @functools.wraps(fn)
+            def wrapped(*a, **k):
+                out = fn(*a, **k)
+                watchdog.guard(calls[0], out)
+                calls[0] += 1
+                return out
+
+            return wrapped
+
+        fns["jit_step"] = _guarded(fns["jit_step"])
+        fns["jit_refresh_step"] = _guarded(fns["jit_refresh_step"])
+    fns["watchdog"] = watchdog
     return fns
 
 
