@@ -34,6 +34,10 @@ _CHECK_FIELDS = (
     # checkpoint write payload and leaf-file write ops.
     "modeled_ckpt_bytes_per_host",
     "ckpt_save_ops",
+    # rank-elastic engine (ISSUE 9): schedule-aware resident-state peak
+    # and time-average (rank_schedule_bench; DESIGN.md §2.12).
+    "modeled_state_bytes_peak",
+    "modeled_state_bytes_avg",
 )
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 

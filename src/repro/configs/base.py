@@ -98,6 +98,120 @@ SHAPES: Dict[str, ShapeConfig] = {
 
 
 # ---------------------------------------------------------------------------
+# Rank schedule (rank-elastic engine, DESIGN.md §2.12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSchedule:
+    """Rank as a schedule, not a constant (pure data; evaluation lives in
+    core/rank_schedule.py).
+
+    Ranks only move at refresh boundaries -- a rank change reshapes every
+    bucket stack, so the engine re-buckets (rebuild plan/layout, migrate
+    state, re-jit) there and nowhere else.  ``granularity`` quantizes the
+    continuous decay curve to a small set of concrete ranks (each distinct
+    rank is one recompile) and ``hysteresis`` suppresses changes smaller
+    than that many ranks, so a slowly-decaying curve re-buckets a handful
+    of times per run instead of every refresh.
+
+    Kinds:
+      * ``constant`` -- rank stays at ``start`` (the degenerate schedule).
+      * ``step``     -- halve from ``start`` toward ``floor`` in equal
+                        time segments over the decay window.
+      * ``linear``   -- linear interpolation start -> floor.
+      * ``cosine``   -- cosine interpolation start -> floor (AdaRankGrad-
+                        style smooth decay).
+      * ``adaptive`` -- per-group policy: target the measured effective
+                        rank of the refresh-step update spectrum times
+                        ``margin``, clamped to [floor, start].
+
+    ``decay_fraction`` is the fraction of total training steps the decay
+    spans; afterwards the rank holds at ``floor``.  ``total_steps=0``
+    defers the horizon to evaluation time (the train loop passes its own).
+
+    Spec-string syntax (``parse`` / ``spec``), used by config plumbing and
+    ``launch/dryrun.py --rank-schedule``::
+
+        kind:start[:floor][@decay_fraction]     e.g. "cosine:128:32@0.5"
+    """
+
+    kind: str = "constant"  # constant | step | linear | cosine | adaptive
+    start: int = 128  # rank at step 0 (also the ceiling)
+    floor: int = 0  # final/minimum rank; 0 -> start (no decay)
+    decay_fraction: float = 1.0
+    total_steps: int = 0  # 0 -> supplied at evaluation time
+    granularity: int = 8  # ranks snap to multiples of this
+    hysteresis: int = 0  # min |delta| that triggers a change; 0 -> granularity
+    margin: float = 1.25  # adaptive: target = margin * effective_rank
+
+    KINDS = ("constant", "step", "linear", "cosine", "adaptive")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(
+                f"unknown rank-schedule kind {self.kind!r}; have {self.KINDS}"
+            )
+        if self.start < 1:
+            raise ValueError(f"rank schedule start must be >= 1: {self.start}")
+        if self.floor < 0 or self.floor > self.start:
+            raise ValueError(
+                f"rank schedule floor must be in [0, start]: "
+                f"floor={self.floor} start={self.start}"
+            )
+        if not (0.0 < self.decay_fraction <= 1.0):
+            raise ValueError(
+                f"decay_fraction must be in (0, 1]: {self.decay_fraction}"
+            )
+        if self.granularity < 1:
+            raise ValueError(f"granularity must be >= 1: {self.granularity}")
+
+    @property
+    def effective_floor(self) -> int:
+        return self.floor if self.floor > 0 else self.start
+
+    @property
+    def effective_hysteresis(self) -> int:
+        return self.hysteresis if self.hysteresis > 0 else self.granularity
+
+    @classmethod
+    def parse(cls, spec: str, **overrides: Any) -> "RankSchedule":
+        """``"cosine:128:32@0.5"`` -> RankSchedule(kind, start, floor,
+        decay_fraction).  Floor and fraction are optional:
+        ``"constant:64"``, ``"linear:128:32"``."""
+        s = spec.strip()
+        if not s:
+            raise ValueError("empty rank-schedule spec")
+        frac = 1.0
+        if "@" in s:
+            s, frac_s = s.rsplit("@", 1)
+            try:
+                frac = float(frac_s)
+            except ValueError:
+                raise ValueError(
+                    f"bad decay fraction {frac_s!r} in rank schedule {spec!r}"
+                ) from None
+        parts = s.split(":")
+        kind = parts[0]
+        try:
+            start = int(parts[1]) if len(parts) > 1 else 128
+            floor = int(parts[2]) if len(parts) > 2 else 0
+        except ValueError:
+            raise ValueError(f"bad rank-schedule spec {spec!r}") from None
+        if len(parts) > 3:
+            raise ValueError(f"bad rank-schedule spec {spec!r}")
+        kw = dict(kind=kind, start=start, floor=floor, decay_fraction=frac)
+        kw.update(overrides)
+        return cls(**kw)
+
+    def spec(self) -> str:
+        """Inverse of ``parse`` (round-trips the positional fields)."""
+        return (
+            f"{self.kind}:{self.start}:{self.floor}@{self.decay_fraction:g}"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Mesh / runtime
 # ---------------------------------------------------------------------------
 
@@ -119,6 +233,11 @@ class MeshConfig:
 class TrainConfig:
     optimizer: str = "galore-sara-adam"
     rank: int = 128
+    # Rank-elastic training (DESIGN.md §2.12): a RankSchedule spec string
+    # ("cosine:128:32@0.5"); "" keeps rank static.  When set, the launcher
+    # builds the optimizer at the schedule's step-0 rank and the train
+    # loop re-buckets at refresh boundaries as the scheduled rank moves.
+    rank_schedule: str = ""
     tau: int = 200
     alpha: float = 0.25
     lr: float = 0.01
@@ -138,6 +257,11 @@ class TrainConfig:
     # microbatches.  The accumulated gradient is cast back to the param
     # dtype either way, so both paths hand the optimizer the same dtype.
     accum_dtype: Any = "float32"
+    # Refresh-cadence singular-spectrum probe (train/monitor.SpectrumLogger):
+    # log the update spectrum's effective rank per refresh group -- the
+    # adaptive rank policy's input signal.  One host-side SVD of a probe
+    # leaf per refresh; default off so bench runs pay nothing.
+    log_spectrum: bool = False
     # fault tolerance
     checkpoint_every: int = 500
     keep_checkpoints: int = 3

@@ -114,6 +114,14 @@ def build_bucket_plan(
     on the bucket) for the orientation-sensitive quantized inners
     (``SIDE_HOMOGENEOUS_INNERS``) -- a (96, 32) down-projection then gets
     its own bucket instead of sharing the (32, 96) up-projection's.
+
+    The per-leaf effective rank is clamped to ``min(d, n)`` HERE, at plan
+    time: a spec whose rank exceeds the projected dim (tiny leaves under a
+    large configured rank) must not bake an impossible (d, r) projector
+    shape into the bucket key -- that surfaces later as an opaque kernel
+    shape failure.  ``build_specs`` applies the same clamp, so for specs it
+    built this is a no-op; plans built from hand-rolled specs get the same
+    guarantee.  A rank < 1 is a configuration error and raises.
     """
     groups: Dict[Tuple, List[BucketEntry]] = {}
     for i, (spec, leaf) in enumerate(zip(flat_specs, flat_params)):
@@ -121,10 +129,17 @@ def build_bucket_plan(
             continue
         m, n = leaf.shape[-2], leaf.shape[-1]
         d_c, n_c = (m, n) if spec.side == "left" else (n, m)
+        if spec.rank < 1:
+            raise ValueError(
+                f"bucket plan: leaf {i} ({spec.path!r}, shape "
+                f"{tuple(leaf.shape)}) has rank {spec.rank}; rank must be "
+                ">= 1 for every low-rank leaf"
+            )
+        eff_rank = min(spec.rank, d_c)
         b = 1
         for s in leaf.shape[:-2]:
             b *= s
-        key = (d_c, n_c, spec.rank, jnp.dtype(leaf.dtype).name)
+        key = (d_c, n_c, eff_rank, jnp.dtype(leaf.dtype).name)
         if split_sides:
             key = key + (spec.side,)
         groups.setdefault(key, []).append(BucketEntry(i, spec.side, b))
@@ -1390,6 +1405,7 @@ def dp_comm_model(
     axis_sizes: Optional[Dict[str, int]] = None,
     state_shards: int = 1,
     inner: str = "adam",
+    rank_plans: Optional[Sequence[Tuple[float, BucketPlan]]] = None,
 ) -> Dict[str, Any]:
     """Modeled per-replica DP gradient-reduction payload per step.
 
@@ -1516,4 +1532,22 @@ def dp_comm_model(
                 out["compressed_hot"]["bytes"] if pod_n > 1 else 0
             ),
         }
+    if rank_plans:
+        # Schedule-aware resident-state model (DESIGN.md §2.12): the rank
+        # schedule holds a sequence of static-rank segments, each with its
+        # own bucket plan.  ``rank_plans`` is ``[(weight, plan), ...]``
+        # with weights summing to 1 (fraction of training spent in that
+        # segment, core/rank_schedule.schedule_plan_weights); peak is the
+        # provisioning number, the time-weighted average the actual
+        # memory-integral win over a static run at the peak rank.
+        seg_bytes = [
+            (w, modeled_state_bytes(p, inner=inner,
+                                    shards=max(state_shards, 1))["total"])
+            for w, p in rank_plans
+        ]
+        wsum = sum(w for w, _ in seg_bytes) or 1.0
+        out["modeled_state_bytes_peak"] = max(b for _, b in seg_bytes)
+        out["modeled_state_bytes_avg"] = (
+            sum(w * b for w, b in seg_bytes) / wsum
+        )
     return out

@@ -101,6 +101,18 @@ class OptimizerConfig:
     method: str = "sara"  # full|dominant|sara|golore|grass|online_pca|identity
     inner: str = "adam"
     rank: int = 128
+    # Rank-elastic engine (DESIGN.md §2.12): a configs.base.RankSchedule
+    # spec string ("cosine:128:32@0.5") declaring how rank moves over
+    # training; "" keeps it static.  The schedule is evaluated HOST-SIDE
+    # at refresh boundaries only (core/rank_schedule.py) -- a rank change
+    # reshapes every bucket, so the train loop re-buckets (rebuild via
+    # ``rebuild_at_rank``, migrate state, re-jit) rather than tracing it.
+    rank_schedule: str = ""
+    # Per-group rank overrides (adaptive schedules): when non-empty, leaf
+    # rank = min(group_ranks[spec.group], d) instead of cfg.rank; length
+    # must equal refresh_groups.  Produced by the adaptive policy -- the
+    # global decay schedules leave it empty and move cfg.rank instead.
+    group_ranks: Tuple[int, ...] = ()
     tau: int = 200
     alpha: float = 0.25  # GaLore scale factor applied to the low-rank update
     lr: float = 0.01
@@ -275,8 +287,11 @@ def build_specs(
             lowrank = default_lowrank_filter(ps, leaf.shape, cfg)
         if lowrank:
             side = proj_lib.projection_side(leaf.shape)
-            rank = min(cfg.rank, proj_lib.projector_dim(leaf.shape))
             group = n_lowrank % max(cfg.refresh_groups, 1)
+            base_rank = (
+                cfg.group_ranks[group] if cfg.group_ranks else cfg.rank
+            )
+            rank = min(base_rank, proj_lib.projector_dim(leaf.shape))
             n_lowrank += 1
         else:
             side, rank, group = "left", 0, 0
@@ -333,6 +348,23 @@ def make_lowrank_optimizer(
         raise ValueError(f"unknown state_sharding {cfg.state_sharding!r}")
     if cfg.state_sharding == "zero" and cfg.state_shards < 1:
         raise ValueError(f"state_shards must be >= 1, got {cfg.state_shards}")
+    if cfg.rank < 1:
+        raise ValueError(f"rank must be >= 1, got {cfg.rank}")
+    if cfg.group_ranks:
+        if len(cfg.group_ranks) != max(cfg.refresh_groups, 1):
+            raise ValueError(
+                f"group_ranks has {len(cfg.group_ranks)} entries for "
+                f"{max(cfg.refresh_groups, 1)} refresh groups"
+            )
+        if any(r < 1 for r in cfg.group_ranks):
+            raise ValueError(f"group_ranks must all be >= 1: {cfg.group_ranks}")
+    if cfg.rank_schedule:
+        # Fail at build time, not at the first refresh boundary: the
+        # schedule itself is evaluated by the train loop / dryrun
+        # (core/rank_schedule.py); here we only validate the spec parses.
+        from repro.configs.base import RankSchedule
+
+        RankSchedule.parse(cfg.rank_schedule)
     specs = build_specs(params_like, cfg, lowrank_filter)
     inner = cfg.make_inner()
     pcfg = cfg.projector_config()
@@ -865,6 +897,45 @@ def make_lowrank_optimizer(
         init=init, update=update, specs=specs, config=cfg,
         bucket_plan=bucket_plan, state_layout=state_layout,
     )
+
+
+def rebuild_at_rank(
+    optimizer: "LowRankOptimizer",
+    params_like: PyTree,
+    *,
+    rank: Optional[int] = None,
+    group_ranks: Optional[Tuple[int, ...]] = None,
+    lowrank_filter: Optional[Callable] = None,
+) -> "LowRankOptimizer":
+    """The re-bucketing half of the rank-elastic engine (DESIGN.md §2.12):
+    the same optimizer config at a new (global or per-group) rank -- fresh
+    specs, fresh ``BucketPlan``/``StateLayout`` for the new
+    ``(d, n, rank, dtype)`` keys, fresh jittable update.  Live state does
+    NOT carry over automatically; migrate it with
+    ``core.rank_schedule.migrate_opt_state`` before feeding it to the
+    rebuilt optimizer.  ``lowrank_filter`` must match the one the original
+    optimizer was built with (the default filter when None)."""
+    kw: Dict[str, Any] = {}
+    if rank is not None:
+        kw["rank"] = rank
+        kw["group_ranks"] = ()
+    if group_ranks is not None:
+        kw["group_ranks"] = tuple(group_ranks)
+    if not kw:
+        raise ValueError("rebuild_at_rank needs rank or group_ranks")
+    cfg = dataclasses.replace(optimizer.config, **kw)
+    return make_lowrank_optimizer(cfg, params_like, lowrank_filter)
+
+
+def current_ranks(optimizer: "LowRankOptimizer") -> Tuple[int, Tuple[int, ...]]:
+    """(global rank, per-group ranks) the optimizer was built at -- the
+    schedule state a checkpoint carries so resume rebuilds the same
+    bucket geometry before loading."""
+    cfg = optimizer.config
+    groups = max(cfg.refresh_groups, 1)
+    if cfg.group_ranks:
+        return max(cfg.group_ranks), tuple(cfg.group_ranks)
+    return cfg.rank, (cfg.rank,) * groups
 
 
 def _safe_ratio(num: jax.Array, den: jax.Array) -> jax.Array:

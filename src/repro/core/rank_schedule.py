@@ -1,0 +1,467 @@
+"""Rank-elastic engine (DESIGN.md §2.12): evaluation, migration, models.
+
+``configs.base.RankSchedule`` is the pure-data half (kinds, clamps, spec
+strings); this module is everything that *acts* on it:
+
+  * ``scheduled_rank`` / ``propose_adaptive_rank`` -- evaluate the schedule
+    at a refresh boundary.  Both return plain python ints computed
+    HOST-SIDE: rank changes reshape every bucket stack, so the scheduled
+    rank must be static (it picks which compiled executable runs, it is
+    never traced).
+  * ``migrate_opt_state`` -- move live optimizer state across a rank
+    change through the canonical per-leaf layout (the PR 2 lossless
+    converters), per the migration rules of DESIGN.md §2.12: projectors
+    truncate (shrink) or zero-pad (grow, inert until the next refresh
+    redraws them), moments slice / zero-extend along their rank axis
+    under ``keep``/``reproject`` carry (truncation makes the reproject
+    carry ``C = P2^T P1 = [I 0]`` exactly a slice) and re-initialize
+    under ``reset``.  Quantized adam8bit state migrates at the CODE
+    level -- codes and scales slice/extend with the canonical zero codes
+    (127 signed / 0 unsigned, scale 1.0) as fill, so surviving blocks
+    keep their scales and nothing re-quantizes.
+  * ``rank_trajectory`` / ``schedule_rank_plans`` /
+    ``scheduled_state_model`` / ``rebucket_cost_model`` -- the
+    schedule-aware memory and cost models ``launch/dryrun.py`` and
+    ``benchmarks/kernels_micro.rank_schedule_bench`` record (peak vs
+    time-weighted average ``modeled_state_bytes``, re-bucket migration
+    cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RankSchedule
+from repro.core import buckets as buckets_lib
+from repro.core import inner as inner_lib
+from repro.core import lowrank as lowrank_lib
+from repro.kernels.lowrank_update import quantize as qz
+
+PyTree = Any
+
+__all__ = [
+    "RankSchedule",
+    "parse_rank_schedule",
+    "scheduled_rank",
+    "propose_adaptive_rank",
+    "rank_trajectory",
+    "plan_at_rank",
+    "schedule_rank_plans",
+    "scheduled_state_model",
+    "rebucket_cost_model",
+    "migrate_opt_state",
+]
+
+
+def parse_rank_schedule(spec: str, **overrides: Any) -> RankSchedule:
+    """``"cosine:128:32@0.5"`` -> RankSchedule (configs.base.parse)."""
+    return RankSchedule.parse(spec, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# schedule evaluation (host-side python ints)
+# ---------------------------------------------------------------------------
+
+
+def _quantize_rank(sched: RankSchedule, raw: float) -> int:
+    """Snap to the granularity grid, clamp to [floor, start]."""
+    q = max(sched.granularity, 1)
+    r = int(round(raw / q)) * q
+    return max(sched.effective_floor, min(sched.start, max(r, 1)))
+
+
+def _apply_hysteresis(
+    sched: RankSchedule, proposed: int, current: Optional[int]
+) -> int:
+    if current is None:
+        return proposed
+    if abs(proposed - current) < sched.effective_hysteresis:
+        return current
+    return proposed
+
+
+def _step_levels(sched: RankSchedule) -> List[int]:
+    """The halving ladder of kind='step': start, start/2, ..., floor."""
+    levels = [sched.start]
+    floor = sched.effective_floor
+    while levels[-1] > floor:
+        levels.append(max(levels[-1] // 2, floor))
+    return levels
+
+
+def scheduled_rank(
+    sched: RankSchedule,
+    step: int,
+    *,
+    total_steps: Optional[int] = None,
+    current: Optional[int] = None,
+) -> int:
+    """The scheduled global rank at ``step`` -- a plain python int.
+
+    ``total_steps`` supplies the horizon when the schedule carries none
+    (``sched.total_steps == 0``).  ``current`` is the rank the engine is
+    built at right now; passing it enables hysteresis (changes smaller
+    than ``effective_hysteresis`` return ``current`` unchanged).  The
+    ``adaptive`` kind has no closed form -- it returns ``current`` (or
+    ``start``); drive it with ``propose_adaptive_rank`` instead.
+    """
+    if sched.kind == "constant":
+        return _apply_hysteresis(sched, sched.start, current)
+    if sched.kind == "adaptive":
+        return current if current is not None else sched.start
+    horizon = sched.total_steps or (total_steps or 0)
+    if horizon <= 0:
+        raise ValueError(
+            f"rank schedule kind {sched.kind!r} needs a horizon: set "
+            "total_steps on the schedule or pass total_steps="
+        )
+    window = max(int(round(horizon * sched.decay_fraction)), 1)
+    frac = min(max(step, 0), window) / window
+    floor = sched.effective_floor
+    if sched.kind == "step":
+        levels = _step_levels(sched)
+        raw = float(levels[min(int(frac * len(levels)), len(levels) - 1)])
+    elif sched.kind == "linear":
+        raw = sched.start + (floor - sched.start) * frac
+    else:  # cosine
+        raw = floor + 0.5 * (sched.start - floor) * (
+            1.0 + math.cos(math.pi * frac)
+        )
+    return _apply_hysteresis(sched, _quantize_rank(sched, raw), current)
+
+
+def propose_adaptive_rank(
+    sched: RankSchedule,
+    current: Optional[int],
+    effective_rank: float,
+) -> int:
+    """The per-group adaptive policy: target ``margin`` times the measured
+    effective rank of the refresh-step update spectrum
+    (core/metrics.effective_rank, logged by train/monitor.SpectrumLogger),
+    quantized and clamped like every other kind, with hysteresis against
+    the group's current rank.  A non-finite or non-positive measurement
+    proposes no change."""
+    if not (effective_rank > 0.0) or not math.isfinite(effective_rank):
+        return current if current is not None else sched.start
+    proposed = _quantize_rank(sched, sched.margin * float(effective_rank))
+    return _apply_hysteresis(sched, proposed, current)
+
+
+def rank_trajectory(
+    sched: RankSchedule,
+    *,
+    total_steps: int,
+    sub_tau: int = 1,
+) -> List[Tuple[int, int]]:
+    """Distinct-rank segments ``[(start_step, rank), ...]`` of a run that
+    evaluates the schedule at every refresh boundary (``sub_tau`` steps
+    apart, hysteresis applied sequentially -- exactly what the train loop
+    does).  Adaptive schedules have no offline trajectory and model as a
+    single segment at ``start``."""
+    if total_steps < 1:
+        raise ValueError(f"total_steps must be >= 1, got {total_steps}")
+    stride = max(sub_tau, 1)
+    traj: List[Tuple[int, int]] = []
+    current: Optional[int] = None
+    for step in range(0, total_steps, stride):
+        r = scheduled_rank(
+            sched, step, total_steps=total_steps, current=current
+        )
+        if current is None or r != current:
+            traj.append((step, r))
+            current = r
+    return traj
+
+
+# ---------------------------------------------------------------------------
+# schedule-aware memory / cost models
+# ---------------------------------------------------------------------------
+
+
+def plan_at_rank(
+    cfg: "lowrank_lib.OptimizerConfig",
+    params_like: PyTree,
+    rank: int,
+    lowrank_filter: Optional[Callable] = None,
+) -> buckets_lib.BucketPlan:
+    """The bucket plan this config would build at a given global rank
+    (shape-only: ``params_like`` may hold ShapeDtypeStructs)."""
+    cfg_r = dataclasses.replace(cfg, rank=int(rank), group_ranks=())
+    specs = lowrank_lib.build_specs(params_like, cfg_r, lowrank_filter)
+    is_spec = lambda x: isinstance(x, lowrank_lib.LeafSpec)  # noqa: E731
+    flat_specs, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    flat_params = treedef.flatten_up_to(params_like)
+    return buckets_lib.build_bucket_plan(
+        flat_specs, flat_params,
+        split_sides=cfg.inner in buckets_lib.SIDE_HOMOGENEOUS_INNERS,
+    )
+
+
+def schedule_rank_plans(
+    cfg: "lowrank_lib.OptimizerConfig",
+    params_like: PyTree,
+    sched: RankSchedule,
+    *,
+    total_steps: int,
+    sub_tau: Optional[int] = None,
+    lowrank_filter: Optional[Callable] = None,
+) -> List[Tuple[float, buckets_lib.BucketPlan]]:
+    """``[(time_weight, plan), ...]`` over the schedule's distinct-rank
+    segments -- the ``rank_plans`` input of ``buckets.dp_comm_model``.
+    Weights sum to 1; segments at the same rank share one plan entry."""
+    if sub_tau is None:
+        sub_tau = max(cfg.tau // max(cfg.refresh_groups, 1), 1)
+    traj = rank_trajectory(sched, total_steps=total_steps, sub_tau=sub_tau)
+    weights: Dict[int, float] = {}
+    for i, (start, rank) in enumerate(traj):
+        end = traj[i + 1][0] if i + 1 < len(traj) else total_steps
+        weights[rank] = weights.get(rank, 0.0) + (end - start) / total_steps
+    return [
+        (w, plan_at_rank(cfg, params_like, r, lowrank_filter))
+        for r, w in sorted(weights.items(), reverse=True)
+    ]
+
+
+def scheduled_state_model(
+    cfg: "lowrank_lib.OptimizerConfig",
+    params_like: PyTree,
+    sched: RankSchedule,
+    *,
+    total_steps: int,
+    sub_tau: Optional[int] = None,
+    state_shards: int = 1,
+    lowrank_filter: Optional[Callable] = None,
+) -> Dict[str, Any]:
+    """Schedule-aware resident-state model: the memory trajectory over the
+    run, its peak (the provisioning number) and time-weighted average (the
+    memory-integral actually paid), against the static baseline that holds
+    ``sched.start`` for the whole run."""
+    if sub_tau is None:
+        sub_tau = max(cfg.tau // max(cfg.refresh_groups, 1), 1)
+    traj = rank_trajectory(sched, total_steps=total_steps, sub_tau=sub_tau)
+    shards = max(state_shards, 1)
+    weights: Dict[int, float] = {}
+    for i, (start, rank) in enumerate(traj):
+        end = traj[i + 1][0] if i + 1 < len(traj) else total_steps
+        weights[rank] = weights.get(rank, 0.0) + (end - start) / total_steps
+    plan_at: Dict[int, buckets_lib.BucketPlan] = {}
+    bytes_at: Dict[int, float] = {}
+
+    def _rank_bytes(rank: int) -> float:
+        if rank not in bytes_at:
+            plan_at[rank] = plan_at_rank(cfg, params_like, rank,
+                                         lowrank_filter)
+            bytes_at[rank] = buckets_lib.modeled_state_bytes(
+                plan_at[rank], inner=cfg.inner, shards=shards
+            )["total"]
+        return bytes_at[rank]
+
+    static = _rank_bytes(sched.start)
+    seg = [(w, _rank_bytes(r)) for r, w in weights.items()]
+    plans = [
+        (w, plan_at[r])
+        for r, w in sorted(weights.items(), reverse=True)
+    ]
+    avg = sum(w * b for w, b in seg) / (sum(w for w, _ in seg) or 1.0)
+    peak = max(b for _, b in seg)
+    return {
+        "schedule": sched.spec(),
+        "sub_tau": sub_tau,
+        "total_steps": total_steps,
+        "trajectory": [
+            {"step": s, "rank": r, "modeled_state_bytes": _rank_bytes(r)}
+            for s, r in traj
+        ],
+        "num_rebuckets": max(len(traj) - 1, 0),
+        "modeled_state_bytes_peak": peak,
+        "modeled_state_bytes_avg": avg,
+        "modeled_state_bytes_static": static,
+        "avg_savings_vs_static": 1.0 - avg / static if static else 0.0,
+        "rank_plans": plans,
+    }
+
+
+def _migrated_fields(inner: str) -> int:
+    """Buffers migrated per bucket at a re-bucket event (mirrors
+    ``sharded_ckpt_model``'s field count): projector + live moment
+    buffers."""
+    if inner == "msgd":
+        return 2
+    if inner == "adam8bit":
+        return 5
+    return 3
+
+
+def rebucket_cost_model(
+    old_plan: buckets_lib.BucketPlan,
+    new_plan: buckets_lib.BucketPlan,
+    inner: str = "adam",
+) -> Dict[str, float]:
+    """Modeled cost of ONE re-bucket event: every live state buffer of the
+    old layout is read (canonicalize + slice) and the new layout's written
+    (extend + re-stack), so HBM traffic is the sum of both footprints;
+    dispatched ops count one slice-or-pad per stack buffer per side."""
+    old_b = buckets_lib.modeled_state_bytes(old_plan, inner=inner)["total"]
+    new_b = buckets_lib.modeled_state_bytes(new_plan, inner=inner)["total"]
+    fields = _migrated_fields(inner)
+    return {
+        "modeled_hbm_bytes": float(old_b + new_b),
+        "dispatched_ops": float(
+            fields * (len(old_plan.buckets) + len(new_plan.buckets))
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# live-state migration across a rank change (DESIGN.md §2.12)
+# ---------------------------------------------------------------------------
+
+
+def _resize_axis(x: jax.Array, axis: int, new: int, fill=0) -> jax.Array:
+    """Slice (shrink) or constant-pad (grow) one axis to length ``new``."""
+    old = x.shape[axis]
+    if new == old:
+        return x
+    if new < old:
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, new)
+        return x[tuple(idx)]
+    pad_shape = list(x.shape)
+    pad_shape[axis] = new - old
+    pad = jnp.full(pad_shape, fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=axis)
+
+
+def _migrate_inner_state(st: Any, side: str, r2: int) -> Any:
+    """Slice / zero-extend one canonical per-leaf inner state along its
+    rank axis (the ``keep`` carry; under projector truncation the
+    ``reproject`` carry ``C = P2^T P1 = [I 0]`` reduces to the same
+    slice).  Rank axis per side: left-side R-space moments are
+    ``(..., r, n)`` (axis -2), right-side ``(..., m, r)`` (axis -1);
+    per-row statistics follow their own shapes (adam_mini's v is
+    ``m.shape[:-1]``, adafactor's vr/vc are the row/col statistics).
+
+    adam8bit migrates at the CODE level: codes resize with the canonical
+    zero code as fill (127 signed / 0 unsigned -- both dequantize to 0
+    under ANY scale), scales with 1.0 (the all-zero-block scale).  On the
+    right side the blockwise partition runs ALONG the rank axis, so the
+    scale plane resizes to ``num_blocks(r2)`` -- surviving elements keep
+    their block positions and old scales, so dequantization of everything
+    kept is bit-exact and nothing re-quantizes."""
+    if isinstance(st, inner_lib.Adam8bitState):
+        if side == "left":
+            return inner_lib.Adam8bitState(
+                m_codes=_resize_axis(st.m_codes, -2, r2, fill=127),
+                m_scale=_resize_axis(st.m_scale, -2, r2, fill=1.0),
+                v_codes=_resize_axis(st.v_codes, -2, r2, fill=0),
+                v_scale=_resize_axis(st.v_scale, -2, r2, fill=1.0),
+            )
+        nb2 = qz.num_blocks(r2)
+        return inner_lib.Adam8bitState(
+            m_codes=_resize_axis(st.m_codes, -1, r2, fill=127),
+            m_scale=_resize_axis(st.m_scale, -1, nb2, fill=1.0),
+            v_codes=_resize_axis(st.v_codes, -1, r2, fill=0),
+            v_scale=_resize_axis(st.v_scale, -1, nb2, fill=1.0),
+        )
+    if isinstance(st, inner_lib.AdamState):
+        ax = -2 if side == "left" else -1
+        return inner_lib.AdamState(
+            m=_resize_axis(st.m, ax, r2), v=_resize_axis(st.v, ax, r2)
+        )
+    if isinstance(st, inner_lib.MSGDState):
+        ax = -2 if side == "left" else -1
+        return inner_lib.MSGDState(m=_resize_axis(st.m, ax, r2))
+    if isinstance(st, inner_lib.AdamMiniState):
+        if side == "left":
+            # v is one scalar per R-space basis row: m.shape[:-1]
+            return inner_lib.AdamMiniState(
+                m=_resize_axis(st.m, -2, r2), v=_resize_axis(st.v, -1, r2)
+            )
+        return inner_lib.AdamMiniState(m=_resize_axis(st.m, -1, r2), v=st.v)
+    if isinstance(st, inner_lib.AdafactorState):
+        if side == "left":
+            return inner_lib.AdafactorState(
+                m=_resize_axis(st.m, -2, r2),
+                vr=_resize_axis(st.vr, -1, r2), vc=st.vc, v=st.v,
+            )
+        return inner_lib.AdafactorState(
+            m=_resize_axis(st.m, -1, r2),
+            vr=st.vr, vc=_resize_axis(st.vc, -1, r2), v=st.v,
+        )
+    raise TypeError(
+        f"don't know how to migrate inner state {type(st).__name__} across "
+        "a rank change"
+    )
+
+
+def _moment_shape(st: Any) -> Tuple[int, ...]:
+    if isinstance(st, inner_lib.Adam8bitState):
+        return st.m_codes.shape
+    return st.m.shape
+
+
+def migrate_opt_state(
+    old_opt: "lowrank_lib.LowRankOptimizer",
+    new_opt: "lowrank_lib.LowRankOptimizer",
+    state: "lowrank_lib.LowRankOptState",
+) -> "lowrank_lib.LowRankOptState":
+    """Carry live optimizer state across a rank change.
+
+    Routes through the canonical per-leaf layout (``canonical_opt_state``
+    -> per-leaf resize -> ``storage_opt_state``), so every storage detail
+    -- bucket stacking, ZeRO pad rows, quantized code planes -- is
+    handled by the PR 2 lossless converters and the migration itself is a
+    pure per-leaf slice/pad.  Per leaf (old rank r1 -> new rank r2):
+
+      * projector ``(.., d, r1)``: truncate trailing columns (shrink) or
+        zero-pad (grow).  Zero columns are inert -- they project to zero
+        rows and back-project nothing -- until the next refresh redraws
+        the projector at full r2.
+      * moments: ``momentum_carry in ("keep", "reproject")`` slices /
+        zero-extends the rank axis (truncation makes reproject's carry
+        matrix ``[I 0]``, i.e. exactly the slice); ``"reset"`` re-inits
+        at the new shape.  adam8bit resizes codes and scales directly
+        with canonical zero-code fill, re-quantizing nothing.
+
+    ``step`` and the refresh ``key`` pass through unchanged, so the RNG
+    schedule is preserved.  Both optimizers must share one param treedef
+    and lowrank plan (``rebuild_at_rank`` guarantees this)."""
+    cfg = new_opt.config
+    inner = cfg.make_inner()
+    canon = lowrank_lib.canonical_opt_state(old_opt, state)
+    is_spec = lambda x: isinstance(x, lowrank_lib.LeafSpec)  # noqa: E731
+    old_flat, treedef = jax.tree_util.tree_flatten(
+        old_opt.specs, is_leaf=is_spec
+    )
+    new_flat = treedef.flatten_up_to(new_opt.specs)
+    flat_states = treedef.flatten_up_to(canon.leaves)
+    out = []
+    for old_spec, new_spec, st in zip(old_flat, new_flat, flat_states):
+        if old_spec.lowrank != new_spec.lowrank:
+            raise ValueError(
+                f"leaf {old_spec.path!r} changed lowrank-ness across the "
+                "rebuild; rebuild_at_rank must keep the lowrank filter"
+            )
+        if not old_spec.lowrank or old_spec.rank == new_spec.rank:
+            out.append(st)
+            continue
+        r2 = new_spec.rank
+        proj = _resize_axis(st.projector, -1, r2, fill=0)
+        if cfg.momentum_carry == "reset":
+            rshape = _moment_shape(_migrate_inner_state(st.inner,
+                                                        new_spec.side, r2))
+            inner_state = inner.init(jnp.zeros(rshape, jnp.float32))
+        else:
+            inner_state = _migrate_inner_state(st.inner, new_spec.side, r2)
+        out.append(
+            lowrank_lib.LeafState(projector=proj, inner=inner_state)
+        )
+    leaves = jax.tree_util.tree_unflatten(treedef, out)
+    migrated = lowrank_lib.LowRankOptState(
+        step=canon.step, key=canon.key, leaves=leaves, buckets=()
+    )
+    return lowrank_lib.storage_opt_state(new_opt, migrated)

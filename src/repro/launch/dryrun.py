@@ -86,6 +86,16 @@ def _build_cell(arch: str, shape_name: str, args, mesh=None):
 
     if shape.kind == "train":
         rank = args.rank or min(512, max(128, cfg.d_model // 4))
+        sched_kw = {}
+        if getattr(args, "rank_schedule", ""):
+            from repro.core import rank_schedule as rank_schedule_lib
+
+            sched = rank_schedule_lib.parse_rank_schedule(args.rank_schedule)
+            if not args.rank:
+                # compile the step-0 geometry: the schedule starts here and
+                # re-buckets downward at refresh boundaries (DESIGN.md §2.12)
+                rank = sched.start
+            sched_kw = dict(rank_schedule=args.rank_schedule)
         zero_kw = {}
         if getattr(args, "state_sharding", "") == "zero" and mesh is not None:
             # shard count = DP replica count of the axes the compressed
@@ -104,6 +114,7 @@ def _build_cell(arch: str, shape_name: str, args, mesh=None):
             rank=rank, tau=200, lr=0.01,
             svd_backend="randomized",
             refresh_groups=args.refresh_groups,
+            **sched_kw,
             **zero_kw,
         )
         opt_state_shape = jax.eval_shape(opt.init, params_shape)
@@ -157,10 +168,34 @@ def _dp_comm_model(cell, mesh=None) -> dict:
                       if a in mesh.axis_names}
     shards = (opt.state_layout.shards
               if opt.state_layout is not None else 1)
-    return buckets_lib.dp_comm_model(
+    rank_plans = None
+    sched_model = None
+    if opt.config.rank_schedule:
+        from repro.configs.base import TrainConfig
+        from repro.core import rank_schedule as rank_schedule_lib
+
+        sched = rank_schedule_lib.parse_rank_schedule(
+            opt.config.rank_schedule
+        )
+        horizon = sched.total_steps or TrainConfig().total_steps
+        rank_plans = rank_schedule_lib.schedule_rank_plans(
+            opt.config, cell["params_shape"], sched, total_steps=horizon,
+        )
+        sched_model = rank_schedule_lib.scheduled_state_model(
+            opt.config, cell["params_shape"], sched, total_steps=horizon,
+            state_shards=shards,
+        )
+        sched_model.pop("rank_plans", None)  # BucketPlans: not JSON
+    out = buckets_lib.dp_comm_model(
         plan, flat_params, axis_sizes=axis_sizes,
         state_shards=shards, inner=opt.config.inner,
+        rank_plans=rank_plans,
     )
+    if sched_model is not None:
+        # the schedule-aware resident-state trajectory (peak / average /
+        # static baseline / per-segment steps) travels with the artifact
+        out["rank_schedule"] = sched_model
+    return out
 
 
 def _compile_cell(cell, mesh, args):
@@ -335,6 +370,12 @@ def main(argv=None) -> int:
     parser.add_argument("--all", action="store_true")
     parser.add_argument("--optimizer", default="galore-sara-adam")
     parser.add_argument("--rank", type=int, default=0)
+    parser.add_argument("--rank-schedule", default="",
+                        help="rank schedule spec 'kind:start[:floor]"
+                             "[@decay_fraction]' (e.g. cosine:128:32@0.5): "
+                             "builds the step-0 geometry and records the "
+                             "schedule-aware memory trajectory (peak/avg "
+                             "modeled_state_bytes) in the artifact")
     parser.add_argument("--refresh", action="store_true",
                         help="lower the projector-refresh step instead")
     parser.add_argument("--refresh-groups", type=int, default=1)

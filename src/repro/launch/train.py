@@ -39,6 +39,13 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--warmup", type=int, default=100)
     ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--rank-schedule", default="",
+                    help="rank schedule 'kind:start[:floor][@decay_fraction]'"
+                         " (e.g. cosine:128:32@0.5): the loop re-buckets at "
+                         "refresh boundaries (DESIGN.md §2.12)")
+    ap.add_argument("--log-spectrum", action="store_true",
+                    help="log the refresh-step update spectrum "
+                         "(effective rank) into the history")
     ap.add_argument("--tau", type=int, default=200)
     ap.add_argument("--alpha", type=float, default=0.25)
     ap.add_argument("--seq", type=int, default=0)
@@ -111,6 +118,12 @@ def main() -> None:
         mesh = make_mesh(shape)
 
     rank = args.rank or min(512, max(8, cfg.d_model // 4))
+    if args.rank_schedule and not args.rank:
+        from repro.core.rank_schedule import parse_rank_schedule
+
+        # start at the schedule's step-0 rank; the loop re-buckets from
+        # there at refresh boundaries
+        rank = parse_rank_schedule(args.rank_schedule).start
     kw = dict(
         lr=args.lr,
         lr_schedule=cosine_with_warmup(args.lr, args.warmup, args.steps),
@@ -130,6 +143,8 @@ def main() -> None:
     if args.optimizer != "adam":
         kw.update(rank=rank, tau=args.tau, alpha=args.alpha,
                   refresh_groups=args.refresh_groups)
+        if args.rank_schedule:
+            kw["rank_schedule"] = args.rank_schedule
     opt = make_optimizer(args.optimizer, params, **kw)
 
     seq = args.seq or (64 if args.smoke else 512)
@@ -148,6 +163,8 @@ def main() -> None:
         total_steps=args.steps, checkpoint_every=args.ckpt_every,
         checkpoint_dir=args.ckpt_dir, microbatch=args.microbatch,
         sharded_checkpoint=not args.no_sharded_ckpt,
+        rank_schedule=args.rank_schedule,
+        log_spectrum=args.log_spectrum,
     )
     recovery = None
     if not args.no_recovery:

@@ -232,6 +232,18 @@ def verify_checkpoint(base: str, step: int) -> bool:
     return True
 
 
+def checkpoint_meta(base: str, step: int) -> Dict[str, Any]:
+    """The manifest's ``meta`` dict (schedule state: the rank(s) the run
+    was built at when it saved -- DESIGN.md §2.12); ``{}`` for checkpoints
+    written before rank-elastic training or without a schedule.  Raises
+    ``OSError``/``ValueError`` for a missing/torn manifest, same surface
+    as ``load``."""
+    cdir = os.path.join(base, f"step_{step:08d}")
+    with open(os.path.join(cdir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    return dict(manifest.get("meta", {}))
+
+
 def _write_checkpoint(
     base: str,
     step: int,
@@ -239,6 +251,7 @@ def _write_checkpoint(
     paths,
     keep: int,
     io: Optional[CheckpointIO] = None,
+    meta: Optional[Dict[str, Any]] = None,
 ):
     io = io or CheckpointIO()
     os.makedirs(base, exist_ok=True)
@@ -248,6 +261,8 @@ def _write_checkpoint(
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+    if meta:
+        manifest["meta"] = meta
     for path, arr in zip(paths, host_leaves):
         fname = _sanitize(path) + ".npy"
         fpath = os.path.join(tmp, fname)
@@ -316,9 +331,31 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
+    def rebind(
+        self,
+        canonicalize=None,
+        localize=None,
+        canonical_rows: Optional[Dict[int, int]] = None,
+    ) -> None:
+        """Re-target this manager at a re-bucketed optimizer (rank-elastic
+        re-bucket event, DESIGN.md §2.12): swap in the new layout's
+        canonical<->storage converters and bucket row counts while keeping
+        the manager itself -- its in-flight async save (drained first),
+        retry counters, and retention history must survive the rebuild."""
+        self.wait()  # converters must not change under a background write
+        self.canonicalize = canonicalize
+        self.localize = localize
+        self.canonical_rows = dict(canonical_rows or {})
+
     # ---- save ----
 
-    def save(self, state: PyTree, step: int, blocking: bool = True) -> None:
+    def save(
+        self,
+        state: PyTree,
+        step: int,
+        blocking: bool = True,
+        meta: Optional[Dict[str, Any]] = None,
+    ) -> None:
         # Surface a dead background write BEFORE any new work (retention in
         # particular): a failed async save must not be masked by this save
         # succeeding and then pruning the directory.
@@ -327,7 +364,7 @@ class CheckpointManager:
         if self.shard_spec is not None and any(
             True for _ in self._sharded_paths(state)
         ):
-            self._save_sharded(state, step, blocking)
+            self._save_sharded(state, step, blocking, meta=meta)
             return
         if self.canonicalize is not None:
             state = self.canonicalize(state)
@@ -348,7 +385,7 @@ class CheckpointManager:
                     self.io.begin(ordinal, attempt)
                     _write_checkpoint(
                         self.base_dir, step, host, paths, self.keep,
-                        io=self.io,
+                        io=self.io, meta=meta,
                     )
                     return
                 except BaseException as e:
@@ -387,7 +424,13 @@ class CheckpointManager:
             ):
                 yield path, leaf
 
-    def _save_sharded(self, state: PyTree, step: int, blocking: bool) -> None:
+    def _save_sharded(
+        self,
+        state: PyTree,
+        step: int,
+        blocking: bool,
+        meta: Optional[Dict[str, Any]] = None,
+    ) -> None:
         """Each writer snapshots + writes only its own row blocks.  The
         state is serialized in STORAGE layout (no canonical gather): the
         whole point is that no process ever materializes the full stacks."""
@@ -430,7 +473,7 @@ class CheckpointManager:
                 try:
                     self.io.begin(ordinal, attempt)
                     self._write_sharded(
-                        step, sharded_meta, shard_blocks, repl
+                        step, sharded_meta, shard_blocks, repl, meta=meta
                     )
                     return
                 except BaseException as e:
@@ -455,6 +498,7 @@ class CheckpointManager:
         sharded_meta: Dict[str, Dict[str, Any]],
         shard_blocks: List[Tuple[str, int, np.ndarray]],
         repl: List[Tuple[str, np.ndarray]],
+        meta: Optional[Dict[str, Any]] = None,
     ) -> None:
         spec = self.shard_spec
         S = spec.num_shards
@@ -527,6 +571,8 @@ class CheckpointManager:
             "leaves": repl_entries,
             "sharded": merged,
         }
+        if meta:
+            manifest["meta"] = meta
         io.write_manifest(os.path.join(tmp, _MANIFEST), manifest)
         if os.path.exists(final):
             shutil.rmtree(final)

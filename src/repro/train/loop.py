@@ -1,6 +1,12 @@
 """The training loop: checkpoint/restart, preemption handling, straggler
-monitoring, staggered projector refresh, subspace diagnostics, and the
-degrade-and-recover runtime (skip-step / rollback-and-resample).
+monitoring, staggered projector refresh, subspace diagnostics, the
+degrade-and-recover runtime (skip-step / rollback-and-resample), and the
+rank-elastic engine (DESIGN.md §2.12): when the optimizer carries a
+``rank_schedule``, refresh boundaries evaluate the schedule host-side and
+a rank change triggers a re-bucket event -- rebuild at the new rank,
+migrate live state losslessly through the canonical layout, re-jit, and
+rebind the checkpoint manager; manifests carry the rank so resume across
+a rank boundary rebuilds the right geometry first.
 
 Deterministic resume: data batches are pure functions of the step index and
 optimizer RNG lives in the checkpointed state, so a killed-and-restarted run
@@ -32,12 +38,13 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.configs.base import TrainConfig
+from repro.configs.base import RankSchedule, TrainConfig
 from repro.core import lowrank as lowrank_lib
 from repro.core import metrics as metrics_lib
+from repro.core import rank_schedule as rank_schedule_lib
 from repro.train import checkpoint as ckpt_lib
 from repro.train import recovery as recovery_lib
-from repro.train.monitor import HeartbeatRegistry, StepMonitor
+from repro.train.monitor import HeartbeatRegistry, SpectrumLogger, StepMonitor
 from repro.train import state as state_lib
 from repro.train.state import TrainState
 
@@ -129,27 +136,80 @@ def train_loop(
         if recovery is not None else None
     )
 
-    def _restore_latest(skel: TrainState):
-        """Newest VERIFYING checkpoint -> (state, step): shardings describe
-        the in-memory (storage) layout; with layout converters active the
+    # ---- rank-elastic engine (DESIGN.md §2.12) ----
+    # Active only when the optimizer carries a schedule AND the step-fn
+    # bundle can re-jit itself at a new bucket geometry (make_train_step's
+    # "rebuild" hook; absent for hand-rolled step fns in tests).  The
+    # schedule is evaluated HOST-SIDE at refresh boundaries only: rank
+    # changes array shapes, so it can never live inside the compiled step.
+    rank_sched: Optional[RankSchedule] = None
+    if optimizer.config.rank_schedule and "rebuild" in step_fns:
+        rank_sched = RankSchedule.parse(optimizer.config.rank_schedule)
+    spectrum: Optional[SpectrumLogger] = None
+    if getattr(train_cfg, "log_spectrum", False) or (
+        rank_sched is not None and rank_sched.kind == "adaptive"
+    ):
+        # the adaptive policy consumes the probe's effective rank, so it
+        # forces the logger on even when spectrum history is not requested
+        spectrum = SpectrumLogger(optimizer.specs)
+
+    def _ckpt_meta() -> Optional[Dict[str, Any]]:
+        """Schedule state carried in the checkpoint manifest: the rank(s)
+        this save's bucket geometry was built at, so resume rebuilds the
+        same shapes before loading."""
+        if rank_sched is None:
+            return None
+        r, gr = lowrank_lib.current_ranks(optimizer)
+        return {"rank": int(r), "group_ranks": [int(g) for g in gr]}
+
+    def _adopt_optimizer(new_opt: lowrank_lib.LowRankOptimizer) -> None:
+        """Swap in an optimizer rebuilt at a new rank: re-jitted step fns,
+        refreshed checkpoint converters, manager rebound to the new bucket
+        geometry.  ``shardings`` described the OLD bucket shapes, so it is
+        dropped -- restore falls back to name-based placements from the
+        mesh when one is present."""
+        nonlocal optimizer, step_fns, canonicalize, localize, layout
+        nonlocal shardings
+        optimizer = new_opt
+        step_fns = step_fns["rebuild"](new_opt)
+        canonicalize, localize = state_lib.checkpoint_converters(new_opt)
+        layout = new_opt.state_layout
+        manager.rebind(
+            canonicalize, localize,
+            canonical_rows=state_lib.bucket_canonical_rows(new_opt),
+        )
+        shardings = None
+
+    def _load_one(skel: TrainState, ck_step: Optional[int] = None):
+        """One checkpoint -> (state, step): shardings describe the
+        in-memory (storage) layout; with layout converters active the
         serialized (canonical) tree differs, so derive name-based
         shardings for the canonical tree (leaves are loaded directly
         sharded -- elastic restore) and re-place the converted
         storage-layout state afterwards with the CALLER's shardings (the
         zero placements for a ZeRO run, name-based otherwise).  Sharded-
         format checkpoints load straight into the storage layout, so the
-        caller shardings place them directly (``storage_shardings``)."""
+        caller shardings place them directly (``storage_shardings``).
+        ``ck_step=None`` walks to the newest checkpoint that verifies."""
         if canonicalize is None:
-            return manager.load_latest(skel, shardings=shardings)
+            if ck_step is None:
+                return manager.load_latest(skel, shardings=shardings)
+            return manager.load(skel, ck_step, shardings=shardings), ck_step
         load_shardings = None
         if shardings is not None and mesh is not None:
             from repro.launch import sharding as shd_lib
 
             canon_skel = jax.eval_shape(canonicalize, skel)
             load_shardings = shd_lib.tree_shardings(canon_skel, mesh)
-        loaded, ck_step = manager.load_latest(
-            skel, shardings=load_shardings, storage_shardings=shardings
-        )
+        if ck_step is None:
+            loaded, ck_step = manager.load_latest(
+                skel, shardings=load_shardings, storage_shardings=shardings
+            )
+        else:
+            loaded = manager.load(
+                skel, ck_step, shardings=load_shardings,
+                storage_shardings=shardings,
+            )
         if shardings is not None:
             loaded = jax.tree_util.tree_map(
                 jax.device_put, loaded, shardings
@@ -161,6 +221,54 @@ def train_loop(
                 jax.device_put, loaded, shd_lib.tree_shardings(loaded, mesh)
             )
         return loaded, ck_step
+
+    def _restore_latest(skel: TrainState):
+        """Newest VERIFYING checkpoint -> (state, step).
+
+        With a rank schedule active the walk is rank-aware: each
+        candidate's manifest meta names the rank(s) its bucket geometry
+        was built at, and ``load`` demands exact shapes -- so the
+        optimizer is rebuilt (and the step fns re-jitted, the manager
+        rebound) at the CHECKPOINT's rank before the load skeleton is
+        built.  A candidate whose meta or payload fails to read falls
+        through to the next-older one, preserving ``load_latest``'s
+        walk-past-corruption contract across rank boundaries."""
+        if rank_sched is None:
+            return _load_one(skel)
+        last_err: Optional[Exception] = None
+        for ck in reversed(ckpt_lib.checkpoint_dirs(train_cfg.checkpoint_dir)):
+            try:
+                meta = ckpt_lib.checkpoint_meta(
+                    train_cfg.checkpoint_dir, ck
+                )
+                rank_now, groups_now = lowrank_lib.current_ranks(optimizer)
+                want_rank = int(meta.get("rank", rank_now))
+                want_groups = tuple(
+                    int(g) for g in meta.get("group_ranks", ())
+                ) or groups_now
+                if (want_rank, want_groups) != (rank_now, groups_now):
+                    if len(set(want_groups)) > 1:
+                        new_opt = lowrank_lib.rebuild_at_rank(
+                            optimizer, skel.params,
+                            group_ranks=want_groups,
+                        )
+                    else:
+                        new_opt = lowrank_lib.rebuild_at_rank(
+                            optimizer, skel.params, rank=want_rank
+                        )
+                    _adopt_optimizer(new_opt)
+                    skel = TrainState(
+                        skel.params, optimizer.init(skel.params)
+                    )
+                return _load_one(skel, ck)
+            except (OSError, ValueError, KeyError) as e:
+                last_err = e
+                continue
+        if last_err is not None:
+            raise last_err
+        raise FileNotFoundError(
+            f"no loadable checkpoint under {train_cfg.checkpoint_dir!r}"
+        )
 
     # ---- init / restore ----
     if state is None:
@@ -191,7 +299,7 @@ def train_loop(
     def _safe_save(cur_state, s: int, blocking: bool) -> None:
         _drain_save_error()  # an old failure must not eat THIS save
         try:
-            manager.save(cur_state, s, blocking=blocking)
+            manager.save(cur_state, s, blocking=blocking, meta=_ckpt_meta())
         except Exception as e:
             monitor.save_failures += 1
             if recovery is None:
@@ -278,6 +386,61 @@ def train_loop(
                     rec.update(eval_fn(cur_state, s))
                 history.append(rec)
 
+    def _maybe_rebucket(cur_state: TrainState, s: int, group: int):
+        """Schedule evaluation at a refresh boundary; on a rank change,
+        the full re-bucket event: rebuild the optimizer at the new rank
+        (fresh ``BucketPlan``/``StateLayout``), migrate live state through
+        the canonical layout (``core.rank_schedule.migrate_opt_state`` --
+        projectors truncated/zero-padded, moments sliced/zero-extended,
+        quantized codes carried bit-exact), re-jit, rebind the checkpoint
+        manager.  Runs AFTER the refresh step and metric flush and BEFORE
+        the checkpoint save, so every checkpoint is written at the
+        geometry its manifest meta declares."""
+        rank_from, groups_from = lowrank_lib.current_ranks(optimizer)
+        new_rank = None
+        new_group_ranks = None
+        if rank_sched.kind == "adaptive":
+            eff = (
+                spectrum.effective_rank_for(group)
+                if spectrum is not None else None
+            )
+            if eff is None:
+                return cur_state
+            g = group % len(groups_from)
+            prop = rank_schedule_lib.propose_adaptive_rank(
+                rank_sched, groups_from[g], eff
+            )
+            if prop == groups_from[g]:
+                return cur_state
+            new_group_ranks = (
+                groups_from[:g] + (prop,) + groups_from[g + 1:]
+            )
+        else:
+            r = rank_schedule_lib.scheduled_rank(
+                rank_sched, s,
+                total_steps=train_cfg.total_steps, current=rank_from,
+            )
+            if r == rank_from:
+                return cur_state
+            new_rank = r
+        old_opt = optimizer
+        new_opt = lowrank_lib.rebuild_at_rank(
+            old_opt, cur_state.params,
+            rank=new_rank, group_ranks=new_group_ranks,
+        )
+        migrated = rank_schedule_lib.migrate_opt_state(
+            old_opt, new_opt, cur_state.opt_state
+        )
+        _adopt_optimizer(new_opt)
+        rank_to, _ = lowrank_lib.current_ranks(new_opt)
+        history.append({
+            "event": "rebucket",
+            "step": float(s),
+            "rank_from": float(rank_from),
+            "rank_to": float(rank_to),
+        })
+        return TrainState(cur_state.params, migrated)
+
     step = start_step
     final_step = train_cfg.total_steps
     # the step of the most recent checkpoint KNOWN loadable (restored from
@@ -333,6 +496,10 @@ def train_loop(
                 is_refresh = step % sub_tau == 0
                 if is_refresh:
                     group = (step // sub_tau) % groups
+                    if spectrum is not None:
+                        # host-snapshot the probe leaf BEFORE dispatch:
+                        # the jitted step donates its input state
+                        spectrum.capture_before(state.params, group)
                     state, m = step_fns["jit_refresh_step"](
                         state, batch, group=group
                     )
@@ -342,6 +509,12 @@ def train_loop(
                     m = fault_plan.loss_hook(step, m)
                 health = monitor.end_step(step)
                 pending.append((step, m, health))
+                if spectrum is not None and is_refresh:
+                    rec = spectrum.observe(state.params, step, group)
+                    if rec is not None and getattr(
+                        train_cfg, "log_spectrum", False
+                    ):
+                        history.append(rec)
                 if tracker is not None and is_refresh:
                     projs = metrics_lib.collect_projectors(
                         state.opt_state, optimizer.specs,
@@ -364,6 +537,8 @@ def train_loop(
                     or step == train_cfg.total_steps - 1
                 ):
                     _flush_metrics(state)
+                if rank_sched is not None and is_refresh:
+                    state = _maybe_rebucket(state, step, group)
                 if checkpoint_due:
                     _safe_save(
                         state, step + 1,

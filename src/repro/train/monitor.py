@@ -17,13 +17,19 @@ host-local but fully functional (and unit-tested with a fake clock):
     outputs are ready, and records a firing if readiness took longer than
     ``timeout_s`` (a hung reduce-scatter on a real fabric never returns;
     here the firing is the restart-decision signal).
+  * ``SpectrumLogger`` -- refresh-cadence probe of the update's singular
+    spectrum (``core/metrics.update_singular_spectrum`` /
+    ``effective_rank``): one probe leaf per refresh group, one host-side
+    SVD per refresh step.  Gated by ``TrainConfig.log_spectrum`` (default
+    off); its per-group effective-rank reading is the input signal of the
+    adaptive rank schedule (DESIGN.md §2.12).
 """
 from __future__ import annotations
 
 import math
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class StepMonitor:
@@ -222,3 +228,91 @@ class CollectiveWatchdog:
         if timed_out.is_set():
             self.fired.append((step, elapsed))
         return result
+
+
+class SpectrumLogger:
+    """Refresh-cadence singular-spectrum probe for the low-rank update.
+
+    One probe leaf per refresh group (the largest low-rank leaf of the
+    group -- the spectrum of the biggest matrix dominates the group's
+    memory, so it is the right leaf to size the rank by).  The train loop
+    snapshots the probe leaf to host BEFORE the refresh step (the jitted
+    step donates its input state, so the pre-step buffer is gone after
+    dispatch) and hands the post-step value to ``observe``; the cost is
+    one host transfer + one SVD per refresh step, and the whole logger is
+    gated off by default (``TrainConfig.log_spectrum``).
+
+    ``effective_rank_for(group)`` exposes the latest reading -- the
+    measurement consumed by the ``adaptive`` rank-schedule policy
+    (``core/rank_schedule.propose_adaptive_rank``).
+    """
+
+    def __init__(self, specs) -> None:
+        import jax
+
+        from repro.core.lowrank import LeafSpec
+
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, LeafSpec)
+        )
+        paths = jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, LeafSpec)
+        )
+        # Probe leaf per group, keyed by flat leaf index (tree_leaves order
+        # matches the params tree's leaf order).  LeafSpec carries no
+        # shape, so the clamped per-leaf rank is the footprint proxy: the
+        # leaf whose rank survived the min(d, n) clamp at the highest
+        # value is the group's largest matrix.
+        self.probe: Dict[int, Tuple[int, str]] = {}
+        best: Dict[int, int] = {}
+        for idx, ((path, spec), _leaf) in enumerate(zip(paths, leaves)):
+            if not spec.lowrank:
+                continue
+            if spec.group not in best or spec.rank > best[spec.group]:
+                best[spec.group] = spec.rank
+                self.probe[spec.group] = (idx, jax.tree_util.keystr(path))
+        self._before: Dict[int, Any] = {}
+        self._latest: Dict[int, float] = {}
+        self.history: List[Dict[str, float]] = []
+
+    def _leaf(self, params, group: int):
+        import jax
+
+        idx, _ = self.probe[group]
+        return jax.tree_util.tree_leaves(params)[idx]
+
+    def capture_before(self, params, group: int) -> None:
+        """Host-snapshot the probe leaf before a (donating) refresh step."""
+        if group not in self.probe:
+            return
+        import numpy as np
+
+        self._before[group] = np.asarray(self._leaf(params, group))
+
+    def observe(self, params, step: int, group: int) -> Optional[Dict[str, float]]:
+        """Spectrum of the refresh step's update on the probe leaf."""
+        if group not in self.probe or group not in self._before:
+            return None
+        import numpy as np
+
+        from repro.core import metrics as metrics_lib
+
+        before = self._before.pop(group)
+        after = np.asarray(self._leaf(params, group))
+        spectrum = metrics_lib.update_singular_spectrum(before, after)
+        eff = float(np.mean(np.asarray(metrics_lib.effective_rank(spectrum))))
+        top = float(np.max(np.asarray(spectrum)))
+        self._latest[group] = eff
+        rec = {
+            "event": "spectrum",
+            "step": float(step),
+            "group": float(group),
+            "effective_rank": eff,
+            "top_singular_value": top,
+            "path": self.probe[group][1],
+        }
+        self.history.append(rec)
+        return rec
+
+    def effective_rank_for(self, group: int) -> Optional[float]:
+        return self._latest.get(group)

@@ -475,6 +475,21 @@ def make_train_step(
         fns["jit_step"] = _guarded(fns["jit_step"])
         fns["jit_refresh_step"] = _guarded(fns["jit_refresh_step"])
     fns["watchdog"] = watchdog
+
+    # Rank-elastic re-jit hook (DESIGN.md §2.12): rebuild this exact step
+    # configuration around an optimizer re-bucketed at a new rank.  The
+    # train loop calls it at a re-bucket event -- fresh executables for
+    # the new bucket shapes (compressed-DP stack shapes follow the new
+    # plan automatically); everything else (mesh, compression mode,
+    # recovery, watchdog) carries over unchanged.
+    def rebuild(new_optimizer: lowrank_lib.LowRankOptimizer):
+        return make_train_step(
+            model, new_optimizer, mesh=mesh, train_cfg=train_cfg,
+            compressed=compressed, donate=donate, recovery=recovery,
+            watchdog=watchdog,
+        )
+
+    fns["rebuild"] = rebuild
     return fns
 
 

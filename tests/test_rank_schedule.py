@@ -1,0 +1,587 @@
+"""Rank-elastic engine (DESIGN.md §2.12): schedule parsing/evaluation,
+per-leaf rank clamping, live-state migration across rank changes (including
+bit-exact quantized code carriage), checkpoint round-trips across a rank
+boundary, the train loop's re-bucket events + rank-aware resume, the
+schedule-aware memory model, and the spectrum probe feeding the adaptive
+policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RankSchedule, TrainConfig
+from repro.core import make_optimizer
+from repro.core import buckets as buckets_lib
+from repro.core import lowrank as lowrank_lib
+from repro.core import rank_schedule as rs_lib
+from repro.train.checkpoint import CheckpointManager, checkpoint_meta
+from repro.train.monitor import SpectrumLogger
+from repro.train.state import TrainState, checkpoint_converters
+
+
+@pytest.fixture()
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _lr_params():
+    k = jax.random.PRNGKey(3)
+
+    def mat(i, shape):
+        return jax.random.normal(jax.random.fold_in(k, i), shape) * 0.02
+
+    return {
+        "blocks": {
+            "q_proj": mat(0, (2, 32, 64)),
+            "down_proj": mat(1, (2, 96, 32)),  # side='right'
+        },
+        "norm": jnp.ones((32,)),
+    }
+
+
+def _lr_grads(params, seed):
+    k = jax.random.PRNGKey(100 + seed)
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(
+            jax.random.fold_in(k, p.size % 89), p.shape
+        ) * 0.01,
+        params,
+    )
+
+
+def _make_opt(params, inner="adam", rank=8, engine="bucketed",
+              carry="reproject", **kw):
+    return make_optimizer(
+        f"galore-sara-{inner}", params, rank=rank, lr=1e-2, alpha=0.5,
+        min_dim=8, momentum_carry=carry, engine=engine,
+        svd_backend="randomized", **kw,
+    )
+
+
+def _steps(opt, state, params, step_range):
+    for s in step_range:
+        g = _lr_grads(params, s)
+        params, state, _ = opt.update(
+            g, state, params, refresh=(s % 2 == 0), apply=True
+        )
+    return params, state
+
+
+def _leaf_states(opt, state):
+    """Canonical per-leaf (spec, LeafState) pairs for the lowrank leaves."""
+    canon = lowrank_lib.canonical_opt_state(opt, state)
+    is_spec = lambda x: isinstance(x, lowrank_lib.LeafSpec)  # noqa: E731
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        opt.specs, is_leaf=is_spec
+    )
+    flat_states = treedef.flatten_up_to(canon.leaves)
+    return [(sp, st) for sp, st in zip(flat_specs, flat_states)
+            if sp.lowrank]
+
+
+# ---------------------------------------------------------------------------
+# schedule parsing + evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_parse_eval_and_spec_roundtrip():
+    sched = rs_lib.parse_rank_schedule("cosine:128:32@0.5")
+    assert (sched.kind, sched.start, sched.floor) == ("cosine", 128, 32)
+    assert sched.decay_fraction == 0.5
+    assert RankSchedule.parse(sched.spec()) == sched
+
+    # monotone nonincreasing decay, clamped to [floor, start]
+    for kind in ("linear", "cosine", "step"):
+        s = rs_lib.parse_rank_schedule(f"{kind}:128:32@1.0")
+        ranks = [rs_lib.scheduled_rank(s, t, total_steps=1000)
+                 for t in range(0, 1001, 100)]
+        assert all(a >= b for a, b in zip(ranks, ranks[1:])), (kind, ranks)
+        assert ranks[0] == 128 and ranks[-1] == 32
+        assert all(32 <= r <= 128 for r in ranks)
+        # quantized to the granularity grid (or the floor clamp)
+        assert all(r % s.granularity == 0 or r == s.floor for r in ranks)
+
+    const = rs_lib.parse_rank_schedule("constant:64")
+    assert rs_lib.scheduled_rank(const, 999, total_steps=1000) == 64
+
+    # hysteresis: a change smaller than the band keeps the current rank
+    s = rs_lib.parse_rank_schedule("linear:128:32@1.0", hysteresis=1000)
+    assert rs_lib.scheduled_rank(s, 500, total_steps=1000, current=128) == 128
+
+    with pytest.raises(ValueError):
+        rs_lib.parse_rank_schedule("warp:128")
+    with pytest.raises(ValueError):
+        rs_lib.parse_rank_schedule("cosine:32:128")  # floor > start
+    with pytest.raises(ValueError):
+        # no horizon anywhere: decay kinds cannot evaluate
+        rs_lib.scheduled_rank(
+            rs_lib.parse_rank_schedule("cosine:128:32"), 10
+        )
+
+
+def test_rank_trajectory_segments():
+    sched = rs_lib.parse_rank_schedule("cosine:128:32@0.5")
+    traj = rs_lib.rank_trajectory(sched, total_steps=1000, sub_tau=100)
+    assert traj[0] == (0, 128)
+    assert traj[-1][1] == 32
+    ranks = [r for _, r in traj]
+    assert ranks == sorted(ranks, reverse=True)
+    assert len(traj) >= 3  # several distinct segments => >=2 re-buckets
+
+
+def test_adaptive_proposal_clamps_and_hysteresis():
+    sched = rs_lib.parse_rank_schedule("adaptive:64:16")
+    # margin * eff_rank quantized; huge measurement clamps to start
+    assert rs_lib.propose_adaptive_rank(sched, 64, 1e6) == 64
+    # tiny measurement clamps to the floor
+    assert rs_lib.propose_adaptive_rank(sched, 64, 1.0) == 16
+    # non-finite / non-positive: no change proposed
+    assert rs_lib.propose_adaptive_rank(sched, 40, float("nan")) == 40
+    assert rs_lib.propose_adaptive_rank(sched, 40, 0.0) == 40
+    # within the hysteresis band: keep current
+    cur = 32
+    eff = cur / sched.margin  # proposes ~cur exactly
+    assert rs_lib.propose_adaptive_rank(sched, cur, eff) == cur
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: per-leaf rank clamping in the bucket plan
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_plan_clamps_rank_to_leaf_dims():
+    params = _lr_params()  # projector dims 32 (both leaves)
+    opt = _make_opt(params, rank=64)  # asked rank > min(d, n)
+    for b in opt.bucket_plan.buckets:
+        assert b.rank <= 32
+    # the clamped optimizer still runs
+    p, st = _steps(opt, opt.init(params), params, range(2))
+    assert np.isfinite(np.asarray(jax.tree_util.tree_leaves(p)[0]).sum())
+
+
+def test_bucket_plan_rejects_nonpositive_rank():
+    params = _lr_params()
+    opt = _make_opt(params, rank=8)
+    is_spec = lambda x: isinstance(x, lowrank_lib.LeafSpec)  # noqa: E731
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        opt.specs, is_leaf=is_spec
+    )
+    flat_params = treedef.flatten_up_to(params)
+    bad = [s._replace(rank=0) if s.lowrank else s for s in flat_specs]
+    with pytest.raises(ValueError, match="rank"):
+        buckets_lib.build_bucket_plan(bad, flat_params)
+
+
+# ---------------------------------------------------------------------------
+# live-state migration across a rank change
+# ---------------------------------------------------------------------------
+
+
+def test_migrate_shrink_slices_grow_zero_pads_adam():
+    params = _lr_params()
+    opt = _make_opt(params, rank=8)
+    p, st = _steps(opt, opt.init(params), params, range(3))
+
+    small = lowrank_lib.rebuild_at_rank(opt, p, rank=4)
+    st_small = rs_lib.migrate_opt_state(opt, small, st)
+    before = dict(
+        (sp.path, lst) for sp, lst in _leaf_states(opt, st)
+    )
+    for sp, lst in _leaf_states(small, st_small):
+        old = before[sp.path]
+        # projector: truncated leading columns, bit-identical
+        np.testing.assert_array_equal(
+            np.asarray(lst.projector), np.asarray(old.projector[..., :4])
+        )
+        # moments: sliced along the rank axis (reproject carry under
+        # truncation is exactly a slice: C = P2^T P1 = [I 0])
+        ax = -2 if sp.side == "left" else -1
+        for name in ("m", "v"):
+            o = np.asarray(getattr(old.inner, name))
+            n = np.asarray(getattr(lst.inner, name))
+            np.testing.assert_array_equal(
+                n, np.take(o, np.arange(4), axis=ax)
+            )
+
+    big = lowrank_lib.rebuild_at_rank(small, p, rank=8)
+    st_big = rs_lib.migrate_opt_state(small, big, st_small)
+    before4 = dict(
+        (sp.path, lst) for sp, lst in _leaf_states(small, st_small)
+    )
+    for sp, lst in _leaf_states(big, st_big):
+        old = before4[sp.path]
+        np.testing.assert_array_equal(
+            np.asarray(lst.projector[..., :4]), np.asarray(old.projector)
+        )
+        # padded projector columns are zero (inert until the next refresh)
+        assert float(np.abs(np.asarray(lst.projector[..., 4:])).sum()) == 0.0
+        ax = -2 if sp.side == "left" else -1
+        for name in ("m", "v"):
+            n = np.asarray(getattr(lst.inner, name))
+            kept = np.take(n, np.arange(4), axis=ax)
+            pad = np.take(n, np.arange(4, 8), axis=ax)
+            np.testing.assert_array_equal(
+                kept, np.asarray(getattr(old.inner, name))
+            )
+            assert float(np.abs(pad).sum()) == 0.0
+
+
+def test_migrate_reset_carry_reinitializes_moments():
+    params = _lr_params()
+    opt = _make_opt(params, rank=8, carry="reset")
+    p, st = _steps(opt, opt.init(params), params, range(3))
+    small = lowrank_lib.rebuild_at_rank(opt, p, rank=4)
+    st_small = rs_lib.migrate_opt_state(opt, small, st)
+    for sp, lst in _leaf_states(small, st_small):
+        for name in ("m", "v"):
+            assert float(
+                np.abs(np.asarray(getattr(lst.inner, name))).sum()
+            ) == 0.0
+        # the projector still carries over (only moments reset)
+        assert float(np.abs(np.asarray(lst.projector)).sum()) > 0.0
+
+
+def test_migrate_adam8bit_codes_bit_exact_no_requantization():
+    params = _lr_params()
+    opt = _make_opt(params, inner="adam8bit", rank=8)
+    p, st = _steps(opt, opt.init(params), params, range(3))
+
+    small = lowrank_lib.rebuild_at_rank(opt, p, rank=4)
+    st_small = rs_lib.migrate_opt_state(opt, small, st)
+    before = dict((sp.path, lst) for sp, lst in _leaf_states(opt, st))
+    for sp, lst in _leaf_states(small, st_small):
+        old = before[sp.path]
+        ax = -2 if sp.side == "left" else -1
+        for name in ("m_codes", "v_codes"):
+            o = np.asarray(getattr(old.inner, name))
+            n = np.asarray(getattr(lst.inner, name))
+            assert n.dtype == np.uint8
+            # surviving codes are the EXACT old codes -- a slice, never a
+            # dequantize->requantize round trip
+            np.testing.assert_array_equal(
+                n, np.take(o, np.arange(4), axis=ax)
+            )
+
+    big = lowrank_lib.rebuild_at_rank(small, p, rank=8)
+    st_big = rs_lib.migrate_opt_state(small, big, st_small)
+    before4 = dict(
+        (sp.path, lst) for sp, lst in _leaf_states(small, st_small)
+    )
+    for sp, lst in _leaf_states(big, st_big):
+        old = before4[sp.path]
+        ax = -2 if sp.side == "left" else -1
+        for name, zero_code in (("m_codes", 127), ("v_codes", 0)):
+            n = np.asarray(getattr(lst.inner, name))
+            np.testing.assert_array_equal(
+                np.take(n, np.arange(4), axis=ax),
+                np.asarray(getattr(old.inner, name)),
+            )
+            # pad codes dequantize to exactly 0 under any scale
+            assert (np.take(n, np.arange(4, 8), axis=ax)
+                    == zero_code).all()
+        # pad scales are 1.0 (the all-zero-block convention)
+        for name in ("m_scale", "v_scale"):
+            s = np.asarray(getattr(lst.inner, name))
+            assert np.isfinite(s).all() and (s > 0).all()
+
+
+@pytest.mark.parametrize("inner", ["adam", "adam8bit", "adam_mini"])
+def test_hot_steps_after_migration_match_static_engine(inner):
+    """Post-migration hot steps are bit-identical to a STATIC rank-4
+    engine fed the same canonical state: the rebuilt optimizer is exactly
+    the static one."""
+    params = _lr_params()
+    opt = _make_opt(params, inner=inner, rank=8)
+    p, st = _steps(opt, opt.init(params), params, range(3))
+    small = lowrank_lib.rebuild_at_rank(opt, p, rank=4)
+    st_small = rs_lib.migrate_opt_state(opt, small, st)
+    assert int(st_small.step) == int(st.step)  # step counter preserved
+
+    static = _make_opt(params, inner=inner, rank=4)
+    st_static = lowrank_lib.storage_opt_state(
+        static, lowrank_lib.canonical_opt_state(small, st_small)
+    )
+
+    p_a, st_a = p, st_small
+    p_b, st_b = p, st_static
+    for s in range(3):  # hot steps only: no refresh between re-buckets
+        g = _lr_grads(p_a, 50 + s)
+        p_a, st_a, _ = small.update(g, st_a, p_a, refresh=False, apply=True)
+        p_b, st_b, _ = static.update(g, st_b, p_b, refresh=False, apply=True)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(p_a), jax.tree_util.tree_leaves(p_b)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(
+            lowrank_lib.canonical_opt_state(small, st_a)
+        ),
+        jax.tree_util.tree_leaves(
+            lowrank_lib.canonical_opt_state(static, st_b)
+        ),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: checkpoint round-trip across a rank change
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("inner", ["adam", "adam8bit", "adam_mini"])
+@pytest.mark.parametrize("engine", ["bucketed", "reference"])
+@pytest.mark.parametrize("sharding", ["replicated", "zero"])
+def test_checkpoint_roundtrip_across_rank_change(
+    tmp_ckpt, inner, engine, sharding
+):
+    """Warm state at rank 8, migrate to rank 4, checkpoint (manifest meta
+    carries the rank), restore into a FRESH optimizer built at rank 4:
+    canonical fp32 state bit-identical."""
+    if engine == "reference" and sharding == "zero":
+        # invalid by construction: zero shards the bucket stacks, so it
+        # requires the bucket-native engine (make_lowrank_optimizer raises)
+        pytest.skip("zero sharding requires the bucketed engine")
+    kw = {}
+    if sharding == "zero":
+        kw = dict(state_sharding="zero", state_shards=4)
+    params = _lr_params()
+    opt = _make_opt(params, inner=inner, rank=8, engine=engine, **kw)
+    p, st = _steps(opt, opt.init(params), params, range(3))
+
+    small = lowrank_lib.rebuild_at_rank(opt, p, rank=4)
+    st_small = rs_lib.migrate_opt_state(opt, small, st)
+    can, loc = checkpoint_converters(small)
+    mgr = CheckpointManager(tmp_ckpt, keep=2, canonicalize=can, localize=loc)
+    r, gr = lowrank_lib.current_ranks(small)
+    mgr.save(TrainState(p, st_small), 3,
+             meta={"rank": r, "group_ranks": list(gr)})
+
+    meta = checkpoint_meta(tmp_ckpt, 3)
+    assert meta["rank"] == 4
+
+    fresh = _make_opt(params, inner=inner, rank=meta["rank"],
+                      engine=engine, **kw)
+    can_f, loc_f = checkpoint_converters(fresh)
+    mgr_f = CheckpointManager(
+        tmp_ckpt, keep=2, canonicalize=can_f, localize=loc_f
+    )
+    restored = mgr_f.load(TrainState(params, fresh.init(params)), step=3)
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(
+            lowrank_lib.canonical_opt_state(small, st_small)
+        ),
+        jax.tree_util.tree_leaves(
+            lowrank_lib.canonical_opt_state(fresh, restored.opt_state)
+        ),
+    ):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# the train loop: re-bucket events + rank-aware resume
+# ---------------------------------------------------------------------------
+
+
+class _ToyModel:
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"blocks": {"w1": jax.random.normal(k1, (48, 32)) * 0.02,
+                           "w2": jax.random.normal(k2, (32, 48)) * 0.02},
+                "bias": jnp.zeros((32,))}
+
+    def loss(self, params, batch):
+        x, y = batch
+        h = jnp.tanh(x @ params["blocks"]["w1"] + params["bias"])
+        out = h @ params["blocks"]["w2"]
+        loss = jnp.mean((out - y) ** 2)
+        return loss, {"loss": loss}
+
+
+class _ToyData:
+    def batch_at(self, step):
+        x = jax.random.normal(jax.random.PRNGKey(step), (8, 48))
+        return (x, x)
+
+
+def _loop_opt(params):
+    return make_optimizer(
+        "galore-sara-adam", params, rank=32, min_dim=8, tau=8, lr=0.01,
+        svd_backend="randomized", engine="bucketed",
+        rank_schedule="cosine:32:8@1.0",
+    )
+
+
+def _loop_cfg(ckpt_dir, **kw):
+    base = dict(total_steps=40, checkpoint_every=10, checkpoint_dir=ckpt_dir,
+                seed=0, async_checkpoint=False)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_train_loop_rebuckets_and_resumes_across_rank_boundary(tmp_path):
+    from repro.train.faults import FaultPlan, FaultSpec
+    from repro.train.loop import train_loop
+    from repro.train.step import make_train_step
+
+    model, data = _ToyModel(), _ToyData()
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- uninterrupted run: full decay schedule, >=2 re-bucket events ---
+    tc_a = _loop_cfg(str(tmp_path / "a"), log_spectrum=True)
+    opt_a = _loop_opt(params)
+    res_a = train_loop(
+        model, opt_a, data, tc_a,
+        make_train_step(model, opt_a, train_cfg=tc_a),
+        log_every=10, handle_signals=False,
+    )
+    reb = [r for r in res_a.history if r.get("event") == "rebucket"]
+    assert len(reb) >= 2, reb
+    assert reb[0]["rank_from"] > reb[-1]["rank_to"]
+    # spectrum probe logged at refresh cadence (satellite 2)
+    assert any(r.get("event") == "spectrum" for r in res_a.history)
+
+    # --- preempted + resumed run in a separate checkpoint dir ---
+    tc_b = _loop_cfg(str(tmp_path / "b"))
+    opt_b = _loop_opt(params)
+    res_b1 = train_loop(
+        model, opt_b, data, tc_b,
+        make_train_step(model, opt_b, train_cfg=tc_b),
+        log_every=10, handle_signals=False,
+        fault_plan=FaultPlan([FaultSpec("preempt", step=25)]),
+    )
+    assert res_b1.final_step == 26  # preempted mid-schedule, post-rebucket
+
+    # resume with a FRESH optimizer at the schedule's START rank: the
+    # rank-aware restore must rebuild at the checkpoint's rank (16) first
+    opt_b2 = _loop_opt(params)
+    res_b2 = train_loop(
+        model, opt_b2, data, tc_b,
+        make_train_step(model, opt_b2, train_cfg=tc_b),
+        log_every=10, handle_signals=False,
+    )
+    assert res_b2.final_step == 40
+    for a, b in zip(
+        jax.tree_util.tree_leaves(res_a.state.params),
+        jax.tree_util.tree_leaves(res_b2.state.params),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # both runs checkpointed step 40 at the same decayed rank
+    meta = checkpoint_meta(tc_a.checkpoint_dir, 40)
+    meta_b = checkpoint_meta(tc_b.checkpoint_dir, 40)
+    assert meta == meta_b
+    assert meta["rank"] < 32  # the schedule decayed the checkpointed rank
+
+
+def test_hot_steps_between_rebuckets_match_static_rank_run(tmp_path):
+    """Between re-bucket events the scheduled run IS a static-rank run:
+    with a constant schedule (no rank change ever fires) the trajectory is
+    bit-identical to the same optimizer without a schedule."""
+    from repro.train.loop import train_loop
+    from repro.train.step import make_train_step
+
+    model, data = _ToyModel(), _ToyData()
+    params = model.init(jax.random.PRNGKey(0))
+    kw = dict(rank=16, min_dim=8, tau=8, lr=0.01,
+              svd_backend="randomized", engine="bucketed")
+
+    tc1 = _loop_cfg(str(tmp_path / "sched"), checkpoint_every=0)
+    opt1 = make_optimizer("galore-sara-adam", params,
+                          rank_schedule="constant:16", **kw)
+    res1 = train_loop(model, opt1, data, tc1,
+                      make_train_step(model, opt1, train_cfg=tc1),
+                      log_every=10, handle_signals=False)
+    assert not any(r.get("event") == "rebucket" for r in res1.history)
+
+    tc2 = _loop_cfg(str(tmp_path / "static"), checkpoint_every=0)
+    opt2 = make_optimizer("galore-sara-adam", params, **kw)
+    res2 = train_loop(model, opt2, data, tc2,
+                      make_train_step(model, opt2, train_cfg=tc2),
+                      log_every=10, handle_signals=False)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(res1.state.params),
+        jax.tree_util.tree_leaves(res2.state.params),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# schedule-aware memory model + dryrun plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_state_model_average_below_static():
+    params = _lr_params()
+    opt = _make_opt(params, rank=16, rank_schedule="cosine:16:8@1.0",
+                    tau=100)
+    sched = rs_lib.parse_rank_schedule(opt.config.rank_schedule)
+    model = rs_lib.scheduled_state_model(
+        opt.config, params, sched, total_steps=1000
+    )
+    assert model["modeled_state_bytes_avg"] < model[
+        "modeled_state_bytes_static"]
+    assert model["modeled_state_bytes_peak"] <= model[
+        "modeled_state_bytes_static"]
+    assert model["num_rebuckets"] >= 1
+    ranks = [seg["rank"] for seg in model["trajectory"]]
+    assert ranks == sorted(ranks, reverse=True)
+
+    # dp_comm_model surfaces the same peak/avg keys when given the plans
+    is_spec = lambda x: isinstance(x, lowrank_lib.LeafSpec)  # noqa: E731
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        opt.specs, is_leaf=is_spec
+    )
+    flat_params = treedef.flatten_up_to(params)
+    plans = rs_lib.schedule_rank_plans(
+        opt.config, params, sched, total_steps=1000
+    )
+    out = buckets_lib.dp_comm_model(
+        opt.bucket_plan, flat_params, inner="adam", rank_plans=plans
+    )
+    assert out["modeled_state_bytes_peak"] >= out["modeled_state_bytes_avg"]
+    assert out["modeled_state_bytes_avg"] == pytest.approx(
+        model["modeled_state_bytes_avg"]
+    )
+
+
+def test_rebucket_cost_model_counts_both_geometries():
+    params = _lr_params()
+    opt = _make_opt(params, rank=8)
+    small = lowrank_lib.rebuild_at_rank(opt, params, rank=4)
+    cost = rs_lib.rebucket_cost_model(
+        opt.bucket_plan, small.bucket_plan, inner="adam"
+    )
+    assert cost["modeled_hbm_bytes"] > 0
+    assert cost["dispatched_ops"] >= len(opt.bucket_plan.buckets)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: the spectrum probe
+# ---------------------------------------------------------------------------
+
+
+def test_spectrum_logger_measures_effective_rank():
+    params = _lr_params()
+    opt = _make_opt(params, rank=8)
+    logger = SpectrumLogger(opt.specs)
+    assert logger.probe  # picked a probe leaf for group 0
+
+    logger.capture_before(params, 0)
+    idx, _ = logger.probe[0]
+    leaves = jax.tree_util.tree_leaves(params)
+    # rank-1 update on the probe leaf -> effective rank ~= 1
+    probe = leaves[idx]
+    u = jnp.ones(probe.shape[:-1] + (1,))
+    v = jnp.ones((1, probe.shape[-1]))
+    leaves2 = list(leaves)
+    leaves2[idx] = probe + 0.1 * (u @ v)
+    after = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), leaves2
+    )
+    rec = logger.observe(after, step=0, group=0)
+    assert rec is not None
+    assert rec["effective_rank"] == pytest.approx(1.0, abs=0.2)
+    assert logger.effective_rank_for(0) == rec["effective_rank"]
+    # no capture -> no measurement
+    assert logger.observe(after, step=1, group=0) is None
