@@ -38,7 +38,14 @@ _CHECK_FIELDS = (
     # and time-average (rank_schedule_bench; DESIGN.md §2.12).
     "modeled_state_bytes_peak",
     "modeled_state_bytes_avg",
+    # continuous-batching serve engine (ISSUE 10): modeled per-token tail
+    # latency of the traffic replay (serve_replay; deterministic -- tick
+    # clock x roofline tick model).
+    "p99_latency_model",
 )
+# Fields where HIGHER is better (replay throughput): --check flags drops
+# below 1/tolerance instead of increases above it.
+_CHECK_FIELDS_HIGHER = ("tokens_per_sec",)
 _CHECK_TOLERANCE = 1.10  # fail on > 10% regression
 
 
@@ -75,6 +82,16 @@ def check_regressions(previous: list, current: list) -> list:
                     f"(+{100 * (b / a - 1):.1f}% > "
                     f"{100 * (_CHECK_TOLERANCE - 1):.0f}% budget)"
                 )
+        for field in _CHECK_FIELDS_HIGHER:
+            a, b = old.get(field), rec.get(field)
+            if a is None or b is None or a <= 0:
+                continue
+            if b * _CHECK_TOLERANCE < a:
+                problems.append(
+                    f"{rec['op']}: {field} dropped {a} -> {b} "
+                    f"(-{100 * (1 - b / a):.1f}% > "
+                    f"{100 * (_CHECK_TOLERANCE - 1):.0f}% budget)"
+                )
     return problems
 
 
@@ -83,7 +100,7 @@ def main() -> None:
     parser.add_argument(
         "--only", default="",
         help="comma list: table1,table2,table3,table4,fig2,fig3,fig4,"
-             "kernels,roofline",
+             "kernels,roofline,serve",
     )
     parser.add_argument(
         "--json-out", default="BENCH_kernels.json",
@@ -97,7 +114,9 @@ def main() -> None:
     )
     args = parser.parse_args()
 
-    from benchmarks import common, figures, kernels_micro, roofline_report, tables
+    from benchmarks import (
+        common, figures, kernels_micro, roofline_report, serve_replay, tables,
+    )
 
     suites = {
         "table1": tables.table1,
@@ -109,6 +128,7 @@ def main() -> None:
         "fig4": figures.fig4,
         "kernels": kernels_micro.run,
         "roofline": roofline_report.run,
+        "serve": serve_replay.run,
     }
     selected = (
         [s.strip() for s in args.only.split(",") if s.strip()]

@@ -1,0 +1,79 @@
+"""jnp oracle for paged decode attention (q_len = 1).
+
+The decode-shaped counterpart of ``kernels/flash_attention``: one query per
+sequence slot, K/V gathered through a per-slot page table over a shared page
+pool.  Layout:
+
+  q          : (B, 1, H, D)       -- B decode slots, GQA H = G * KVH
+  pages_k/v  : (P, ps, KVH, D)    -- the pool; page 0 is the reserved trash
+               page (inactive-slot writes land there), never referenced by a
+               live page table entry
+  page_table : (B, MP) int32      -- page ids in position order; token j of a
+               slot lives in page ``page_table[b, j // ps]`` at offset
+               ``j % ps``; -1 = unallocated
+  seq_lens   : (B,) int32         -- tokens written so far INCLUDING the one
+               being decoded (its K/V is written before attention, exactly
+               like the ring-buffer decode paths)
+
+The query position is ``seq_lens - 1``; causality is structural (no stored
+position exceeds it), so masking is purely ``kv_pos < seq_len`` plus the
+optional sliding window.  A slot with ``seq_lens == 0`` (retired/empty)
+attends to nothing and returns zeros, not NaN.
+
+This reference materializes the gathered (B, MP*ps, KVH, D) K/V in HBM --
+the traffic the Pallas kernel exists to avoid (it streams one page per grid
+step through VMEM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,  # (B, 1, H, D)
+    pages_k: jax.Array,  # (P, ps, KVH, D)
+    pages_v: jax.Array,
+    page_table: jax.Array,  # (B, MP) int32
+    seq_lens: jax.Array,  # (B,) int32
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged decode attention requires q_len=1, got {sq}")
+    p, ps, kvh, _ = pages_k.shape
+    mp = page_table.shape[1]
+    g = h // kvh
+    scale = 1.0 / (d**0.5)
+
+    safe = jnp.maximum(page_table, 0)
+    k = pages_k[safe].reshape(b, mp * ps, kvh, d)
+    v = pages_v[safe].reshape(b, mp * ps, kvh, d)
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(mp * ps, dtype=jnp.int32)[None], (b, mp * ps)
+    )
+    allow = (kv_pos < seq_lens[:, None]) & jnp.repeat(
+        page_table >= 0, ps, axis=1
+    )
+    if window and window > 0:
+        q_pos = seq_lens[:, None] - 1
+        allow = allow & (kv_pos > q_pos - window)
+
+    qg = q.reshape(b, kvh, g, d)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qg.astype(jnp.float32), k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    logits = jnp.where(allow[:, None, None, :], logits, NEG)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    e = jnp.where(allow[:, None, None, :], e, 0.0)  # empty slot -> all zero
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / jnp.maximum(l, 1e-30)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", probs, v.astype(jnp.float32)
+    )
+    return out.reshape(b, 1, h, d).astype(q.dtype)

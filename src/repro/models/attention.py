@@ -170,6 +170,45 @@ def chunked_attention(
     return out[:, :sq]
 
 
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, D) -- one query per decode slot
+    pages_k: jax.Array,  # (P, ps, KVH, D) shared page pool
+    pages_v: jax.Array,
+    page_table: jax.Array,  # (B, MP) int32, -1 = unallocated
+    seq_lens: jax.Array,  # (B,) int32, incl. the token being decoded
+    *,
+    window: int = 0,
+    impl: str = "auto",
+) -> jax.Array:
+    """Decode-shaped dispatch: K/V read through the page table.
+
+    q_len must be 1 (the decode contract -- the kernel grid has no query
+    dimension); ``impl='pallas'`` (or ``'auto'`` on a TPU backend) routes to
+    the ``kernels/flash_attention_decode`` Pallas kernel, which streams one
+    pool page per grid step through VMEM; everything else -- CPU backends,
+    off-alignment page sizes / head dims -- takes the jnp reference that
+    materializes the gathered K/V (the ops-layer gate decides).  Causality
+    is structural (see ref.py), so there is no ``causal`` switch.
+    """
+    if q.shape[1] != 1:
+        raise ValueError(
+            f"paged_decode_attention requires q_len=1, got {q.shape[1]}"
+        )
+    from repro.kernels.flash_attention_decode import ops as fad_ops
+
+    if impl in ("auto", "pallas"):
+        return fad_ops.paged_decode_attention(
+            q, pages_k, pages_v, page_table, seq_lens, window=window
+        )
+    from repro.kernels.flash_attention_decode.ref import (
+        paged_decode_attention_ref,
+    )
+
+    return paged_decode_attention_ref(
+        q, pages_k, pages_v, page_table, seq_lens, window=window
+    )
+
+
 def attention(
     q: jax.Array,
     k: jax.Array,

@@ -1,19 +1,47 @@
-"""Batched serving engine: prefill + autoregressive decode over the
-family-appropriate cache (ring-buffer KV / SSM state / enc-dec cross-KV).
+"""Serving engines.
 
-``generate`` runs a static batch of prompts to ``max_new_tokens`` with greedy
-or temperature sampling; decode steps are jitted once and reused (cache
-shapes static).  On a mesh, params/cache are placed by the sharding rules.
+``ServeEngine`` -- the static-batch path: prefill a fixed batch of prompts,
+decode everyone to ``max_new_tokens`` in lockstep.  Decode steps are jitted
+once (cache shapes static); on a mesh, params/cache placement follows the
+sharding rules.  ``generate`` validates the cache capacity up front (a ring
+cache shorter than prompt + max_new_tokens used to wrap silently and
+overwrite the prompt) and, given ``eos_id``, stops decoding as soon as every
+row has finished instead of burning the remaining steps.
+
+``ContinuousEngine`` -- continuous batching over a fixed set of decode
+slots.  New prompts prefill into free slots while in-flight sequences keep
+decoding; EOS / token-budget retirement frees the slot (and its pages)
+immediately for the next queued request.  Every jitted step sees the same
+shapes (all slots, liveness as a mask), so admission and retirement never
+recompile.  Per family:
+
+  * dense / moe / vlm -- K/V in the shared page pool (serve/kv_cache.py),
+    decode via the paged step (serve/paged_decode.py) whose attention reads
+    through the per-slot page table.
+  * ssm / hybrid / audio -- the family's native cache (constant-size SSM
+    state / window ring + SSM / ring + enc-dec cross-KV) batched over slots;
+    admission inserts a batch-1 prefill cache into the slot's rows and the
+    model's own ``decode`` runs all slots in lockstep (decode is
+    row-independent, so dead slots are just ignored lanes).
+
+Time advances in ticks -- one decode step per tick, prefills folded into
+the tick they admit on -- so the replay benchmark's latency numbers are
+deterministic.  Continuous decoding is greedy (token-identity with the
+static engine is part of the test contract).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.model_zoo import Model
+from repro.serve import kv_cache as kvc
+from repro.serve import paged_decode as pgd
+from repro.serve.scheduler import Request, Scheduler, SlotState
 
 PyTree = Any
 
@@ -23,6 +51,15 @@ class GenerateResult:
     tokens: jax.Array  # (B, max_new_tokens)
     logits_last: jax.Array
     steps: int
+
+
+def _prompt_kv_len(cfg, batch: Dict[str, jax.Array]) -> int:
+    """KV positions the prompt occupies in the DECODER cache (vlm patch
+    prefix counts; audio frame_embeds feed the encoder, not the ring)."""
+    n = batch["tokens"].shape[1]
+    if cfg.family == "vlm":
+        n += batch["patch_embeds"].shape[1]
+    return n
 
 
 class ServeEngine:
@@ -46,6 +83,24 @@ class ServeEngine:
             key, logits / temperature, axis=-1
         ).astype(jnp.int32)
 
+    def _check_capacity(
+        self, batch: Dict[str, jax.Array], max_new_tokens: int
+    ) -> None:
+        cfg = self.model.cfg
+        if cfg.family == "ssm" or cfg.attn_window:
+            return  # no ring / window-sized ring wraps by design
+        prompt_kv = _prompt_kv_len(cfg, batch)
+        required = prompt_kv + max_new_tokens
+        effective = self.capacity or prompt_kv  # model_zoo prefill default
+        if effective < required:
+            raise ValueError(
+                f"cache capacity {effective} cannot hold prompt"
+                f" ({prompt_kv}) + max_new_tokens ({max_new_tokens}): the"
+                f" ring would wrap and overwrite the prompt. Construct"
+                f" ServeEngine(..., capacity={required}) or reduce"
+                f" max_new_tokens."
+            )
+
     def generate(
         self,
         batch: Dict[str, jax.Array],
@@ -54,19 +109,249 @@ class ServeEngine:
         greedy: bool = True,
         temperature: float = 1.0,
         key: Optional[jax.Array] = None,
+        eos_id: Optional[int] = None,
     ) -> GenerateResult:
+        self._check_capacity(batch, max_new_tokens)
         key = key if key is not None else jax.random.PRNGKey(0)
         logits, cache = self._prefill(self.params, batch)
+        b = batch["tokens"].shape[0]
+        finished = np.zeros((b,), bool)
         outs = []
-        tok = None
+        steps = 0
         for i in range(max_new_tokens):
             key, sub = jax.random.split(key)
             tok = self._sample(logits, sub, temperature, greedy=greedy)
+            if eos_id is not None:
+                # rows already finished keep emitting eos, not samples
+                tok = jnp.where(jnp.asarray(finished), eos_id, tok)
+                finished |= np.asarray(tok) == eos_id
             outs.append(tok)
+            if eos_id is not None and finished.all():
+                break  # early exit: no decode steps for an all-done batch
             logits, cache = self._decode(
                 self.params, cache, {"token": tok[:, None]}
             )
+            steps += 1
+        if len(outs) < max_new_tokens:  # pad early-exited batches with eos
+            pad = jnp.full_like(outs[-1], eos_id)
+            outs.extend([pad] * (max_new_tokens - len(outs)))
         tokens = jnp.stack(outs, axis=1)
-        return GenerateResult(
-            tokens=tokens, logits_last=logits, steps=max_new_tokens
+        return GenerateResult(tokens=tokens, logits_last=logits, steps=steps)
+
+
+@dataclasses.dataclass
+class ServedResult:
+    """Per-request outcome of a continuous-batching run (ticks are decode
+    steps; see module docstring)."""
+
+    rid: int
+    tokens: np.ndarray  # (n_emitted,) int32
+    arrival: int
+    admit_tick: int
+    first_token_tick: int
+    finish_tick: int
+    token_ticks: List[int]
+    finish_reason: str  # "eos" | "length"
+
+
+class ContinuousEngine:
+    def __init__(
+        self,
+        model: Model,
+        params: PyTree,
+        *,
+        max_slots: int = 4,
+        max_seq_len: int = 256,
+        page_size: int = 16,
+        num_pages: int = 0,
+        eos_id: Optional[int] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self.eos_id = eos_id
+        self.paged = self.cfg.family in pgd.PAGED_FAMILIES
+        self.sched = Scheduler(max_slots)
+        self.occupancy_trace: List[float] = []
+        self.total_ticks = 0
+        self._pending: List[Request] = []
+        self._results: Dict[int, ServedResult] = {}
+        self._next_rid = 0
+        self._tokens_next = np.zeros((max_slots,), np.int32)
+
+        if self.paged:
+            mpps = kvc.pages_needed(max_seq_len, page_size)
+            if num_pages <= 0:
+                # default: every slot can hold a full-length sequence, +1
+                # for the reserved trash page
+                num_pages = max_slots * mpps + 1
+            self.kv = kvc.PagedKVCache.build(
+                self.cfg, max_slots, page_size, num_pages, mpps
+            )
+            self._step = pgd.make_paged_step(model)
+            # default capacity == exact prompt kv length, so the prefill
+            # cache holds every prompt position for the page writer
+            self._prefill = jax.jit(lambda p, b: model.prefill(p, b))
+        else:
+            self.slot_cache = kvc.SlotCache(model, max_slots, max_seq_len)
+            self._decode = jax.jit(model.decode)
+            if self.cfg.family == "ssm":
+                self._prefill = jax.jit(lambda p, b: model.prefill(p, b))
+            else:
+                self._prefill = jax.jit(
+                    lambda p, b: model.prefill(p, b, max_seq_len)
+                )
+            self.seq_lens = np.zeros((max_slots,), np.int32)
+
+    # -- request intake ----------------------------------------------------
+
+    def _kv_len(self, req: Request) -> int:
+        n = len(req.tokens)
+        if self.cfg.family == "vlm" and req.extras:
+            n += req.extras["patch_embeds"].shape[0]
+        return n
+
+    def submit(
+        self,
+        tokens,
+        max_new_tokens: int,
+        *,
+        arrival: int = 0,
+        extras: Optional[Dict[str, np.ndarray]] = None,
+    ) -> int:
+        req = Request(
+            rid=self._next_rid,
+            tokens=np.asarray(tokens, np.int32),
+            max_new_tokens=max_new_tokens,
+            arrival=arrival,
+            extras=extras,
         )
+        total = self._kv_len(req) + max_new_tokens
+        capacity = self.kv.capacity if self.paged else self.max_seq_len
+        if self.cfg.family not in ("ssm", "hybrid") and total > capacity:
+            raise ValueError(
+                f"request needs {total} kv positions (prompt"
+                f" {self._kv_len(req)} + max_new_tokens {max_new_tokens})"
+                f" but a slot holds {capacity}; raise max_seq_len to"
+                f" {total} or reduce the request."
+            )
+        self._next_rid += 1
+        self._pending.append(req)
+        return req.rid
+
+    def _can_admit(self, req: Request) -> bool:
+        if not self.paged:
+            return True  # slot-cache families: a free slot is the budget
+        total = self._kv_len(req) + req.max_new_tokens
+        need = kvc.pages_needed(total, self.kv.page_size)
+        return need <= self.kv.allocator.free_pages
+
+    # -- engine steps ------------------------------------------------------
+
+    def _admit(self, st: SlotState, now: int) -> None:
+        req = st.req
+        batch = {"tokens": jnp.asarray(req.tokens)[None]}
+        if req.extras:
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v)[None]
+        logits, cache = self._prefill(self.params, batch)
+        kv_len = self._kv_len(req)
+        if self.paged:
+            row = self.kv.admit(st.slot, kv_len + req.max_new_tokens)
+            assert row is not None  # _can_admit reserved the budget
+            self.kv.pages_k, self.kv.pages_v = pgd.write_prompt(
+                self.kv.pages_k, self.kv.pages_v,
+                cache.k[:, 0], cache.v[:, 0], cache.pos[0],
+                jnp.asarray(row),
+            )
+            self.kv.seq_lens[st.slot] = kv_len
+        else:
+            self.slot_cache.insert(cache, st.slot)
+            self.seq_lens[st.slot] = kv_len
+        tok0 = int(np.asarray(logits[0]).argmax())
+        self._emit(st, tok0, now)
+
+    def _emit(self, st: SlotState, tok: int, now: int) -> None:
+        st.out_tokens.append(tok)
+        st.token_ticks.append(now)
+        self._tokens_next[st.slot] = tok
+        if self.eos_id is not None and tok == self.eos_id:
+            self._retire(st.slot, now, "eos")
+        elif st.emitted >= st.req.max_new_tokens:
+            self._retire(st.slot, now, "length")
+
+    def _retire(self, slot: int, now: int, reason: str) -> None:
+        st = self.sched.retire(slot, now, reason)
+        if self.paged:
+            self.kv.retire(slot)  # pages return to the pool this tick
+        else:
+            self.seq_lens[slot] = 0
+        self._results[st.req.rid] = ServedResult(
+            rid=st.req.rid,
+            tokens=np.asarray(st.out_tokens, np.int32),
+            arrival=st.req.arrival,
+            admit_tick=st.admit_tick,
+            first_token_tick=st.token_ticks[0],
+            finish_tick=st.finish_tick,
+            token_ticks=list(st.token_ticks),
+            finish_reason=reason,
+        )
+
+    def _decode_tick(self, now: int) -> None:
+        active = self.sched.active_slots()
+        act = np.zeros((self.max_slots,), bool)
+        act[[s for s, _ in active]] = True
+        toks = jnp.asarray(self._tokens_next)
+        if self.paged:
+            pt, sl = self.kv.device_tables()
+            logits, pk, pv = self._step(
+                self.params, self.kv.pages_k, self.kv.pages_v,
+                pt, sl, jnp.asarray(act), toks,
+            )
+            self.kv.pages_k, self.kv.pages_v = pk, pv
+            self.kv.seq_lens[act] += 1
+        else:
+            logits, cache = self._decode(
+                self.params, self.slot_cache.cache, {"token": toks[:, None]}
+            )
+            self.slot_cache.cache = cache
+            self.seq_lens[act] += 1
+        logits_np = np.asarray(logits)
+        for slot, st in active:
+            self._emit(st, int(logits_np[slot].argmax()), now)
+
+    def _occupancy(self) -> float:
+        if self.paged:
+            alloc = self.kv.allocator
+            return alloc.used_pages / max(alloc.num_pages - 1, 1)
+        return len(self.sched.active) / self.max_slots
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self) -> Dict[int, ServedResult]:
+        """Drain all submitted requests; returns rid -> ServedResult."""
+        pending = sorted(self._pending, key=lambda r: (r.arrival, r.rid))
+        self._pending = []
+        i = 0
+        now = 0
+        while i < len(pending) or self.sched.has_work:
+            while i < len(pending) and pending[i].arrival <= now:
+                self.sched.submit(pending[i])
+                i += 1
+            for st in self.sched.try_admit(now, self._can_admit):
+                self._admit(st, now)
+            if self.sched.active:
+                self.occupancy_trace.append(self._occupancy())
+                self._decode_tick(now)
+                now += 1
+            elif i < len(pending):
+                now = max(now + 1, pending[i].arrival)  # idle: jump ahead
+            elif self.sched.queue:
+                # full-reservation admission on an empty engine always
+                # succeeds for a feasible request, and submit() rejected
+                # infeasible ones -- reaching here is a scheduler bug.
+                raise RuntimeError("queue stalled with no active slots")
+        self.total_ticks = now
+        return dict(self._results)

@@ -1,0 +1,205 @@
+"""Decode-cache state for the continuous-batching engine (DESIGN.md §2.13).
+
+Two cache kinds, both sized for a fixed number of decode *slots* so the
+jitted step shapes never change:
+
+``PagedKVCache`` -- the attention-family cache.  K/V live in a shared pool
+of fixed-size pages, ``(L, P, page_size, KVH, D)`` per tensor; a per-slot
+page table maps token position ``j`` to page ``table[slot, j // ps]``,
+offset ``j % ps``.  Pages come from a free-list allocator; page 0 is
+reserved as the trash page (inactive-slot decode writes land there, so the
+step function needs no branch on slot liveness).  Admission reserves the
+request's full worst-case budget (prompt + max_new_tokens, rounded up to
+pages) -- the no-preemption policy: an admitted sequence can always run to
+its token budget, and retirement returns every page at once.
+
+``SlotCache`` -- the family-native cache for everything the page pool does
+not model: constant-size SSM state (mamba2), the hybrid window ring + SSM
+state (hymba), and the enc-dec ring + cross-KV (whisper; the cross K/V is
+written once at admission and shared across every decode step).  The whole
+family cache is batched over slots; admission inserts a batch-1 prefill
+cache into the slot's rows (``dynamic_update_slice`` along each leaf's
+batch axis, found structurally as the axis where the full and sub shapes
+differ), and the model's own ``decode`` runs all slots in lockstep.
+
+Host/device split: pools and slot caches are device arrays mutated inside
+jitted steps; the page table, sequence lengths and the free list are plain
+host state (numpy / python ints) shipped to the device as small operands
+each step -- scheduling never forces a device sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+TRASH_PAGE = 0  # reserved: never allocated, absorbs masked-slot writes
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-int(n_tokens) // int(page_size))
+
+
+class PageAllocator:
+    """LIFO free list over pages ``1..num_pages-1`` (page 0 reserved)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages or None -- never a partial grant (admission is
+        all-or-nothing, so a rejected request leaves no litter)."""
+        if n > len(self._free):
+            return None
+        got = self._free[-n:][::-1]
+        del self._free[-n:]
+        return got
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not (0 < p < self.num_pages):
+                raise ValueError(f"bad page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(reversed(pages))
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Pool + per-slot tables for one model's attention layers."""
+
+    pages_k: jax.Array  # (L, P, ps, KVH, D)
+    pages_v: jax.Array
+    page_table: np.ndarray  # (max_slots, MP) int32 host, -1 = unallocated
+    seq_lens: np.ndarray  # (max_slots,) int32 host, tokens written
+    allocator: PageAllocator
+    page_size: int
+    slot_pages: List[Optional[List[int]]]  # reservation ledger per slot
+
+    @classmethod
+    def build(
+        cls, cfg, max_slots: int, page_size: int, num_pages: int,
+        max_pages_per_seq: int,
+    ) -> "PagedKVCache":
+        shape = (
+            cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.head_dim
+        )
+        return cls(
+            pages_k=jnp.zeros(shape, cfg.dtype),
+            pages_v=jnp.zeros(shape, cfg.dtype),
+            page_table=np.full((max_slots, max_pages_per_seq), -1, np.int32),
+            seq_lens=np.zeros((max_slots,), np.int32),
+            allocator=PageAllocator(num_pages),
+            page_size=page_size,
+            slot_pages=[None] * max_slots,
+        )
+
+    @property
+    def capacity(self) -> int:  # max kv positions a slot can hold
+        return self.page_table.shape[1] * self.page_size
+
+    def admit(self, slot: int, total_tokens: int) -> Optional[np.ndarray]:
+        """Reserve the full page budget for ``total_tokens``; returns the
+        slot's page-id row (padded with -1) or None if the pool is short."""
+        n = pages_needed(total_tokens, self.page_size)
+        if n > self.page_table.shape[1]:
+            raise ValueError(
+                f"request needs {n} pages/slot > max_pages_per_seq "
+                f"{self.page_table.shape[1]} "
+                f"(capacity {self.capacity} tokens)"
+            )
+        got = self.allocator.alloc(n)
+        if got is None:
+            return None
+        row = np.full((self.page_table.shape[1],), -1, np.int32)
+        row[:n] = got
+        self.page_table[slot] = row
+        self.seq_lens[slot] = 0
+        self.slot_pages[slot] = got
+        return row
+
+    def retire(self, slot: int) -> int:
+        """Free the slot's pages immediately; returns how many."""
+        pages = self.slot_pages[slot]
+        if pages is None:
+            return 0
+        self.allocator.free(pages)
+        self.slot_pages[slot] = None
+        self.page_table[slot] = -1
+        self.seq_lens[slot] = 0
+        return len(pages)
+
+    def device_tables(self):
+        return (
+            jnp.asarray(self.page_table), jnp.asarray(self.seq_lens)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Slot-batched family caches (SSM state / window ring / enc-dec cross-KV)
+# ---------------------------------------------------------------------------
+
+
+def _insert_slot(cache: PyTree, sub: PyTree, slot: jax.Array) -> PyTree:
+    """Write a batch-1 cache into one slot of a slot-batched cache.
+
+    The batch axis of each leaf is found structurally: the axis where the
+    full (max_slots) and sub (1) shapes differ.  Leaves with identical
+    shapes (none today) pass through untouched."""
+
+    def one(full, s):
+        for ax, (a, b) in enumerate(zip(full.shape, s.shape)):
+            if a != b:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, s.astype(full.dtype), slot, axis=ax
+                )
+        return full
+
+    return jax.tree_util.tree_map(one, cache, sub)
+
+
+class SlotCache:
+    """Slot-batched wrapper over a family's native decode cache."""
+
+    def __init__(self, model, max_slots: int, capacity: int):
+        self.max_slots = max_slots
+        self.capacity = capacity
+        self.cache = model.init_cache(max_slots, capacity)
+        self._insert = jax.jit(_insert_slot)
+
+    def insert(self, sub_cache: PyTree, slot: int) -> None:
+        self.cache = self._insert(
+            self.cache, sub_cache, jnp.asarray(slot, jnp.int32)
+        )
+
+
+def batch_axes(cache: PyTree, sub: PyTree) -> Dict[str, int]:
+    """Diagnostic: leaf-path -> detected batch axis (tests assert the
+    structural detection matches the documented family layouts)."""
+    out = {}
+    flat_full = jax.tree_util.tree_flatten_with_path(cache)[0]
+    flat_sub = jax.tree_util.tree_leaves(sub)
+    for (path, full), s in zip(flat_full, flat_sub):
+        ax = next(
+            (i for i, (a, b) in enumerate(zip(full.shape, s.shape))
+             if a != b),
+            None,
+        )
+        out[jax.tree_util.keystr(path)] = ax
+    return out

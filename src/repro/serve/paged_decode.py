@@ -1,0 +1,150 @@
+"""Paged prefill-writer and decode step for the attention families.
+
+The continuous engine keeps K/V for dense / moe / vlm sequences in the
+shared page pool (serve/kv_cache.py); this module is the jitted device side:
+
+``write_prompt``    -- scatter a batch-1 prefill cache (all prompt positions,
+                       absolute ``cache.pos``) into the slot's reserved
+                       pages.  One compile per prompt length.
+
+``make_paged_step`` -- a decode step over all slots at once, the paged twin
+                       of ``transformer.decode_step``: embed the last sampled
+                       token per slot, rope q/k at position ``seq_lens``,
+                       scatter the new K/V into ``page_table[slot,
+                       seq_len // ps]`` (inactive slots write to the trash
+                       page -- no liveness branch, shapes stay static), then
+                       ``paged_decode_attention`` over the pool with
+                       ``seq_lens + active`` so freshly written tokens are
+                       visible and retired slots (len 0) yield zeros.
+                       MoE routes through ``moe_mlp_fn`` exactly like the
+                       ring decode path; VLM decode is token-only (the patch
+                       prefix entered the pages at prefill).
+
+Positions are absolute across prefill and decode, so RoPE and masking match
+the ring-buffer engine token for token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+@jax.jit
+def write_prompt(
+    pages_k: jax.Array,  # (L, P, ps, KVH, D)
+    pages_v: jax.Array,
+    k_new: jax.Array,  # (L, S, KVH, D) roped prompt K (cache.k[:, 0])
+    v_new: jax.Array,
+    pos: jax.Array,  # (S,) absolute positions (cache.pos[0]), -1 = unwritten
+    page_row: jax.Array,  # (MP,) the slot's page ids, -1 padded
+) -> Tuple[jax.Array, jax.Array]:
+    nl, p, ps, kvh, d = pages_k.shape
+    page_of = page_row[jnp.clip(pos, 0, None) // ps]  # admission covers S
+    dst = jnp.where(pos >= 0, page_of * ps + pos % ps, 0)  # -1 -> trash
+    fk = pages_k.reshape(nl, p * ps, kvh, d).at[:, dst].set(
+        k_new.astype(pages_k.dtype)
+    )
+    fv = pages_v.reshape(nl, p * ps, kvh, d).at[:, dst].set(
+        v_new.astype(pages_v.dtype)
+    )
+    return fk.reshape(pages_k.shape), fv.reshape(pages_v.shape)
+
+
+def _paged_decode_step(
+    params: PyTree,
+    pages_k: jax.Array,  # (L, P, ps, KVH, D)
+    pages_v: jax.Array,
+    page_table: jax.Array,  # (M, MP) int32
+    seq_lens: jax.Array,  # (M,) int32 tokens already in pages
+    active: jax.Array,  # (M,) bool slot liveness mask
+    tokens: jax.Array,  # (M,) int32 last sampled token per slot
+    *,
+    cfg: ModelConfig,
+    mlp_fn,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    m = tokens.shape[0]
+    nl, p, ps, kvh, d = pages_k.shape
+    mp = page_table.shape[1]
+
+    h = tfm.embed_tokens(params, tokens[:, None], cfg)  # (M, 1, Dm)
+    q_pos = seq_lens[:, None]  # the new token's absolute position
+    page_of = page_table[
+        jnp.arange(m), jnp.clip(seq_lens // ps, 0, mp - 1)
+    ]
+    dest_page = jnp.where(active & (page_of > 0), page_of, 0)
+    dest = dest_page * ps + seq_lens % ps  # (M,) flat pool index
+    attn_lens = seq_lens + active.astype(jnp.int32)  # incl. the new token
+
+    def body(carry, xs):
+        x = carry
+        bp, pk, pv = xs  # pk/pv: (P, ps, KVH, D) one layer's pool
+        dt = x.dtype
+        hnorm = L.rmsnorm(x, bp["attn_norm"], cfg.rms_eps)
+        q = hnorm @ bp["q_proj"].astype(dt)
+        k_new = hnorm @ bp["k_proj"].astype(dt)
+        v_new = hnorm @ bp["v_proj"].astype(dt)
+        if "q_bias" in bp:
+            q = q + bp["q_bias"].astype(dt)
+            k_new = k_new + bp["k_bias"].astype(dt)
+            v_new = v_new + bp["v_bias"].astype(dt)
+        q = q.reshape(m, 1, cfg.n_heads, cfg.head_dim)
+        k_new = k_new.reshape(m, 1, cfg.n_kv_heads, cfg.head_dim)
+        v_new = v_new.reshape(m, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, q_pos, cfg.rope_theta)
+        k_new = L.apply_rope(k_new, q_pos, cfg.rope_theta)
+        pk2 = pk.reshape(p * ps, kvh, d).at[dest].set(
+            k_new[:, 0].astype(pk.dtype)
+        ).reshape(pk.shape)
+        pv2 = pv.reshape(p * ps, kvh, d).at[dest].set(
+            v_new[:, 0].astype(pv.dtype)
+        ).reshape(pv.shape)
+        out = attn_lib.paged_decode_attention(
+            q, pk2, pv2, page_table, attn_lens, window=cfg.attn_window,
+        )
+        out = out.reshape(m, 1, cfg.q_dim) @ bp["o_proj"].astype(dt)
+        x = x + out
+        hnorm = L.rmsnorm(x, bp["mlp_norm"], cfg.rms_eps)
+        mlp_out, _ = mlp_fn(bp, hnorm, cfg)
+        x = x + mlp_out
+        return x, (pk2, pv2)
+
+    h, (pk_all, pv_all) = tfm.scan_or_loop(
+        body, h, (params["blocks"], pages_k, pages_v),
+        scan=cfg.scan_layers, unroll=cfg.scan_unroll,
+    )
+    h = L.rmsnorm(h, params["final_norm"], cfg.rms_eps)
+    logits = (
+        h[:, 0].astype(jnp.float32)
+        @ tfm.lm_head_matrix(params, cfg).astype(jnp.float32)
+    )
+    return logits, pk_all, pv_all
+
+
+def make_paged_step(model):
+    """Jitted ``(params, pages_k, pages_v, page_table, seq_lens, active,
+    tokens) -> (logits, pages_k, pages_v)`` for one attention-family model."""
+    cfg = model.cfg
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"family {cfg.family!r} has no paged decode path "
+            f"(paged families: {PAGED_FAMILIES})"
+        )
+    mlp_fn = (
+        moe_lib.moe_mlp_fn if cfg.family == "moe" else tfm.default_mlp_fn
+    )
+    return jax.jit(
+        functools.partial(_paged_decode_step, cfg=cfg, mlp_fn=mlp_fn)
+    )

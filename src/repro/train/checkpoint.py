@@ -297,6 +297,53 @@ def _apply_retention(base: str, keep: int) -> None:
                           ignore_errors=True)
 
 
+def load_params_latest(
+    base_dir: str, params_like: PyTree, verify: bool = True
+) -> Tuple[PyTree, int]:
+    """Train->serve handoff: fill a PARAMS skeleton from the newest
+    checkpoint that has every param leaf intact, without constructing the
+    optimizer state the full ``CheckpointManager.load`` path needs.
+
+    Train checkpoints serialize a ``TrainState``, so param leaves live
+    under ``.params`` + their tree path in the manifest -- in the top-level
+    ``leaves`` section for BOTH formats (shard-parallel saves only shard
+    the bucket stacks; params are replicated leaves written by the
+    coordinator).  Walks newest-to-oldest past corrupt/partial checkpoints
+    like ``load_latest``.  Returns ``(params, step)``.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(params_like)
+    with_paths, _ = jax.tree_util.tree_flatten_with_path(params_like)
+    paths = [".params" + jax.tree_util.keystr(p) for p, _ in with_paths]
+    first_err: Optional[BaseException] = None
+    for step in reversed(checkpoint_dirs(base_dir)):
+        cdir = os.path.join(base_dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(cdir, _MANIFEST)) as f:
+                manifest = json.load(f)
+            out = []
+            for path, like in zip(paths, flat):
+                entry = manifest["leaves"].get(path)
+                if entry is None:
+                    raise KeyError(f"checkpoint missing param leaf {path}")
+                fpath = os.path.join(cdir, entry["file"])
+                if verify and _sha256(fpath) != entry["sha256"]:
+                    raise IOError(f"checksum mismatch for {path} in {cdir}")
+                arr = np.load(fpath, allow_pickle=False)
+                if tuple(arr.shape) != tuple(like.shape):
+                    raise ValueError(
+                        f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                        f"params {like.shape}"
+                    )
+                out.append(jax.numpy.asarray(arr.astype(like.dtype)))
+            return jax.tree_util.tree_unflatten(treedef, out), step
+        except (OSError, ValueError, KeyError) as e:
+            if first_err is None:
+                first_err = e
+    if first_err is not None:
+        raise first_err
+    raise FileNotFoundError(f"no checkpoints under {base_dir}")
+
+
 class CheckpointManager:
     def __init__(
         self,

@@ -147,3 +147,154 @@ def test_galore_project_accumulates_over_d_blocks():
     np.testing.assert_allclose(
         np.asarray(r_multi), np.asarray(r_single), atol=1e-4
     )
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (kernels/flash_attention_decode) -- ISSUE 10
+# ---------------------------------------------------------------------------
+
+
+def _paged_setup(key, b, mp, ps, h, kvh, d, fills, num_pages=None):
+    """Pool + per-slot tables with ragged fills.
+
+    ``fills[i]`` = tokens written for slot i (0 = empty/retired slot).
+    Pages are handed out sequentially from 1 (page 0 = trash); unreferenced
+    pool pages are filled with garbage so reads through -1 entries or past
+    seq_len would show up as mismatches.
+    """
+    p = num_pages or (1 + b * mp)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    pages_k = jax.random.normal(ks[1], (p, ps, kvh, d), jnp.float32) * 50.0
+    pages_v = jax.random.normal(ks[2], (p, ps, kvh, d), jnp.float32) * 50.0
+    table = np.full((b, mp), -1, np.int32)
+    nxt = 1
+    for i, n in enumerate(fills):
+        for j in range((n + ps - 1) // ps):
+            table[i, j] = nxt
+            nxt += 1
+    # overwrite the referenced region with moderate values; garbage stays
+    # in unreferenced pages
+    used = table[table >= 0]
+    pages_k = pages_k.at[used].set(
+        jax.random.normal(ks[3], (used.size, ps, kvh, d)) * 0.5
+    )
+    pages_v = pages_v.at[used].set(
+        jax.random.normal(jax.random.fold_in(ks[3], 1),
+                          (used.size, ps, kvh, d)) * 0.5
+    )
+    seq_lens = jnp.asarray(np.asarray(fills, np.int32))
+    return q, pages_k, pages_v, jnp.asarray(table), seq_lens
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize("ps,d", [(8, 64), (16, 128), (32, 64)])
+@pytest.mark.parametrize("window", [0, 5])
+def test_paged_decode_kernel_matches_ref(ps, d, window):
+    """Interpret-mode Pallas paged decode == jnp ref across page sizes,
+    head dims, sliding windows, and ragged fills (incl. an empty slot)."""
+    from repro.kernels.flash_attention_decode.kernel import (
+        paged_decode_attention_kernel,
+    )
+    from repro.kernels.flash_attention_decode.ref import (
+        paged_decode_attention_ref,
+    )
+
+    b, mp, h, kvh = 4, 3, 4, 2
+    fills = [1, ps + 2, 3 * ps - 1, 0]  # partial / multi-page / full / empty
+    q, pk, pv, table, lens = _paged_setup(
+        jax.random.fold_in(KEY, ps), b, mp, ps, h, kvh, d, fills
+    )
+    out = paged_decode_attention_kernel(
+        q, pk, pv, table, lens, window=window, interpret=True
+    )
+    ref = paged_decode_attention_ref(q, pk, pv, table, lens, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-5
+    )
+    # the empty slot must be exact zeros (not NaN) on both paths
+    assert np.all(np.asarray(out)[3] == 0.0)
+    assert np.all(np.asarray(ref)[3] == 0.0)
+
+
+@pytest.mark.serve
+def test_paged_decode_ref_matches_exact_attention():
+    """The paged ref against the repo's exact_attention oracle: gather the
+    pages into a contiguous sequence and compare."""
+    from repro.kernels.flash_attention_decode.ref import (
+        paged_decode_attention_ref,
+    )
+    from repro.models.attention import exact_attention
+
+    b, mp, ps, h, kvh, d = 3, 4, 8, 8, 4, 32
+    fills = [5, 17, 32]
+    q, pk, pv, table, lens = _paged_setup(
+        jax.random.fold_in(KEY, 99), b, mp, ps, h, kvh, d, fills
+    )
+    out = paged_decode_attention_ref(q, pk, pv, table, lens)
+    table_np = np.asarray(table)
+    for i, n in enumerate(fills):
+        safe = np.maximum(table_np[i], 0)
+        k_i = np.asarray(pk)[safe].reshape(mp * ps, kvh, d)[None, :n]
+        v_i = np.asarray(pv)[safe].reshape(mp * ps, kvh, d)[None, :n]
+        ref_i = exact_attention(
+            q[i:i + 1], jnp.asarray(k_i), jnp.asarray(v_i),
+            jnp.full((1, 1), n - 1, jnp.int32),
+            jnp.arange(n, dtype=jnp.int32)[None],
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[i:i + 1]), np.asarray(ref_i), atol=1e-5
+        )
+
+
+@pytest.mark.serve
+def test_paged_decode_ops_alignment_gate():
+    """ops dispatch: CPU backend takes the ref; force_pallas bypasses the
+    backend check but NOT the alignment gate (ragged page size / off-lane
+    head dim fall back to the ref instead of an unsupported lowering)."""
+    from repro.kernels.flash_attention_decode import ops as fad_ops
+    from repro.kernels.flash_attention_decode.ref import (
+        paged_decode_attention_ref,
+    )
+
+    # aligned: ps % 8 == 0, d % 64 == 0
+    q, pk, pv, table, lens = _paged_setup(
+        jax.random.fold_in(KEY, 7), 2, 2, 8, 4, 2, 64, [3, 9]
+    )
+    ref = paged_decode_attention_ref(q, pk, pv, table, lens)
+    # CPU dispatch -> ref, bit-identical
+    np.testing.assert_array_equal(
+        np.asarray(fad_ops.paged_decode_attention(q, pk, pv, table, lens)),
+        np.asarray(ref),
+    )
+    # forced kernel (interpret) -> parity
+    np.testing.assert_allclose(
+        np.asarray(fad_ops.paged_decode_attention(
+            q, pk, pv, table, lens, force_pallas=True, interpret=True
+        )),
+        np.asarray(ref), atol=2e-5,
+    )
+    # off-alignment (ps=6, d=48): forced pallas still routes to the ref --
+    # identical bits prove no kernel ran
+    q2, pk2, pv2, t2, l2 = _paged_setup(
+        jax.random.fold_in(KEY, 8), 2, 2, 6, 4, 2, 48, [4, 7]
+    )
+    ref2 = paged_decode_attention_ref(q2, pk2, pv2, t2, l2)
+    np.testing.assert_array_equal(
+        np.asarray(fad_ops.paged_decode_attention(
+            q2, pk2, pv2, t2, l2, force_pallas=True, interpret=True
+        )),
+        np.asarray(ref2),
+    )
+
+
+@pytest.mark.serve
+def test_paged_decode_attention_requires_single_query():
+    from repro.models.attention import paged_decode_attention
+
+    q = jnp.zeros((2, 3, 4, 64))
+    pk = jnp.zeros((4, 8, 2, 64))
+    table = jnp.zeros((2, 2), jnp.int32)
+    lens = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError, match="q_len=1"):
+        paged_decode_attention(q, pk, pk, table, lens)

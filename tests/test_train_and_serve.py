@@ -354,3 +354,217 @@ def test_compressed_kwarg_normalization(setup):
     # compressed modes need a mesh to shard over
     with pytest.raises(ValueError, match="mesh"):
         make_train_step(model, opt, compressed="flat", donate=False)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: continuous-batching serve engine (paged KV cache + satellites)
+# ---------------------------------------------------------------------------
+
+
+def _family_batch(cfg, b, s, key):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (b, 4, cfg.d_model)
+        )
+    if cfg.family == "audio":
+        batch["frame_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 2), (b, cfg.enc_frames, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.serve
+def test_continuous_engine_matches_static_tokens(setup):
+    """Paged continuous batching with mid-flight arrivals emits exactly the
+    tokens static-batch greedy generate produces per request."""
+    from repro.serve.engine import ContinuousEngine
+
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(5)
+    prompts = [
+        np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (5 + 3 * i,), 0, cfg.vocab_size
+        ))
+        for i in range(4)
+    ]
+    new = [6, 4, 7, 5]
+    eng = ServeEngine(model, params, capacity=64)
+    ref = [
+        np.asarray(
+            eng.generate({"tokens": jnp.asarray(p)[None]},
+                         max_new_tokens=n).tokens
+        )[0]
+        for p, n in zip(prompts, new)
+    ]
+    # 2 slots for 4 requests: request 2/3 queue and admit mid-flight as
+    # earlier sequences retire
+    ce = ContinuousEngine(model, params, max_slots=2, max_seq_len=64,
+                          page_size=8)
+    rids = [
+        ce.submit(p, n, arrival=a)
+        for p, n, a in zip(prompts, new, [0, 0, 1, 2])
+    ]
+    res = ce.run()
+    for rid, expect in zip(rids, ref):
+        np.testing.assert_array_equal(res[rid].tokens, expect)
+    # retirement really freed pages: pool drained back to empty
+    assert ce.kv.allocator.used_pages == 0
+    assert max(ce.occupancy_trace) > 0
+
+
+@pytest.mark.serve
+def test_continuous_engine_page_accounting(setup):
+    """Admission reserves ceil((prompt+max_new)/ps) pages, retirement
+    returns them, and over-budget requests are rejected at submit."""
+    from repro.serve.engine import ContinuousEngine
+    from repro.serve.kv_cache import pages_needed
+
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    ce = ContinuousEngine(model, params, max_slots=2, max_seq_len=32,
+                          page_size=8)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        ce.submit(np.zeros((30,), np.int32), 10)  # 40 > 32 capacity
+    rid = ce.submit(np.zeros((9,), np.int32), 4)  # 13 tokens -> 2 pages
+    assert pages_needed(13, 8) == 2
+    res = ce.run()
+    assert ce.kv.allocator.used_pages == 0
+    assert len(res[rid].tokens) == 4
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize(
+    "arch", ["llama3-8b", "olmoe-1b-7b", "llava-next-34b", "mamba2-370m",
+             "hymba-1.5b", "whisper-medium"],
+)
+def test_prefill_decode_matches_full_forward(arch):
+    """Per family: prefill(prompt) + teacher-forced decode steps reproduce
+    the full-sequence forward's last-token logits."""
+    from repro.configs.registry import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch, smoke=True).with_(dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    s, extra = 6, 3
+    full = _family_batch(cfg, 1, s + extra, key)
+    prompt = {k: (v[:, :s] if k == "tokens" else v) for k, v in full.items()}
+    # the KV prefix includes the vlm patch embeddings
+    prefix = full["patch_embeds"].shape[1] if cfg.family == "vlm" else 0
+    cap = None if cfg.family == "ssm" else prefix + s + extra + 2
+    logits_full, _ = (
+        model.prefill(params, full)
+        if cfg.family == "ssm" else model.prefill(params, full, cap)
+    )
+    logits, cache = (
+        model.prefill(params, prompt)
+        if cfg.family == "ssm" else model.prefill(params, prompt, cap)
+    )
+    for i in range(extra):
+        tok = full["tokens"][:, s + i][:, None]
+        logits, cache = model.decode(params, cache, {"token": tok})
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_full), atol=2e-4, rtol=1e-4
+    )
+
+
+@pytest.mark.serve
+def test_serve_capacity_validation_raises(setup):
+    """The silent ring-wrap bug: prompt + max_new_tokens > capacity must
+    raise with the required capacity, not wrap and overwrite the prompt."""
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": data.batch_at(0)["tokens"][:1, :12]}
+    eng = ServeEngine(model, params, capacity=16)
+    with pytest.raises(ValueError, match="capacity=20"):
+        eng.generate(batch, max_new_tokens=8)
+    # default capacity == prompt length: any decode would wrap
+    eng0 = ServeEngine(model, params)
+    with pytest.raises(ValueError, match="capacity=13"):
+        eng0.generate(batch, max_new_tokens=1)
+    # exactly enough passes
+    out = ServeEngine(model, params, capacity=20).generate(
+        batch, max_new_tokens=8
+    )
+    assert np.asarray(out.tokens).shape == (1, 8)
+
+
+@pytest.mark.serve
+def test_serve_eos_early_exit(setup):
+    """With eos_id, generate stops decoding once every row finished and
+    pads the remaining columns with eos."""
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    tok_row = data.batch_at(0)["tokens"][:1, :10]
+    batch = {"tokens": jnp.concatenate([tok_row, tok_row], axis=0)}
+    eng = ServeEngine(model, params, capacity=64)
+    base = np.asarray(eng.generate(batch, max_new_tokens=8).tokens)
+    eos = int(base[0, 2])  # both rows identical -> both finish at step 2
+    out = eng.generate(batch, max_new_tokens=8, eos_id=eos)
+    got = np.asarray(out.tokens)
+    assert got.shape == (2, 8)
+    np.testing.assert_array_equal(got[:, :3], base[:, :3])
+    assert (got[:, 3:] == eos).all()  # padded, not resampled
+    assert out.steps < 8  # decode really stopped early
+
+
+@pytest.mark.serve
+def test_scheduler_fcfs_head_of_line():
+    from repro.serve.scheduler import Request, Scheduler
+
+    sched = Scheduler(max_slots=2)
+    for rid in range(3):
+        sched.submit(Request(rid=rid, tokens=np.zeros(4, np.int32),
+                             max_new_tokens=2, arrival=0))
+    # head request unaffordable: nothing admits behind it
+    assert sched.try_admit(0, lambda r: r.rid != 0) == []
+    admitted = sched.try_admit(0, lambda r: True)
+    assert [st.req.rid for st in admitted] == [0, 1]  # slots exhausted
+    sched.retire(admitted[0].slot, 5, "eos")
+    assert [st.req.rid for st in sched.try_admit(5, lambda r: True)] == [2]
+
+
+@pytest.mark.serve
+def test_page_allocator_reuse_and_double_free():
+    from repro.serve.kv_cache import PageAllocator
+
+    alloc = PageAllocator(num_pages=5)  # pages 1..4
+    a = alloc.alloc(3)
+    assert alloc.alloc(2) is None  # only 1 left: all-or-nothing
+    alloc.free(a)
+    assert alloc.free_pages == 4
+    b = alloc.alloc(4)
+    assert sorted(b) == [1, 2, 3, 4] and 0 not in b  # trash page never given
+    alloc.free(b)
+    with pytest.raises(ValueError, match="double free"):
+        alloc.free([b[0]])
+
+
+@pytest.mark.serve
+def test_load_params_latest_walks_past_corruption(setup, tmp_path):
+    """Train->serve handoff: params come from the newest checkpoint whose
+    param leaves verify; a corrupted newest falls back to the previous."""
+    from repro.train.checkpoint import CheckpointManager, load_params_latest
+
+    cfg, model, opt, data = setup
+    params1 = model.init(jax.random.PRNGKey(1))
+    params2 = model.init(jax.random.PRNGKey(2))
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    mgr.save(TrainState(params1, opt.init(params1)), step=1)
+    mgr.save(TrainState(params2, opt.init(params2)), step=2)
+    loaded, step = load_params_latest(str(tmp_path / "ck"), params1)
+    assert step == 2
+    np.testing.assert_array_equal(
+        np.asarray(loaded["embed"]), np.asarray(params2["embed"])
+    )
+    # corrupt the newest step's embed leaf -> fallback to step 1
+    victim = tmp_path / "ck" / "step_00000002" / "_params_embed.npy"
+    victim.write_bytes(b"corrupt" + victim.read_bytes()[7:])
+    loaded, step = load_params_latest(str(tmp_path / "ck"), params1)
+    assert step == 1
+    np.testing.assert_array_equal(
+        np.asarray(loaded["embed"]), np.asarray(params1["embed"])
+    )
