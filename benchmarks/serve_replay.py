@@ -3,7 +3,8 @@
 A seeded, bursty arrival trace (geometric gaps between bursts, 1-3 requests
 per burst, mixed prompt/output lengths) is replayed through
 ``ContinuousEngine``; the engine's tick clock (one decode step per tick,
-prefill folded into the admit tick) makes every latency number a pure
+prefill occupying the admit tick with the first decode on the next tick, so
+every token costs exactly one tick) makes every latency number a pure
 function of the scheduler, so the gated metrics are deterministic on any
 machine:
 
@@ -89,7 +90,8 @@ def run() -> List[Row]:
     tick_us = (param_bytes + occ_mean * pool_bytes) / hw.HBM_BW * 1e6
 
     # Per-token latency in ticks: admission wait + prefill for the first
-    # token, inter-token gap after (gaps > 1 would mean a stalled slot).
+    # token, inter-token gap after (exactly 1 for a never-stalled slot --
+    # prefill occupies the admit tick, so no 0-gap token pairs).
     lat_ticks: List[int] = []
     for r in results.values():
         lat_ticks.append(r.token_ticks[0] - r.arrival + 1)

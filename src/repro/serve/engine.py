@@ -24,10 +24,15 @@ recompile.  Per family:
     model's own ``decode`` runs all slots in lockstep (decode is
     row-independent, so dead slots are just ignored lanes).
 
-Time advances in ticks -- one decode step per tick, prefills folded into
-the tick they admit on -- so the replay benchmark's latency numbers are
-deterministic.  Continuous decoding is greedy (token-identity with the
-static engine is part of the test contract).
+Time advances in ticks -- one decode step per tick.  Prefill occupies the
+tick a request admits on (the prompt's greedy next token is emitted that
+tick) and the first decode step lands on the following tick, so every
+emitted token costs exactly one tick and the replay benchmark's latency
+numbers are deterministic with uniform inter-token gaps.  Admission also
+reserves the request's full page budget atomically inside the scheduler's
+admission loop -- two queued requests that each fit individually but not
+together can never both admit in one tick.  Continuous decoding is greedy
+(token-identity with the static engine is part of the test contract).
 """
 from __future__ import annotations
 
@@ -228,6 +233,12 @@ class ContinuousEngine:
             arrival=arrival,
             extras=extras,
         )
+        if self._kv_len(req) < 1 or max_new_tokens < 1:
+            raise ValueError(
+                f"degenerate request (prompt kv {self._kv_len(req)},"
+                f" max_new_tokens {max_new_tokens}): need a non-empty"
+                f" prompt and at least one output token."
+            )
         total = self._kv_len(req) + max_new_tokens
         capacity = self.kv.capacity if self.paged else self.max_seq_len
         if self.cfg.family not in ("ssm", "hybrid") and total > capacity:
@@ -241,12 +252,16 @@ class ContinuousEngine:
         self._pending.append(req)
         return req.rid
 
-    def _can_admit(self, req: Request) -> bool:
+    def _reserve(self, req: Request, slot: int) -> bool:
+        """Scheduler callback: atomically check-and-reserve the request's
+        worst-case page budget for ``slot``.  The reservation must happen
+        here, inside the admission loop -- checking ``free_pages`` without
+        reserving would let two queued heads that each fit individually
+        (but not together) both admit in one tick."""
         if not self.paged:
             return True  # slot-cache families: a free slot is the budget
         total = self._kv_len(req) + req.max_new_tokens
-        need = kvc.pages_needed(total, self.kv.page_size)
-        return need <= self.kv.allocator.free_pages
+        return self.kv.admit(slot, total) is not None
 
     # -- engine steps ------------------------------------------------------
 
@@ -259,8 +274,9 @@ class ContinuousEngine:
         logits, cache = self._prefill(self.params, batch)
         kv_len = self._kv_len(req)
         if self.paged:
-            row = self.kv.admit(st.slot, kv_len + req.max_new_tokens)
-            assert row is not None  # _can_admit reserved the budget
+            # pages were reserved by _reserve when the scheduler granted
+            # the slot; the page-table row is the reservation
+            row = self.kv.page_table[st.slot].copy()
             self.kv.pages_k, self.kv.pages_v = pgd.write_prompt(
                 self.kv.pages_k, self.kv.pages_v,
                 cache.k[:, 0], cache.v[:, 0], cache.pos[0],
@@ -340,11 +356,18 @@ class ContinuousEngine:
             while i < len(pending) and pending[i].arrival <= now:
                 self.sched.submit(pending[i])
                 i += 1
-            for st in self.sched.try_admit(now, self._can_admit):
-                self._admit(st, now)
-            if self.sched.active:
-                self.occupancy_trace.append(self._occupancy())
+            # decode BEFORE admitting: a slot admitted this tick spends the
+            # tick on prefill and takes its first decode step next tick, so
+            # every emitted token occupies exactly one tick (no 0-gap pairs
+            # in the latency trace).  Slots retired by this decode free
+            # their pages in time for the admissions below.
+            worked = bool(self.sched.active)
+            if worked:
                 self._decode_tick(now)
+            for st in self.sched.try_admit(now, self._reserve):
+                self._admit(st, now)
+            if worked or self.sched.active:
+                self.occupancy_trace.append(self._occupancy())
                 now += 1
             elif i < len(pending):
                 now = max(now + 1, pending[i].arrival)  # idle: jump ahead

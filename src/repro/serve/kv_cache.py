@@ -65,6 +65,10 @@ class PageAllocator:
     def alloc(self, n: int) -> Optional[List[int]]:
         """n pages or None -- never a partial grant (admission is
         all-or-nothing, so a rejected request leaves no litter)."""
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n == 0:
+            return []  # NOT self._free[-0:], which would drain the pool
         if n > len(self._free):
             return None
         got = self._free[-n:][::-1]

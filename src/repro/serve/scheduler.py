@@ -8,14 +8,18 @@ Scheduling policy (DESIGN.md §2.13):
     little utilization for a starvation-free guarantee -- a large request
     can never be overtaken forever by small ones.
   * Admission is all-or-nothing against the request's WORST-CASE budget
-    (prompt + max_new_tokens): the engine's ``can_admit`` callback checks
-    pages / slot capacity for the full reservation, so an admitted sequence
-    never needs preemption or mid-flight re-allocation, and retirement
-    (EOS or token budget) releases the whole reservation at once.
+    (prompt + max_new_tokens): the engine's ``reserve`` callback atomically
+    checks AND reserves pages / slot capacity for the full reservation at
+    the moment the slot is granted.  Reserving inside the admission loop is
+    what keeps multi-admission ticks safe -- the second queued head is
+    checked against a pool that already counts the first head's grant -- and
+    an admitted sequence never needs preemption or mid-flight re-allocation;
+    retirement (EOS or token budget) releases the whole reservation at once.
 
-Time is measured in engine ticks (one decode step per tick, prefills folded
-into the tick they admit on), which keeps every latency number in the replay
-benchmark deterministic.
+Time is measured in engine ticks: one decode step per tick, and prefill
+occupies the tick a request admits on (its first decode step lands on the
+next tick), which keeps every latency number in the replay benchmark
+deterministic.
 """
 from __future__ import annotations
 
@@ -77,15 +81,22 @@ class Scheduler:
         self.queue.append(req)
 
     def try_admit(
-        self, now: int, can_admit: Callable[[Request], bool]
+        self, now: int, reserve: Callable[[Request, int], bool]
     ) -> List[SlotState]:
-        """Admit from the queue head while slots and budget allow."""
+        """Admit from the queue head while slots and budget allow.
+
+        ``reserve(req, slot)`` must atomically check AND reserve the
+        request's worst-case budget for ``slot``; returning False leaves
+        the queue and the slot untouched.  Because the reservation lands
+        before the next head is examined, two requests that each fit
+        individually but not together can never both admit in one tick."""
         admitted = []
         while self.queue and self._free_slots:
-            if not can_admit(self.queue[0]):
+            slot = self._free_slots[-1]
+            if not reserve(self.queue[0], slot):
                 break  # head-of-line: preserve arrival order
             req = self.queue.popleft()
-            slot = self._free_slots.pop()
+            self._free_slots.pop()
             st = SlotState(req=req, slot=slot, admit_tick=now)
             self.active[slot] = st
             admitted.append(st)

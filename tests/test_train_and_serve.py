@@ -427,11 +427,57 @@ def test_continuous_engine_page_accounting(setup):
                           page_size=8)
     with pytest.raises(ValueError, match="max_seq_len"):
         ce.submit(np.zeros((30,), np.int32), 10)  # 40 > 32 capacity
+    # degenerate requests rejected at submit (max_new=0 used to reach
+    # alloc(0), whose -0 slice drained the whole free list)
+    with pytest.raises(ValueError, match="degenerate"):
+        ce.submit(np.zeros((4,), np.int32), 0)
+    with pytest.raises(ValueError, match="degenerate"):
+        ce.submit(np.zeros((0,), np.int32), 4)  # empty prompt
     rid = ce.submit(np.zeros((9,), np.int32), 4)  # 13 tokens -> 2 pages
     assert pages_needed(13, 8) == 2
     res = ce.run()
     assert ce.kv.allocator.used_pages == 0
     assert len(res[rid].tokens) == 4
+
+
+@pytest.mark.serve
+def test_continuous_engine_no_overadmission(setup):
+    """Contended-pool admission: 6 free pages, two requests needing 5
+    pages each.  Both fit individually but not together -- the engine must
+    admit one, queue the other until retirement frees its pages, and still
+    produce static-identical tokens (the old free_pages check admitted
+    both and crashed on the unbacked second reservation)."""
+    from repro.serve.engine import ContinuousEngine
+
+    cfg, model, opt, data = setup
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(11)
+    prompts = [
+        np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (14,), 0, cfg.vocab_size
+        ))
+        for i in range(2)
+    ]
+    # page_size=4, max_seq_len=20 -> 5 pages/slot; num_pages=7 -> 6 usable
+    ce = ContinuousEngine(model, params, max_slots=2, max_seq_len=20,
+                          page_size=4, num_pages=7)
+    rids = [ce.submit(p, 4, arrival=0) for p in prompts]  # 18 tok: 5 pages
+    res = ce.run()
+    first, second = res[rids[0]], res[rids[1]]
+    assert second.admit_tick > first.admit_tick  # waited for the pool
+    assert ce.kv.allocator.used_pages == 0
+    eng = ServeEngine(model, params, capacity=64)
+    for p, r in zip(prompts, (first, second)):
+        expect = np.asarray(eng.generate(
+            {"tokens": jnp.asarray(p)[None]}, max_new_tokens=4
+        ).tokens)[0]
+        np.testing.assert_array_equal(r.tokens, expect)
+    # tick convention: prefill occupies the admit tick, first decode lands
+    # the next tick -- every inter-token gap is >= 1 (no 0-gap pairs that
+    # would deflate the replay benchmark's p50/p99)
+    for r in (first, second):
+        assert r.token_ticks[0] == r.admit_tick
+        assert (np.diff(r.token_ticks) >= 1).all()
 
 
 @pytest.mark.serve
@@ -520,11 +566,35 @@ def test_scheduler_fcfs_head_of_line():
         sched.submit(Request(rid=rid, tokens=np.zeros(4, np.int32),
                              max_new_tokens=2, arrival=0))
     # head request unaffordable: nothing admits behind it
-    assert sched.try_admit(0, lambda r: r.rid != 0) == []
-    admitted = sched.try_admit(0, lambda r: True)
+    assert sched.try_admit(0, lambda r, s: r.rid != 0) == []
+    admitted = sched.try_admit(0, lambda r, s: True)
     assert [st.req.rid for st in admitted] == [0, 1]  # slots exhausted
     sched.retire(admitted[0].slot, 5, "eos")
-    assert [st.req.rid for st in sched.try_admit(5, lambda r: True)] == [2]
+    assert [st.req.rid for st in sched.try_admit(5, lambda r, s: True)] == [2]
+
+
+@pytest.mark.serve
+def test_scheduler_reserve_inside_admission_loop():
+    """The over-admission race: two heads that each fit individually but
+    not together must not both admit in one try_admit call -- the reserve
+    callback's grant must be visible to the next head's check."""
+    from repro.serve.scheduler import Request, Scheduler
+
+    sched = Scheduler(max_slots=2)
+    for rid in range(2):
+        sched.submit(Request(rid=rid, tokens=np.zeros(4, np.int32),
+                             max_new_tokens=2, arrival=0))
+    budget = {"free": 6}  # pool of 6 pages, each request needs 5
+
+    def reserve(req, slot):
+        if budget["free"] < 5:
+            return False
+        budget["free"] -= 5
+        return True
+
+    admitted = sched.try_admit(0, reserve)
+    assert [st.req.rid for st in admitted] == [0]  # second head must wait
+    assert budget["free"] == 1  # exactly one reservation landed
 
 
 @pytest.mark.serve
@@ -535,6 +605,8 @@ def test_page_allocator_reuse_and_double_free():
     a = alloc.alloc(3)
     assert alloc.alloc(2) is None  # only 1 left: all-or-nothing
     alloc.free(a)
+    assert alloc.free_pages == 4
+    assert alloc.alloc(0) == []  # -0 slice pitfall: must not drain the pool
     assert alloc.free_pages == 4
     b = alloc.alloc(4)
     assert sorted(b) == [1, 2, 3, 4] and 0 not in b  # trash page never given
